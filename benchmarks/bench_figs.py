@@ -1,0 +1,91 @@
+"""Figure benchmarks: Fig. 3 (unconditional, three settings, NFE 5-10) and
+Fig. 4 (guided sampling with classifier-free guidance at s = 1.5/4/8, using
+the paper's own convergence-error-to-999-step-DDIM metric)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (SETTINGS, conv_err, emit, reference_x0, setting_model,
+                     timed, x_T_for)
+from repro.core import DDIM, DPMSolverPP, Grid, UniPC
+from repro.diffusion import MixtureDPM
+
+
+def _data_model(schedule, eps):
+    def f(x, t):
+        a, s = float(schedule.alpha(t)), float(schedule.sigma(t))
+        return (np.asarray(x, np.float64) - s * eps(x, t)) / a
+    return f
+
+
+def fig3_unconditional():
+    for setting in SETTINGS:
+        sched, eps = setting_model(setting)
+        x_T = x_T_for(30)
+        ref = reference_x0(eps, sched, x_T)
+        dm = _data_model(sched, eps)
+        for nfe in range(5, 11):
+            for name, run in {
+                "ddim": lambda g: DDIM(eps, g, prediction="noise").sample(x_T),
+                "dpmpp3m": lambda g: DPMSolverPP(dm, g, order=3).sample(x_T),
+                "unipc3": lambda g: UniPC(dm, g, order=3, prediction="data")
+                    .sample_pc(x_T, use_corrector=True),
+            }.items():
+                g = Grid.build(sched, nfe)
+                x0, us = timed(lambda run=run, g=g: run(g))
+                emit(f"fig3/{setting}/{name}/nfe{nfe}", us,
+                     f"{conv_err(x0, ref)*1e3:.3f}")
+
+
+def fig4_guided():
+    """CFG: eps_guided = (1+s) eps_cond - s eps_uncond; conditional model =
+    mixture component 0; unconditional = full mixture."""
+    sched, _ = setting_model("cifar10")
+    mix = SETTINGS["cifar10"][1]
+    eps_c = mix.component_eps_model(0)
+    eps_u = mix.eps_model
+    for scale in (1.5, 4.0, 8.0):
+        def eps_g(x, t, s=scale):
+            return (1 + s) * eps_c(x, t) - s * eps_u(x, t)
+
+        x_T = x_T_for(40)
+        ref = reference_x0(eps_g, sched, x_T)
+        dm = _data_model(sched, eps_g)
+        for nfe in range(5, 11):
+            for name, run in {
+                "ddim": lambda g: DDIM(eps_g, g, prediction="noise").sample(x_T),
+                "dpmpp2m": lambda g: DPMSolverPP(dm, g, order=2).sample(x_T),
+                "unipc2-bh2": lambda g: UniPC(dm, g, order=2,
+                                              prediction="data", variant="bh2")
+                    .sample_pc(x_T, use_corrector=True),
+                "unipc2-bh1": lambda g: UniPC(dm, g, order=2,
+                                              prediction="data", variant="bh1")
+                    .sample_pc(x_T, use_corrector=True),
+            }.items():
+                g = Grid.build(sched, nfe)
+                x0, us = timed(lambda run=run, g=g: run(g))
+                emit(f"fig4/s{scale}/{name}/nfe{nfe}", us,
+                     f"{conv_err(x0, ref)*1e3:.3f}")
+
+
+def free_oracle_study():
+    """Beyond-paper (paper §4.2 future work): free secant-based estimate of
+    eps(x_c) vs plain UniC vs the (extra-NFE) oracle."""
+    from repro.core import DPMSolverPP
+    from repro.core.solver import CorrectorConfig
+    from repro.core.solver import Grid as _G
+
+    sched, eps = setting_model("cifar10")
+    x_T = x_T_for(50)
+    ref = reference_x0(eps, sched, x_T)
+    dm = _data_model(sched, eps)
+    for nfe in (8, 10, 16):
+        for mode, kw in {"plain": {}, "free-g0.5": dict(free_oracle=0.5),
+                         "free-g1.0": dict(free_oracle=1.0),
+                         "oracle": dict(oracle=True)}.items():
+            s = DPMSolverPP(dm, Grid.build(sched, nfe), order=3)
+            x0, us = timed(lambda s=s, kw=kw: s.sample(
+                x_T, corrector=CorrectorConfig(order=3, variant="bh2", **kw)))
+            emit(f"free_oracle/{mode}/nfe{nfe}", us,
+                 f"{conv_err(x0, ref)*1e3:.3f}")

@@ -1,0 +1,65 @@
+"""Kernel-level benchmarks — dry-run style (no TPU): compare the HBM-traffic
+schedule of the fused Pallas path vs the naive op-chain by lowering both and
+counting bytes with the trip-scaled HLO accounting. `derived` = traffic ratio
+(chain / fused target model): the structural win the kernel encodes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timed
+from repro.analysis.hlo import analyze
+
+
+def _chain_update(terms, weights):
+    """Reference-implementation style: K sequential axpy ops."""
+    out = weights[0] * terms[0]
+    for k in range(1, terms.shape[0]):
+        out = out + weights[k] * terms[k]
+    return out
+
+
+def kernel_unipc_update():
+    for K, n in ((4, 1 << 20), (5, 1 << 22), (7, 1 << 22)):
+        terms = jax.ShapeDtypeStruct((K, n), jnp.bfloat16)
+        weights = jax.ShapeDtypeStruct((K,), jnp.float32)
+        chain = jax.jit(_chain_update).lower(terms, weights).compile()
+        chain_bytes = analyze(chain.as_text(), 1)["hbm_bytes"]
+        # fused single-pass model: read K terms once, write once
+        ideal = (K + 1) * n * 2
+        _, us = timed(lambda: None)
+        emit(f"kernels/unipc_update/K{K}_n{n}", 0.0,
+             f"chain_bytes={chain_bytes:.3e};single_pass={ideal:.3e};"
+             f"ratio={chain_bytes/ideal:.2f}")
+
+
+def kernel_flash_attention():
+    B, H, S, D = 1, 8, 2048, 64
+    q = jax.ShapeDtypeStruct((B, S, H, D), jnp.bfloat16)
+
+    def naive(q):
+        from repro.models.layers import sdpa
+        return sdpa(q, q, q, causal=True)
+
+    comp = jax.jit(naive).lower(q).compile()
+    naive_bytes = analyze(comp.as_text(), 1)["hbm_bytes"]
+    # flash model: read q,k,v once + write o once (blockwise, no S^2 tensor)
+    flash = 4 * B * S * H * D * 2
+    emit(f"kernels/flash_attention/S{S}", 0.0,
+         f"naive_bytes={naive_bytes:.3e};flash_model={flash:.3e};"
+         f"ratio={naive_bytes/flash:.1f}")
+
+
+def kernel_correctness_timing():
+    """Wall-clock of the interpret-mode kernels vs oracles (correctness-path
+    cost only; TPU timings require hardware)."""
+    from repro.kernels.unipc_update import ops as uops, ref as uref
+    t = jax.random.normal(jax.random.PRNGKey(0), (5, 4096))
+    w = jax.random.normal(jax.random.PRNGKey(1), (5,))
+    _, us_ref = timed(lambda: jax.block_until_ready(
+        uref.weighted_combine(t, w)))
+    _, us_pal = timed(lambda: jax.block_until_ready(
+        uops.weighted_combine(t, w, force_pallas=True)))
+    emit("kernels/unipc_update/interpret_vs_ref", us_pal,
+         f"ref_us={us_ref:.1f}")

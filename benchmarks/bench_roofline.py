@@ -1,0 +1,31 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json):
+one row per (arch x shape x mesh) with the three terms, the bottleneck, and
+the useful-compute ratio. `derived` = the dominant term in seconds."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN_DIR = Path("results/dryrun")
+
+
+def roofline_table():
+    if not DRYRUN_DIR.exists():
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --arch all "
+             "--shape all --mesh single multi --out results/dryrun")
+        return
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        r = rec["roofline"]
+        emit(
+            f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+            r["compute_s"] * 1e6,
+            f"bottleneck={r['bottleneck']};compute_s={r['compute_s']:.3e};"
+            f"memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};"
+            f"useful_ratio={r['useful_ratio']:.3f};mfu={r.get('mfu', 0):.4f}",
+        )

@@ -1,0 +1,132 @@
+"""One benchmark per paper table (Tables 1-5) — solver-quality comparisons at
+fixed NFE budgets, quality = convergence error to the 999-step DDIM reference
+(paper Fig. 4c metric; see common.py for why not FID offline)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (conv_err, emit, reference_x0, setting_model, timed,
+                     x_T_for)
+from repro.core import (DDIM, DEIS, DPMSolverPP, DPMSolverSinglestep, PNDM,
+                        Grid, UniPC)
+from repro.core.solver import CorrectorConfig
+
+NFES = (5, 6, 8, 10)
+
+
+def _data_model(schedule, eps):
+    def f(x, t):
+        a, s = float(schedule.alpha(t)), float(schedule.sigma(t))
+        return (np.asarray(x, np.float64) - s * eps(x, t)) / a
+    return f
+
+
+def table1_bh_ablation():
+    """Table 1: B1(h) vs B2(h) vs DPM-Solver++(3M) on three settings."""
+    for setting in ("cifar10", "lsun_bedroom", "ffhq"):
+        sched, eps = setting_model(setting)
+        x_T = x_T_for(1)
+        ref = reference_x0(eps, sched, x_T)
+        dm = _data_model(sched, eps)
+        for nfe in NFES:
+            g = Grid.build(sched, nfe)
+            s = DPMSolverPP(dm, g, order=3)
+            x0, us = timed(lambda s=s: s.sample(x_T))
+            emit(f"table1/{setting}/dpmpp3m/nfe{nfe}", us,
+                 f"{conv_err(x0, ref)*1e3:.3f}")
+            for variant in ("bh1", "bh2"):
+                u = UniPC(dm, Grid.build(sched, nfe), order=3,
+                          prediction="data", variant=variant)
+                x0, us = timed(lambda u=u: u.sample_pc(x_T, use_corrector=True))
+                emit(f"table1/{setting}/unipc-{variant}/nfe{nfe}", us,
+                     f"{conv_err(x0, ref)*1e3:.3f}")
+
+
+def table2_unic_any_solver():
+    """Table 2: UniC bolted onto DDIM / DPM-Solver++(2M/3S/3M)."""
+    sched, eps = setting_model("cifar10")
+    x_T = x_T_for(2)
+    ref = reference_x0(eps, sched, x_T)
+    dm = _data_model(sched, eps)
+    solvers = {
+        "ddim": (lambda g: DDIM(eps, g, prediction="noise"), 1),
+        "dpmpp2m": (lambda g: DPMSolverPP(dm, g, order=2), 2),
+        "dpmpp3s": (lambda g: DPMSolverSinglestep(dm, g, sched, order=3,
+                                                  prediction="data"), 3),
+        "dpmpp3m": (lambda g: DPMSolverPP(dm, g, order=3), 3),
+    }
+    for name, (mk, order) in solvers.items():
+        for nfe in NFES:
+            steps = nfe if name != "dpmpp3s" else max(2, nfe // 3)
+            for unic in (False, True):
+                s = mk(Grid.build(sched, steps))
+                corr = CorrectorConfig(order=order, variant="bh2") if unic else None
+                x0, us = timed(lambda s=s, c=corr: s.sample(x_T, corrector=c))
+                tag = "+unic" if unic else ""
+                emit(f"table2/{name}{tag}/nfe{nfe}", us,
+                     f"{conv_err(x0, ref)*1e3:.3f}")
+
+
+def table3_oracle():
+    """Table 3: UniC vs UniC-oracle on DPM-Solver++ (lsun/ffhq settings)."""
+    for setting in ("lsun_bedroom", "ffhq"):
+        sched, eps = setting_model(setting)
+        x_T = x_T_for(3)
+        ref = reference_x0(eps, sched, x_T)
+        dm = _data_model(sched, eps)
+        for nfe in NFES:
+            for mode in ("plain", "unic", "unic-oracle"):
+                s = DPMSolverPP(dm, Grid.build(sched, nfe), order=3)
+                corr = None if mode == "plain" else CorrectorConfig(
+                    order=3, variant="bh2", oracle=(mode == "unic-oracle"))
+                x0, us = timed(lambda s=s, c=corr: s.sample(x_T, corrector=c))
+                emit(f"table3/{setting}/{mode}/steps{nfe}", us,
+                     f"{conv_err(x0, ref)*1e3:.3f}")
+
+
+def table4_order_schedules():
+    """Table 4: customized order schedules at NFE 6 and 7."""
+    sched, eps = setting_model("cifar10")
+    x_T = x_T_for(4)
+    ref = reference_x0(eps, sched, x_T)
+    dm = _data_model(sched, eps)
+    plans = {
+        6: ([1, 2, 3, 3, 2, 1], [1, 2, 3, 4, 3, 2], [1, 2, 3, 4, 4, 3],
+            [1, 2, 3, 4, 5, 6]),
+        7: ([1, 2, 3, 3, 3, 2, 1], [1, 2, 2, 3, 3, 3, 4],
+            [1, 2, 3, 4, 3, 2, 1], [1, 2, 3, 4, 5, 6, 7]),
+    }
+    for nfe, schedules in plans.items():
+        for plan in schedules:
+            u = UniPC(dm, Grid.build(sched, nfe), order=max(plan),
+                      prediction="data", order_schedule=list(plan))
+            x0, us = timed(lambda u=u: u.sample_pc(x_T, use_corrector=True))
+            tag = "".join(map(str, plan))
+            emit(f"table4/nfe{nfe}/sched{tag}", us,
+                 f"{conv_err(x0, ref)*1e3:.3f}")
+
+
+def table5_more_nfe():
+    """Table 5: every baseline vs UniPC at NFE 10-25 (guided setting proxy)."""
+    sched, eps = setting_model("cifar10")
+    x_T = x_T_for(5)
+    ref = reference_x0(eps, sched, x_T)
+    dm = _data_model(sched, eps)
+    for nfe in (10, 15, 20, 25):
+        runs = {
+            "ddim": lambda g: DDIM(eps, g, prediction="noise").sample(x_T),
+            "dpm-solver3s": lambda g: DPMSolverSinglestep(
+                eps, Grid.build(sched, max(2, nfe // 3)), sched, order=3,
+                prediction="noise").sample(x_T),
+            "pndm": lambda g: PNDM(eps, g).sample(x_T),
+            "deis": lambda g: DEIS(eps, g, sched, order=3).sample(x_T),
+            "dpmpp3m": lambda g: DPMSolverPP(dm, g, order=3).sample(x_T),
+            "unipc3": lambda g: UniPC(dm, g, order=3, prediction="data")
+                .sample_pc(x_T, use_corrector=True),
+        }
+        for name, fn in runs.items():
+            g = Grid.build(sched, nfe)
+            x0, us = timed(lambda fn=fn, g=g: fn(g))
+            emit(f"table5/{name}/nfe{nfe}", us,
+                 f"{conv_err(x0, ref)*1e3:.3f}")

@@ -1,0 +1,69 @@
+"""Shared benchmark harness utilities.
+
+Every bench prints CSV rows `name,us_per_call,derived` where `derived` is the
+bench's quality metric (convergence error, FID-surrogate, ratio, ...).
+Offline container => no CIFAR/ImageNet checkpoints; quality metrics follow the
+paper's own Fig. 4c protocol: l2 distance to a 999-step DDIM reference
+trajectory, reported as 'err*1e3' (lower = better, ordering comparable to the
+paper's FID orderings).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import DDIM, Grid  # noqa: E402
+from repro.diffusion import MixtureDPM, VPCosine, VPLinear  # noqa: E402
+
+
+def timed(fn, repeat=3):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def reference_x0(model, schedule, x_T, steps=999):
+    """The paper's ground-truth protocol: a fine-grid DDIM trajectory."""
+    g = Grid.build(schedule, steps)
+    return np.asarray(DDIM(model, g, prediction="noise").sample(x_T))
+
+
+def conv_err(x0, ref):
+    """l2 distance / sqrt(D) — the paper's convergence-error metric."""
+    x0 = np.asarray(x0)
+    return float(np.linalg.norm(x0 - ref) / np.sqrt(ref.size))
+
+
+# three 'dataset' stand-ins = three schedule/data settings (CIFAR/LSUN/FFHQ
+# analogues for Fig. 3): different noise schedules + data spreads
+SETTINGS = {
+    "cifar10": (VPLinear(), MixtureDPM(VPLinear())),
+    "lsun_bedroom": (VPLinear(beta_0=0.05, beta_1=14.0),
+                     MixtureDPM(VPLinear(beta_0=0.05, beta_1=14.0),
+                                mus=(-0.8, 0.5, 1.5), ss=(0.25, 0.4, 0.3),
+                                ws=(0.3, 0.4, 0.3))),
+    "ffhq": (VPCosine(), MixtureDPM(VPCosine(), mus=(-1.2, 0.9),
+                                    ss=(0.45, 0.35), ws=(0.5, 0.5))),
+}
+
+
+def setting_model(name):
+    sched, dpm = SETTINGS[name]
+    return sched, dpm.eps_model
+
+
+def x_T_for(seed=0, n=256):
+    return np.random.default_rng(seed).normal(size=(n,))

@@ -1,0 +1,43 @@
+"""Benchmark harness entry point — one function per paper table/figure plus
+kernel and roofline benches. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig3,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from . import bench_figs, bench_kernels, bench_roofline, bench_tables
+
+    benches = {
+        "table1": bench_tables.table1_bh_ablation,
+        "table2": bench_tables.table2_unic_any_solver,
+        "table3": bench_tables.table3_oracle,
+        "table4": bench_tables.table4_order_schedules,
+        "table5": bench_tables.table5_more_nfe,
+        "fig3": bench_figs.fig3_unconditional,
+        "fig4": bench_figs.fig4_guided,
+        "free_oracle": bench_figs.free_oracle_study,
+        "kernels": lambda: (bench_kernels.kernel_unipc_update(),
+                            bench_kernels.kernel_flash_attention(),
+                            bench_kernels.kernel_correctness_timing()),
+        "roofline": bench_roofline.roofline_table,
+    }
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(benches))
+    args = ap.parse_args()
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    for name in selected:
+        benches[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: train a tiny DiT on synthetic latents, then sample it with
+UniPC at 8 NFE and compare against DDIM using the paper's convergence-error
+metric. Runs on CPU in ~2-3 minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import DDIM, Grid, UniPC
+from repro.diffusion import VPLinear, wrap_model
+from repro.launch.train import train
+from repro.models import api
+
+
+def main():
+    print("=== 1. train a reduced DiT for 80 steps (diffusion objective) ===")
+    params, hist = train("dit-cifar", reduced=True, objective="diffusion",
+                         steps=80, batch=16, seq=32, lr=2e-3, log_every=20)
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    print("=== 2. sample with DDIM vs UniPC-3 at 8 NFE ===")
+    cfg = get_config("dit-cifar").reduced()
+    sched = VPLinear()
+    net = api.eps_network(cfg)
+    extra = {"class_ids": jnp.zeros((4,), jnp.int32)}
+    eps = jax.jit(lambda x, t: net(params, x, jnp.asarray(t, jnp.float32),
+                                   extra))
+    model = wrap_model(sched, eps, "data")
+    x_T = jax.random.normal(jax.random.PRNGKey(0),
+                            (4, cfg.patch_tokens, cfg.latent_dim))
+    ref = np.asarray(DDIM(model, Grid.build(sched, 200),
+                          prediction="data").sample(x_T))
+    D = np.sqrt(ref.size)
+    for name, run in {
+        "ddim": lambda: DDIM(model, Grid.build(sched, 8),
+                             prediction="data").sample(x_T),
+        "unipc-3": lambda: UniPC(model, Grid.build(sched, 8), order=3,
+                                 prediction="data").sample_pc(
+                                     x_T, use_corrector=True),
+    }.items():
+        t0 = time.time()
+        x0 = np.asarray(run())
+        err = np.linalg.norm(x0 - ref) / D
+        print(f"{name:10s} NFE=8  conv-err={err:.5f}  wall={time.time()-t0:.1f}s")
+    print("UniPC should show a clearly lower convergence error.")
+
+
+if __name__ == "__main__":
+    main()

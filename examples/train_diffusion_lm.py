@@ -1,0 +1,82 @@
+"""End-to-end driver: train a diffusion language model (the UniPC framework's
+training workload) for a few hundred steps, checkpoint it, reload, and sample
+token sequences with UniPC (non-autoregressive denoising + rounding).
+
+Reduced scale by default (CPU, ~5 min with --steps 200). On real hardware use
+--full --arch olmo-1b for a ~1B-parameter run with the same code path; the
+dry-run (repro.launch.dryrun) proves the full configs shard on the 256/512-chip
+meshes.
+
+    PYTHONPATH=src python examples/train_diffusion_lm.py --steps 200
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.registry import get_config
+from repro.core import make_unipc_schedule, unipc_sample_scan
+from repro.diffusion import VPLinear
+from repro.launch.train import train
+from repro.models import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--nfe", type=int, default=10)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="results/diffusion_lm_ckpt")
+    args = ap.parse_args()
+
+    print(f"=== training diffusion-LM on {args.arch} "
+          f"({'full' if args.full else 'reduced'}) ===")
+    params, hist = train(args.arch, reduced=not args.full,
+                         objective="diffusion", steps=args.steps,
+                         batch=args.batch, seq=args.seq, lr=1e-3,
+                         ckpt_dir=args.ckpt_dir, log_every=20)
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    print("=== reload checkpoint ===")
+    tree, step = ckpt.restore(args.ckpt_dir)
+    params = tree["params"]
+    print(f"restored step={step}")
+
+    print(f"=== UniPC sampling ({args.nfe} NFE, production scan path) ===")
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    sched = VPLinear()
+    net = api.eps_network(cfg)
+    B, S = 4, args.seq
+
+    def data_model(x, t):
+        a, sg = sched.alpha_sigma_jax(jnp.asarray(t, jnp.float32))
+        return (x - sg * net(params, x, t, {})) / a
+
+    us = make_unipc_schedule(sched, args.nfe, order=3, prediction="data",
+                             variant="bh2")
+    x_T = jax.random.normal(jax.random.PRNGKey(0), (B, S, cfg.latent_dim))
+    x0 = unipc_sample_scan(jax.jit(data_model), x_T, us)
+    # rounding: nearest token latent (Diffusion-LM decoding)
+    logits = jnp.einsum("bsl,vl->bsv", x0,
+                        params["token_latents"].astype(jnp.float32))
+    tokens = np.asarray(jnp.argmax(logits, -1))
+    print("sampled token grid (first 2 rows, 16 cols):")
+    print(tokens[:2, :16])
+    uniq = len(np.unique(tokens))
+    print(f"distinct tokens: {uniq} / vocab {cfg.vocab_size} — "
+          f"finite: {np.isfinite(np.asarray(x0)).all()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""UniPC-JAX: unified predictor-corrector diffusion framework (see README)."""

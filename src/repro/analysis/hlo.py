@@ -1,0 +1,235 @@
+"""HLO-text analysis: FLOP / HBM-byte / collective-byte accounting with
+while-loop trip-count scaling.
+
+Why not cost_analysis()? XLA's cost analysis counts a while-loop body ONCE —
+with scan-over-layers (this repo's standard structure) that under-counts a
+95-layer model by 95x. We therefore parse the optimized HLO ourselves:
+
+1. two-pass per-computation symbol table (instruction name -> result shape),
+2. call-graph walk (while body=..., fusion calls=..., call to=...) propagating
+   execution multipliers from `backend_config={"known_trip_count":{"n":N}}`
+   (scan always emits known trip counts),
+3. totals:
+   - flops: dot ops (2 * prod(result) * contracted size), anywhere incl.
+     inside fused computations,
+   - hbm bytes: per top-level (non-fused) instruction, result bytes +
+     operand bytes — a standard post-fusion traffic proxy (each fusion reads
+     its operands from HBM and writes its result once),
+   - collective wire bytes per device with op-appropriate (n-1)/n factors.
+
+All numbers are whole-program; divide by device count for per-chip terms
+(collectives are already per-device wire traffic).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+"
+    r"((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_GROUPS_ITER_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_BOOKKEEPING = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str):
+    elems, nbytes = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    elems: int
+    nbytes: int
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)
+
+
+def parse_computations(hlo_text: str):
+    comps = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, type_str, op, rest = mi.groups()
+            elems, nbytes = _shape_elems_bytes(type_str)
+            ins = Instr(name, type_str, op, rest, elems, nbytes)
+            cur.instrs.append(ins)
+            cur.symbols[name] = ins
+    return comps, entry
+
+
+def _multipliers(comps: dict, entry=None):
+    """Execution multiplier + fused flag per computation via the call graph."""
+    mult = defaultdict(float)
+    fused = {}
+    if entry is None:
+        roots = [n for n in comps if n.startswith("main")] or list(comps)[:1]
+        entry = roots[0]
+    mult[entry] = 1.0
+    fused[entry] = False
+    changed = True
+    it = 0
+    while changed and it < 50:
+        changed, it = False, it + 1
+        for cname, comp in comps.items():
+            if cname not in mult:
+                continue
+            base = mult[cname]
+            for ins in comp.instrs:
+                targets = []
+                if ins.op == "while":
+                    trips = 1
+                    mt = _TRIP_RE.search(ins.rest)
+                    if mt:
+                        trips = int(mt.group(1))
+                    for pat in (_BODY_RE, _COND_RE):
+                        mm = pat.search(ins.rest)
+                        if mm:
+                            targets.append((mm.group(1), trips, False))
+                elif ins.op == "fusion":
+                    mm = _CALLS_RE.search(ins.rest)
+                    if mm:
+                        targets.append((mm.group(1), 1, True))
+                else:
+                    for pat in (_CALLS_RE, _TO_RE):
+                        mm = pat.search(ins.rest)
+                        if mm:
+                            targets.append((mm.group(1), 1, fused.get(cname, False)))
+                for tgt, k, is_fused in targets:
+                    if tgt not in comps:
+                        continue
+                    newm = base * k
+                    if mult.get(tgt, 0.0) < newm:
+                        mult[tgt] = newm
+                        fused[tgt] = is_fused
+                        changed = True
+                    elif tgt not in fused:
+                        fused[tgt] = is_fused
+    return mult, fused
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    ops = _OPERAND_RE.findall(ins.rest)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contract = 1
+    if ops and mc:
+        lhs = comp.symbols.get(ops[0])
+        if lhs is not None:
+            dims_m = _SHAPE_RE.search(lhs.type_str)
+            if dims_m:
+                dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                for ci in mc.group(1).split(","):
+                    if ci:
+                        contract *= dims[int(ci)]
+    return 2.0 * ins.elems * contract
+
+
+def _collective_wire(ins: Instr, default_n: int) -> float:
+    n = default_n
+    m = _GROUPS_ITER_RE.search(ins.rest)
+    if m:
+        n = max(2, int(m.group(2)))
+    else:
+        m = _GROUPS_LIST_RE.search(ins.rest)
+        if m:
+            n = max(2, len([x for x in m.group(1).split(",") if x.strip()]))
+    b = ins.nbytes
+    op = ins.op.replace("-start", "")
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n * b
+    if op == "all-gather":
+        return (n - 1) / n * b
+    if op == "reduce-scatter":
+        return (n - 1) * b
+    if op == "all-to-all":
+        return (n - 1) / n * b
+    return float(b)  # collective-permute
+
+
+def analyze(hlo_text: str, num_devices: int) -> dict:
+    comps, entry = parse_computations(hlo_text)
+    mult, fused = _multipliers(comps, entry)
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1.0)
+        is_fused = fused.get(cname, False)
+        for ins in comp.instrs:
+            op = ins.op.replace("-start", "").replace("-done", "")
+            if ins.op == "dot" or ins.op == "convolution":
+                flops += _dot_flops(comp, ins) * m
+            if is_fused:
+                continue
+            if op in _COLLECTIVES and not ins.op.endswith("-done"):
+                coll[op] += _collective_wire(ins, num_devices) * m
+            if op in _BOOKKEEPING or op in ("while", "call", "conditional"):
+                continue
+            # traffic proxy: write the result once, read operands once
+            operand_bytes = 0
+            for oname in _OPERAND_RE.findall(ins.rest):
+                src = comp.symbols.get(oname)
+                if src is not None:
+                    operand_bytes += src.nbytes
+            hbm += (ins.nbytes + operand_bytes) * m
+    coll["_total"] = sum(v for k, v in coll.items() if not k.startswith("_"))
+    return {"flops": flops, "hbm_bytes": hbm, "collectives": dict(coll)}
+
+
+def collective_bytes(hlo_text: str, num_devices: int) -> dict:
+    return analyze(hlo_text, num_devices)["collectives"]

@@ -1,0 +1,125 @@
+"""Three-term roofline model from compiled dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s
+per ICI link (DESIGN/system prompt constants).
+
+IMPORTANT unit note: the dry-run parses the *post-SPMD-partitioning* HLO, whose
+tensor shapes are already per-device shards. So `flops` / `hbm_bytes` /
+`collective_bytes` here are PER-CHIP quantities and the terms are simply
+
+    compute_s    = flops_per_chip / PEAK_FLOPS
+    memory_s     = hbm_bytes_per_chip / HBM_BW
+    collective_s = wire_bytes_per_chip / LINK_BW
+
+(equivalently HLO_FLOPs_total / (chips * peak) — the same number, since the
+partitioned module is what each chip executes). MODEL_FLOPS is whole-model,
+so the useful-compute ratio compares it against flops * chips.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+
+@dataclass
+class Roofline:
+    flops: float             # per chip (post-SPMD HLO)
+    hbm_bytes: float          # per chip
+    collective_bytes: float   # per chip wire traffic
+    chips: int
+    model_flops: float = 0.0  # whole model (6ND / 2ND)
+
+    @property
+    def compute_s(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self):
+        """Optimistic (fully-overlapped) step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self):
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self):
+        """Model-FLOPs utilization at the optimistic step time."""
+        denom = self.step_time_s * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self):
+        return dict(
+            compute_s=self.compute_s, memory_s=self.memory_s,
+            collective_s=self.collective_s, bottleneck=self.bottleneck,
+            flops_per_chip=self.flops, hbm_bytes_per_chip=self.hbm_bytes,
+            collective_bytes_per_chip=self.collective_bytes,
+            model_flops=self.model_flops,
+            useful_ratio=self.useful_flops_ratio,
+            mfu=self.mfu,
+        )
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6 * N_active * D (dense) with MoE using active params only."""
+    return 6.0 * active_params(cfg) * tokens
+
+
+def model_flops_decode(cfg, tokens: int) -> float:
+    return 2.0 * active_params(cfg) * tokens
+
+
+def active_params(cfg) -> float:
+    """Parameter count with only the routed-active experts counted."""
+    d, f, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.num_layers
+    emb = V * d
+    # ssm/hybrid/vlm/audio implementations reuse the embedding as the output
+    # head (no separate lm_head); dense/moe honor cfg.tie_embeddings
+    tied = cfg.tie_embeddings or cfg.family in ("ssm", "hybrid", "vlm", "audio")
+    n = emb if tied else 2 * emb
+    if cfg.family in ("dense", "moe", "vlm"):
+        hd = cfg.head_dim * (cfg.num_heads + 2 * cfg.num_kv_heads) * d \
+            + cfg.num_heads * cfg.head_dim * d
+        if cfg.num_experts:
+            fe = cfg.moe_d_ff or f
+            mlp = 3 * d * fe * cfg.experts_per_token + d * cfg.num_experts
+        else:
+            mlp = 3 * d * f if cfg.act == "swiglu" else 2 * d * f
+        per_layer = hd + mlp
+        n += L * per_layer
+        if cfg.family == "vlm":
+            n += d * d  # projector
+    elif cfg.family == "audio":
+        attn = 4 * d * d
+        mlp = 2 * d * f
+        n += cfg.encoder_layers * (attn + mlp) + L * (2 * attn + mlp)
+    elif cfg.family in ("ssm", "hybrid"):
+        di = cfg.ssm_d_inner
+        G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+        per = d * (2 * di + 2 * G * N + H) + di * d
+        n += L * per
+        if cfg.family == "hybrid":
+            n += 4 * d * d + 3 * d * f  # one shared attention block
+    elif cfg.family == "dit":
+        n += L * (4 * d * d + 2 * d * cfg.d_ff + 6 * d * d)
+    return float(n)

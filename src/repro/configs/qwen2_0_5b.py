@@ -1,0 +1,16 @@
+"""qwen2-0.5b [dense]: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936,
+QKV bias, tied embeddings. [arXiv:2407.10671]
+
+14 heads / kv=2 do not divide a 16-way model axis -> head dims replicated on
+'model' (DESIGN.md §6); d_ff=4864=16*304 and vocab shard fine."""
+
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen2-0.5b", family="dense", source="arXiv:2407.10671",
+        num_layers=24, d_model=896, num_heads=14, num_kv_heads=2,
+        d_ff=4864, vocab_size=151936, qkv_bias=True, tie_embeddings=True,
+        rope_theta=1e6, latent_dim=64,
+    )

@@ -1,0 +1,16 @@
+"""whisper-small [audio]: enc-dec, 12 encoder + 12 decoder layers,
+d_model=768 12H d_ff=3072 vocab=51865; conv/mel frontend STUBBED — the
+input_specs provide 1500 precomputed frame embeddings. [arXiv:2212.04356]
+
+long_500k is SKIPPED for this arch (enc-dec full cross-attention; DESIGN.md §3)."""
+
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="whisper-small", family="audio", source="arXiv:2212.04356",
+        num_layers=12, encoder_layers=12, d_model=768, num_heads=12,
+        num_kv_heads=12, d_ff=3072, vocab_size=51865, act="gelu",
+        norm="layernorm", audio_frames=1500, latent_dim=64,
+    )

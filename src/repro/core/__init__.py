@@ -1,0 +1,20 @@
+"""UniPC core: unified predictor-corrector solvers + every compared baseline."""
+
+from .coeffs import (
+    UniPCSchedule,
+    bh_value,
+    build_unipc_schedule,
+    default_order_schedule,
+    unipc_weights,
+)
+from .solver import CorrectorConfig, Grid, GridSolver, History, unified_step
+from .unipc import UniPC, UniPCSinglestep, make_unipc_schedule, unipc_sample_scan
+from .baselines import DDIM, DEIS, DPMSolverPP, DPMSolverSinglestep, PNDM
+
+__all__ = [
+    "UniPC", "UniPCSinglestep", "UniPCSchedule", "unipc_sample_scan",
+    "make_unipc_schedule", "build_unipc_schedule", "default_order_schedule",
+    "unipc_weights", "bh_value", "unified_step",
+    "Grid", "GridSolver", "History", "CorrectorConfig",
+    "DDIM", "DPMSolverPP", "DPMSolverSinglestep", "PNDM", "DEIS",
+]

@@ -1,0 +1,216 @@
+"""UniPC coefficient computation (host-side, float64).
+
+Everything here depends only on the timestep grid (through lambda = log(alpha/sigma))
+and the solver hyper-parameters — never on data. We therefore compute all
+coefficients in numpy float64 at schedule-build time and feed the sampling
+`lax.scan` a static per-step coefficient table. This is both numerically safer
+(the phi/psi recursions cancel catastrophically in float32) and faster on TPU
+(no per-step host sync, no tiny traced linear solves).
+
+Unified weight convention
+-------------------------
+Every solver update in this repo is expressed as
+
+    noise pred: x_t = (a_t/a_s) x_s - s_t (e^h - 1) m0 - s_t * sum_m w_m D_m
+    data  pred: x_t = (s_t/s_s) x_s + a_t (1 - e^{-h}) m0 + a_t * sum_m w_m D_m
+
+with D_m = model(point_m) - m0.  For UniPC, w_m = B(h) * a_m / r_m where
+a = R^{-1} phi / B (Thm 3.1); for UniPC_v, w_m = (sum_n h varphi_{n+1}(h) A[n,m]) / r_m
+with A = C_p^{-1} (App. C). Both reduce to a single per-difference weight vector,
+which is what `unipc_weights` returns.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .phi import varphi, psi
+
+BH_VARIANTS = ("bh1", "bh2", "vary")
+PREDICTION_TYPES = ("noise", "data")
+
+
+def bh_value(h: float, variant: str, prediction: str) -> float:
+    """B(h), sign-normalized so B(h) = h + O(h^2) for BOTH prediction types.
+
+    The official implementation works in hh = -h for data prediction with a
+    matching sign flip in its rhs vector; our rhs (`_rhs_vector`, psi on +h)
+    keeps the +h convention, so B must too — for exact solves the sign cancels
+    anyway, but the degenerate a_1 = 0.5 shortcut (App. F) depends on it.
+    B1(h) = h; B2(h) = e^h - 1 (noise) / 1 - e^{-h} (data)."""
+    if variant == "bh1":
+        return h
+    if variant == "bh2":
+        return math.expm1(h) if prediction == "noise" else -math.expm1(-h)
+    raise ValueError(f"no explicit B(h) for variant {variant!r}")
+
+
+def _rhs_vector(q: int, h: float, prediction: str) -> np.ndarray:
+    """b_n = h * n! * varphi_{n+1}(h)  (noise)  or  h * n! * psi_{n+1}(h)  (data),
+    i.e. phi_n / h^{n-1}: we divide row n of R_p(h) by h^{n-1} so the Vandermonde
+    system is in powers of r alone (better conditioned, h-free matrix)."""
+    fn = varphi if prediction == "noise" else psi
+    return np.array(
+        [h * math.factorial(n) * float(fn(n + 1, h)) for n in range(1, q + 1)],
+        dtype=np.float64,
+    )
+
+
+def unipc_weights(r: np.ndarray, h: float, variant: str, prediction: str,
+                  degenerate_a1: bool = True) -> np.ndarray:
+    """Per-difference weights w_m (length len(r)) for the unified update.
+
+    r: the relative log-SNR offsets r_m = (lambda_{s_m} - lambda_{t_{i-1}})/h_i,
+       all distinct and nonzero (negative for previous points, 1 for the
+       corrector's current point).
+
+    degenerate_a1: for the single-point systems (UniP-2 / UniC-1) the paper
+    (App. F) and the official implementation use the fixed solution a_1 = 0.5
+    instead of the exact solve. This is what makes B_1(h) and B_2(h)
+    *empirically distinguishable* (Table 1): with exact solves, B(h) cancels —
+    w = B * R^{-1}(phi/B) = R^{-1} phi — and all variants coincide.
+    """
+    r = np.asarray(r, dtype=np.float64)
+    q = len(r)
+    if q == 0:
+        return np.zeros((0,), dtype=np.float64)
+    if q == 1 and degenerate_a1 and variant != "vary":
+        return np.array([0.5 * bh_value(h, variant, prediction)]) / r
+    R = np.vander(r, N=q, increasing=True).T  # R[n-1, m] = r_m^{n-1}
+    if variant == "vary":
+        # UniPC_v (App. C): per-point weights w solve C_p w = h*varphi_{n+1}(h)
+        # with C[n-1, m] = r_m^{n-1} / n!  (A_p = C_p^{-1} is h-independent).
+        fn = varphi if prediction == "noise" else psi
+        C = R / np.array([[math.factorial(n)] for n in range(1, q + 1)])
+        hphi = np.array([h * float(fn(n + 1, h)) for n in range(1, q + 1)])
+        w = np.linalg.solve(C, hphi)
+    else:
+        b = _rhs_vector(q, h, prediction)
+        B = bh_value(h, variant, prediction)
+        a = np.linalg.solve(R, b / B)
+        w = B * a
+    return w / r
+
+
+def default_order_schedule(num_steps: int, order: int, lower_order_final: bool = True):
+    """Predictor order p_i per step (1-indexed steps i=1..M), as in Alg. 5/7
+    (warm-up p_i = min(p, i)) with the DPM-Solver++ style lower-order-final."""
+    orders = []
+    for i in range(1, num_steps + 1):
+        p_i = min(order, i)
+        if lower_order_final:
+            p_i = min(p_i, num_steps - i + 1)
+        orders.append(max(1, p_i))
+    return orders
+
+
+@dataclass
+class UniPCSchedule:
+    """Static per-step coefficient table consumed by the scan-based sampler.
+
+    All arrays are float64 numpy; the sampler casts once. M = number of steps.
+    max_prev = order (corrector uses up to `order` differences: order-1 previous
+    + 1 current; predictor uses up to order-1 previous).
+    """
+
+    lambdas: np.ndarray           # (M+1,) half log-SNR at t_0..t_M
+    alphas: np.ndarray            # (M+1,)
+    sigmas: np.ndarray            # (M+1,)
+    order: int
+    prediction: str
+    variant: str
+    # per-step (M,) / (M, order-1) / (M,) tables:
+    base_x: np.ndarray = field(default=None)       # coeff on x_{i-1}
+    base_m0: np.ndarray = field(default=None)      # coeff on m0
+    w_pred: np.ndarray = field(default=None)       # (M, order-1) predictor diff weights (0-padded)
+    w_corr_prev: np.ndarray = field(default=None)  # (M, order-1) corrector prev-diff weights
+    w_corr_new: np.ndarray = field(default=None)   # (M,) corrector current-diff weight
+    use_corrector: np.ndarray = field(default=None)  # (M,) 0/1
+    out_scale: np.ndarray = field(default=None)    # sigma_t (noise) / alpha_t (data) per step
+    sign: float = field(default=None)              # -1 noise, +1 data
+    timesteps: np.ndarray = field(default=None)    # (M+1,) t grid (for the model)
+    orders: list = field(default=None)
+
+
+def build_unipc_schedule(
+    *,
+    lambdas: np.ndarray,
+    alphas: np.ndarray,
+    sigmas: np.ndarray,
+    timesteps: np.ndarray,
+    order: int = 3,
+    prediction: str = "data",
+    variant: str = "bh2",
+    use_corrector: bool = True,
+    corrector_at_last: bool = False,
+    order_schedule=None,
+    lower_order_final: bool = True,
+) -> UniPCSchedule:
+    """Precompute every scalar/vector the multistep UniPC scan needs.
+
+    Buffer convention inside the sampler: E[k] holds the model output at point
+    t_{i-1-k}; predictor differences at step i use r_m = (lam[i-1-m] - lam[i-1])/h
+    for m = 1..p_i-1 and D_m = E[m] - E[0]; the corrector appends r = 1 with
+    D = model(x_pred, t_i) - E[0]. (Alg. 5-8.)
+    """
+    assert prediction in PREDICTION_TYPES and variant in BH_VARIANTS
+    lambdas = np.asarray(lambdas, dtype=np.float64)
+    M = len(lambdas) - 1
+    if order_schedule is None:
+        order_schedule = default_order_schedule(M, order, lower_order_final)
+    assert len(order_schedule) == M
+    max_prev = max(1, order - 1) if order > 1 else 1
+    # allocate with at least one column so jnp shapes stay static even for order 1
+    w_pred = np.zeros((M, max(1, order - 1)))
+    w_corr_prev = np.zeros((M, max(1, order - 1)))
+    w_corr_new = np.zeros((M,))
+    base_x = np.zeros((M,))
+    base_m0 = np.zeros((M,))
+    out_scale = np.zeros((M,))
+    use_c = np.zeros((M,))
+    for i in range(1, M + 1):
+        h = float(lambdas[i] - lambdas[i - 1])
+        p_i = min(order_schedule[i - 1], i)
+        # previous-point offsets r_m, m=1..p_i-1  (points t_{i-1-m})
+        r_prev = np.array(
+            [(lambdas[i - 1 - m] - lambdas[i - 1]) / h for m in range(1, p_i)],
+            dtype=np.float64,
+        )
+        wp = unipc_weights(r_prev, h, variant, prediction)
+        w_pred[i - 1, : len(wp)] = wp
+        # corrector: previous offsets + r=1 for the current point
+        r_corr = np.concatenate([r_prev, [1.0]])
+        wc = unipc_weights(r_corr, h, variant, prediction)
+        w_corr_prev[i - 1, : len(wc) - 1] = wc[:-1]
+        w_corr_new[i - 1] = wc[-1]
+        corr_here = use_corrector and (corrector_at_last or i < M)
+        use_c[i - 1] = 1.0 if corr_here else 0.0
+        if prediction == "noise":
+            base_x[i - 1] = alphas[i] / alphas[i - 1]
+            base_m0[i - 1] = -sigmas[i] * math.expm1(h)
+            out_scale[i - 1] = sigmas[i]
+        else:
+            base_x[i - 1] = sigmas[i] / sigmas[i - 1]
+            base_m0[i - 1] = alphas[i] * (-math.expm1(-h))
+            out_scale[i - 1] = alphas[i]
+    return UniPCSchedule(
+        lambdas=lambdas,
+        alphas=np.asarray(alphas, dtype=np.float64),
+        sigmas=np.asarray(sigmas, dtype=np.float64),
+        order=order,
+        prediction=prediction,
+        variant=variant,
+        base_x=base_x,
+        base_m0=base_m0,
+        w_pred=w_pred,
+        w_corr_prev=w_corr_prev,
+        w_corr_new=w_corr_new,
+        use_corrector=use_c,
+        out_scale=out_scale,
+        sign=-1.0 if prediction == "noise" else 1.0,
+        timesteps=np.asarray(timesteps, dtype=np.float64),
+        orders=list(order_schedule),
+    )

@@ -1,0 +1,226 @@
+"""UniPC: unified predictor-corrector solvers (the paper's contribution).
+
+Three implementations, all sharing the coefficient machinery in `coeffs.py`:
+
+* `UniPC` — python-loop multistep solver on the GridSolver driver. Reference
+  semantics, supports arbitrary order, custom order schedules (Table 4),
+  UniC-oracle (Table 3), both prediction types and all B(h) variants.
+* `UniPCSinglestep` — singlestep variant (Section 3.4): intermediate points at
+  r in (0,1), lower-order estimates for the inner points.
+* `unipc_sample_scan` — the production path: all coefficients are a static
+  per-step table, the whole sampler is one `lax.scan` that jits, shards, and
+  (optionally) routes the state update through the fused Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coeffs import UniPCSchedule, build_unipc_schedule, default_order_schedule
+from .solver import CorrectorConfig, Grid, GridSolver, History, unified_step
+
+
+class UniPC(GridSolver):
+    """Multistep UniPC-p (Alg. 5-8). Predictor order = `order`; with the
+    corrector enabled the order of accuracy is order+1 (Thm 3.1)."""
+
+    def __init__(
+        self,
+        model_fn,
+        grid: Grid,
+        *,
+        order: int = 3,
+        prediction: str = "data",
+        variant: str = "bh2",
+        order_schedule: Optional[Sequence[int]] = None,
+        lower_order_final: bool = True,
+    ):
+        super().__init__(model_fn, grid)
+        self.order = order
+        self.prediction = prediction
+        self.variant = variant
+        M = len(grid)
+        self.order_schedule = (
+            list(order_schedule)
+            if order_schedule is not None
+            else default_order_schedule(M, order, lower_order_final)
+        )
+
+    def predict(self, i, x, hist: History):
+        g = self.grid
+        p_i = min(self.order_schedule[i - 1], i)
+        m0 = hist.at_lam(g.lam[i - 1])
+        pts = hist.last(p_i - 1, before_lam=float(g.lam[i - 1]))
+        points = [(lam, e) for lam, _, e in reversed(pts)]
+        return unified_step(
+            x, m0, points,
+            lam_s=g.lam[i - 1], lam_t=g.lam[i],
+            alpha_s=g.alpha[i - 1], alpha_t=g.alpha[i],
+            sigma_s=g.sigma[i - 1], sigma_t=g.sigma[i],
+            prediction=self.prediction, variant=self.variant,
+        )
+
+    def corrector_config(self, **kw) -> CorrectorConfig:
+        """UniC matched to this predictor's order/variant."""
+        return CorrectorConfig(order=self.order, variant=self.variant, **kw)
+
+    def sample_pc(self, x_T, *, oracle: bool = False, use_corrector: bool = True):
+        """Full UniPC = UniP + UniC with per-step order from the schedule."""
+        if not use_corrector:
+            return self.sample(x_T, corrector=None)
+        return self.sample(x_T, corrector=_ScheduledCorrector(self, oracle))
+
+
+class _ScheduledCorrector(CorrectorConfig):
+    """Corrector whose order follows the predictor's per-step order schedule
+    (UniC-p_i after UniP-p_i, Alg. 5). GridSolver._correct consults order_at()."""
+
+    def __init__(self, solver: UniPC, oracle: bool):
+        super().__init__(order=solver.order, variant=solver.variant, oracle=oracle)
+        self._solver = solver
+
+    def order_at(self, i: int) -> int:
+        return min(self._solver.order_schedule[i - 1], i)
+
+
+class UniPCSinglestep(GridSolver):
+    """Singlestep UniPC-p (p = 2 or 3): intermediate points at r in (0,1),
+    estimated with lower-order unified steps; costs p NFE per grid step."""
+
+    def __init__(self, model_fn, grid: Grid, noise_schedule, *, order: int = 2,
+                 prediction: str = "data", variant: str = "bh2"):
+        assert order in (2, 3)
+        super().__init__(model_fn, grid)
+        self.order = order
+        self.prediction = prediction
+        self.variant = variant
+        self.noise_schedule = noise_schedule
+        self.r_inner = [0.5] if order == 2 else [1.0 / 3.0, 2.0 / 3.0]
+
+    def predict(self, i, x, hist: History):
+        g = self.grid
+        lam_s, lam_t = float(g.lam[i - 1]), float(g.lam[i])
+        h = lam_t - lam_s
+        m0 = hist.at_lam(g.lam[i - 1])
+        # walk the intermediate points, each estimated with all points so far
+        points = []
+        sched = self.noise_schedule
+        for r in self.r_inner:
+            lam_m = lam_s + r * h
+            t_m = float(sched.t_of_lam(lam_m))
+            a_m, s_m = float(sched.alpha(t_m)), float(sched.sigma(t_m))
+            x_m = unified_step(
+                x, m0, points,
+                lam_s=lam_s, lam_t=lam_m,
+                alpha_s=g.alpha[i - 1], alpha_t=a_m,
+                sigma_s=g.sigma[i - 1], sigma_t=s_m,
+                prediction=self.prediction, variant=self.variant,
+            )
+            e_m = self.model(x_m, t_m)
+            hist.push(lam_m, t_m, e_m)
+            points.append((lam_m, e_m))
+        return unified_step(
+            x, m0, points,
+            lam_s=lam_s, lam_t=lam_t,
+            alpha_s=g.alpha[i - 1], alpha_t=g.alpha[i],
+            sigma_s=g.sigma[i - 1], sigma_t=g.sigma[i],
+            prediction=self.prediction, variant=self.variant,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Production path: static-coefficient lax.scan sampler
+# ---------------------------------------------------------------------------
+
+
+def make_unipc_schedule(schedule, num_steps, *, order=3, prediction="data",
+                        variant="bh2", spacing="logsnr", use_corrector=True,
+                        corrector_at_last=False, order_schedule=None,
+                        lower_order_final=True) -> UniPCSchedule:
+    from ..diffusion.schedules import timestep_grid
+
+    t, lam, alpha, sigma = timestep_grid(schedule, num_steps, spacing)
+    return build_unipc_schedule(
+        lambdas=lam, alphas=alpha, sigmas=sigma, timesteps=t,
+        order=order, prediction=prediction, variant=variant,
+        use_corrector=use_corrector, corrector_at_last=corrector_at_last,
+        order_schedule=order_schedule, lower_order_final=lower_order_final,
+    )
+
+
+def unipc_sample_scan(
+    model_fn: Callable,
+    x_T: jnp.ndarray,
+    sched: UniPCSchedule,
+    *,
+    fused_update: bool = False,
+    dtype=jnp.float32,
+):
+    """Multistep UniPC as a single lax.scan over a static coefficient table.
+
+    model_fn(x, t) -> prediction of `sched.prediction` type. The eval buffer is a
+    ring of `order` slots; warm-up and order schedules are realized purely through
+    zero-padded weight rows, so the scan body is shape-static and jit/pjit-able.
+    One model eval per step (the corrector re-uses it). NFE = M - 1 + (1 if the
+    schedule keeps the last eval, see coeffs.build_unipc_schedule).
+    """
+    order = sched.order
+    K = max(1, order - 1)
+    M = len(sched.base_x)
+    f = lambda a: jnp.asarray(a, dtype=dtype)
+    tab = dict(
+        base_x=f(sched.base_x), base_m0=f(sched.base_m0),
+        w_pred=f(sched.w_pred), w_corr_prev=f(sched.w_corr_prev),
+        w_corr_new=f(sched.w_corr_new), use_c=f(sched.use_corrector),
+        out_scale=f(sched.out_scale), t=f(sched.timesteps[1:]),
+        last=f((np.arange(1, M + 1) == M).astype(np.float64)),
+    )
+    sign = jnp.asarray(sched.sign, dtype)
+
+    if fused_update:
+        from ..kernels.unipc_update import ops as fused_ops
+        combine = fused_ops.weighted_combine
+    else:
+        def combine(terms, weights):
+            # terms: (K+2, *x), weights: (K+2,)
+            return jnp.tensordot(weights, terms, axes=1)
+
+    def body(carry, step):
+        x, E = carry
+        m0 = E[0]
+        diffs = E[1:] - m0[None] if K > 0 else jnp.zeros((0,) + x.shape, x.dtype)
+        # predictor
+        terms = jnp.concatenate([x[None], m0[None], diffs], axis=0)
+        wts_p = jnp.concatenate(
+            [step["base_x"][None], step["base_m0"][None],
+             sign * step["out_scale"] * step["w_pred"]], axis=0)
+        x_pred = combine(terms, wts_p)
+        e_new = model_fn(x_pred, step["t"])
+        # corrector (re-uses e_new; no extra NFE)
+        d_new = e_new - m0
+        terms_c = jnp.concatenate([terms, d_new[None]], axis=0)
+        wts_c = jnp.concatenate(
+            [step["base_x"][None], step["base_m0"][None],
+             sign * step["out_scale"] * step["w_corr_prev"],
+             (sign * step["out_scale"] * step["w_corr_new"])[None]], axis=0)
+        x_corr = combine(terms_c, wts_c)
+        x_next = x_pred + step["use_c"] * (x_corr - x_pred)
+        E_next = jnp.concatenate([e_new[None], E[:-1]], axis=0)
+        return (x_next, E_next), None
+
+    e0 = model_fn(x_T, tab["t"][0] * 0 + jnp.asarray(sched.timesteps[0], dtype))
+    E = jnp.concatenate([e0[None], jnp.zeros((K,) + x_T.shape, x_T.dtype)], axis=0)
+    (x, _), _ = jax.lax.scan(body, (x_T.astype(dtype), E.astype(dtype)), tab)
+    return x
+
+
+def sample_step_fn(sched: UniPCSchedule, fused_update: bool = False):
+    """Return a closure suitable for jit/lower in the dry-run: one full UniPC
+    sampling trajectory given (params -> model_fn factory) handled by caller."""
+    return partial(unipc_sample_scan, sched=sched, fused_update=fused_update)

@@ -1,0 +1,4 @@
+from .schedules import EDMSchedule, NoiseSchedule, VPCosine, VPLinear, timestep_grid
+from .process import diffusion_loss, eps_to_x0, q_sample, wrap_model, x0_to_eps
+from .guidance import cfg_model, dynamic_threshold, guided_data_model
+from .gaussian import GaussianDPM, MixtureDPM, empirical_order

@@ -1,0 +1,56 @@
+"""Forward diffusion process, training losses, and prediction-type conversion."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import NoiseSchedule
+
+
+def q_sample(schedule: NoiseSchedule, x0, t, noise):
+    """x_t = alpha_t x0 + sigma_t eps, with t broadcast over the batch."""
+    a, s = schedule.alpha_sigma_jax(t)
+    bshape = (-1,) + (1,) * (x0.ndim - 1)
+    return a.reshape(bshape) * x0 + s.reshape(bshape) * noise
+
+
+def diffusion_loss(schedule: NoiseSchedule, eps_model: Callable, x0, rng,
+                   weighting: str = "uniform"):
+    """E ||eps_theta(x_t, t) - eps||^2 with t ~ U[t_eps, T]."""
+    rng_t, rng_e = jax.random.split(rng)
+    bsz = x0.shape[0]
+    t = jax.random.uniform(rng_t, (bsz,), minval=schedule.t_eps, maxval=schedule.T)
+    noise = jax.random.normal(rng_e, x0.shape, x0.dtype)
+    x_t = q_sample(schedule, x0, t, noise)
+    pred = eps_model(x_t, t)
+    err = (pred - noise) ** 2
+    if weighting == "snr_trunc":  # min(SNR, 5) weighting
+        a, s = schedule.alpha_sigma_jax(t)
+        w = jnp.minimum((a / s) ** 2, 5.0).reshape((-1,) + (1,) * (x0.ndim - 1))
+        err = err * w
+    return jnp.mean(err)
+
+
+def eps_to_x0(schedule: NoiseSchedule, x_t, t, eps):
+    """x0 = (x_t - sigma_t eps) / alpha_t (App. A.1)."""
+    a, s = schedule.alpha_sigma_jax(jnp.asarray(t))
+    return (x_t - s * eps) / a
+
+
+def x0_to_eps(schedule: NoiseSchedule, x_t, t, x0):
+    a, s = schedule.alpha_sigma_jax(jnp.asarray(t))
+    return (x_t - a * x0) / s
+
+
+def wrap_model(schedule: NoiseSchedule, eps_model: Callable, prediction: str):
+    """Adapt a noise-prediction network to the solver's prediction type."""
+    if prediction == "noise":
+        return eps_model
+
+    def data_model(x, t):
+        return eps_to_x0(schedule, x, t, eps_model(x, t))
+
+    return data_model

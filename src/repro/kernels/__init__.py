@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each a package
+of kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (jit'd public
+wrapper with backend dispatch + padding) and ref.py (pure-jnp oracle):
+
+* unipc_update    — fused multi-term solver state update (one HBM pass)
+* flash_attention — blockwise online-softmax causal GQA attention
+                    (sliding-window capable), (128, 128) MXU-aligned tiles
+
+Validated against the oracles in interpret mode (tests/test_kernels.py);
+selected on TPU backends by the ops wrappers.
+"""

@@ -1,0 +1,34 @@
+"""Public wrapper: padding to block multiples + backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention
+
+
+def attention(q, k, v, *, causal=True, window=None, force_pallas=False,
+              blk_q=DEFAULT_BLOCK_Q, blk_k=DEFAULT_BLOCK_K):
+    """(B, Hq, Sq, D) x (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+
+    Pallas on TPU (or interpret when forced); jnp oracle elsewhere. Pads
+    sequence lengths up to block multiples; key padding is masked inside the
+    kernel via kv_len, query padding is sliced off."""
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_pallas):
+        return ref.attention(q, k, v, causal=causal, window=window)
+    B, Hq, Sq, D = q.shape
+    Skv = k.shape[2]
+    pq = (-Sq) % blk_q
+    pk = (-Skv) % blk_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          blk_q=blk_q, blk_k=blk_k, interpret=not on_tpu,
+                          kv_len=Skv)
+    return out[:, :, :Sq]

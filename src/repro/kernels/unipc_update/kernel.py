@@ -1,0 +1,49 @@
+"""Fused UniPC state update — Pallas TPU kernel.
+
+The UniPC step is x_next = sum_k w_k * term_k over K = order+2 tensors (the
+previous state, the anchor model output, and the difference buffer). The
+reference implementations execute this as a chain of ~K pointwise ops, i.e.
+K+1 HBM round-trips of the full state; at sampling time the state is the
+entire image/latent batch, so the update is purely memory-bound. This kernel
+streams each VMEM tile of all K terms once and writes the result once:
+(K+1)/2x less HBM traffic than the op-chain (DESIGN.md §4).
+
+Layout: terms (K, N) fp32/bf16, weights (K,) fp32 broadcast from SMEM-like
+small VMEM block; grid over N tiles; TILE is a multiple of 128 lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 16 * 128  # (sublane, lane)-aligned flat tile
+
+
+def _kernel(w_ref, t_ref, o_ref):
+    # t_ref: (K, TILE); w_ref: (K, 1); o_ref: (TILE,)
+    acc = jnp.zeros((t_ref.shape[1],), jnp.float32)
+    for k in range(t_ref.shape[0]):  # K is static and small (order + 2)
+        acc = acc + w_ref[k, 0] * t_ref[k, :].astype(jnp.float32)
+    o_ref[:] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_combine_flat(terms, weights, interpret: bool = True):
+    """terms: (K, N) with N % TILE == 0; weights: (K,). Returns (N,)."""
+    K, N = terms.shape
+    grid = (N // TILE,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, TILE), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), terms.dtype),
+        interpret=interpret,
+    )(weights.reshape(K, 1).astype(jnp.float32), terms)

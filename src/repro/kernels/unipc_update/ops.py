@@ -1,0 +1,31 @@
+"""Jit'd public wrapper: shape plumbing + TPU/interpret dispatch + fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import TILE, fused_combine_flat
+
+
+def weighted_combine(terms, weights, force_pallas: bool = False):
+    """terms: (K, *shape); weights: (K,). Fused on TPU (or in interpret mode
+    when forced); falls back to the jnp oracle elsewhere — XLA fuses that path
+    reasonably, the Pallas kernel guarantees the single-pass schedule."""
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_pallas):
+        return ref.weighted_combine(terms, weights)
+    K = terms.shape[0]
+    shape = terms.shape[1:]
+    n = 1
+    for s in shape:
+        n *= s
+    pad = (-n) % TILE
+    flat = terms.reshape(K, n)
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = fused_combine_flat(flat, weights, interpret=not on_tpu)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)

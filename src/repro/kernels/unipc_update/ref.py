@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused UniPC update."""
+
+import jax.numpy as jnp
+
+
+def weighted_combine(terms, weights):
+    """terms: (K, *shape); weights: (K,). Returns sum_k w_k * terms[k]."""
+    wf = weights.astype(jnp.float32)
+    acc = jnp.tensordot(wf, terms.astype(jnp.float32), axes=1)
+    return acc.astype(terms.dtype)

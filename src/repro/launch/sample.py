@@ -1,0 +1,124 @@
+"""Diffusion sampling launcher — the paper's workload. Loads (or freshly
+initializes) an eps-network for --arch, then samples with any solver in the
+zoo at a given NFE budget.
+
+    PYTHONPATH=src python -m repro.launch.sample --arch dit-cifar --reduced \
+        --solver unipc --order 3 --nfe 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import ckpt
+from ..configs.registry import get_config
+from ..core import (DDIM, DEIS, DPMSolverPP, DPMSolverSinglestep, PNDM, Grid,
+                    UniPC, make_unipc_schedule, unipc_sample_scan)
+from ..data.synthetic import class_ids
+from ..diffusion import VPLinear, wrap_model
+from ..models import api
+
+
+def build_model_fn(cfg, params, batch, schedule, prediction):
+    net = api.eps_network(cfg)
+
+    def eps(x, t):
+        return net(params, x, jnp.asarray(t, jnp.float32), batch)
+
+    return wrap_model(schedule, jax.jit(eps), prediction)
+
+
+def latent_shape(cfg, batch):
+    if cfg.family == "dit":
+        return (batch, cfg.patch_tokens, cfg.latent_dim)
+    return (batch, 64, cfg.latent_dim)  # diffusion-LM over a 64-token window
+
+
+def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
+           variant="bh2", prediction="data", batch=4, seed=0,
+           params=None, use_scan=False):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    rng = jax.random.PRNGKey(seed)
+    if params is None:
+        params = api.init_params(cfg, rng)
+    schedule = VPLinear()
+    extra = {}
+    if cfg.family == "dit":
+        extra["class_ids"] = jnp.asarray(class_ids(batch))
+    model = build_model_fn(cfg, params, extra, schedule, prediction)
+    x_T = jax.random.normal(rng, latent_shape(cfg, batch), jnp.float32)
+
+    t0 = time.time()
+    if use_scan and solver == "unipc":
+        us = make_unipc_schedule(schedule, nfe, order=order,
+                                 prediction=prediction, variant=variant)
+        x0 = unipc_sample_scan(model, x_T, us)
+        nfe_used = nfe + 1  # the scan evaluates the final step's eps too
+    else:
+        grid_steps = nfe if solver in ("unipc", "ddim", "dpmpp", "pndm",
+                                       "deis") else max(1, nfe // order)
+        grid = Grid.build(schedule, grid_steps)
+        if solver == "unipc":
+            s = UniPC(model, grid, order=order, prediction=prediction,
+                      variant=variant)
+            x0 = s.sample_pc(x_T, use_corrector=True)
+        elif solver == "ddim":
+            s = DDIM(model, grid, prediction=prediction)
+            x0 = s.sample(x_T)
+        elif solver == "dpmpp":
+            s = DPMSolverPP(model, grid, order=min(order, 3))
+            x0 = s.sample(x_T)
+        elif solver == "dpm":
+            s = DPMSolverSinglestep(model, grid, schedule, order=min(order, 3),
+                                    prediction="noise")
+            x0 = s.sample(x_T)
+        elif solver == "pndm":
+            s = PNDM(model, grid)
+            x0 = s.sample(x_T)
+        elif solver == "deis":
+            s = DEIS(model, grid, schedule, order=min(order, 3))
+            x0 = s.sample(x_T)
+        else:
+            raise ValueError(solver)
+        nfe_used = s.model.nfe
+    dt = time.time() - t0
+    x0 = np.asarray(x0)
+    print(f"{solver}-{order} nfe={nfe_used} wall={dt:.2f}s "
+          f"out_shape={x0.shape} mean={x0.mean():+.4f} std={x0.std():.4f} "
+          f"finite={np.isfinite(x0).all()}")
+    return x0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dit-cifar")
+    ap.add_argument("--solver", default="unipc",
+                    choices=["unipc", "ddim", "dpmpp", "dpm", "pndm", "deis"])
+    ap.add_argument("--order", type=int, default=3)
+    ap.add_argument("--nfe", type=int, default=10)
+    ap.add_argument("--variant", default="bh2", choices=["bh1", "bh2", "vary"])
+    ap.add_argument("--prediction", default="data", choices=["data", "noise"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--scan", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    params = None
+    if args.ckpt:
+        tree, _ = ckpt.restore(args.ckpt)
+        params = tree["params"]
+    sample(args.arch, reduced=not args.full, solver=args.solver,
+           order=args.order, nfe=args.nfe, variant=args.variant,
+           prediction=args.prediction, batch=args.batch, params=params,
+           use_scan=args.scan)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Abstract input/param/cache specs + sharding inference for the dry-run.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no allocation). Param shardings are
+inferred from leaf *path names* (the weight naming convention is uniform
+across families) with divisibility guards; cache shardings likewise. Logical
+axes ('fsdp' / 'model' / 'batch' / 'kv_seq') resolve through the active rule
+set, so train uses 2D FSDPxTP weight sharding while serve replicates over
+data (parallel/sharding.py).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..models import api
+
+F = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape, objective: str = "ar"):
+    """Batch dict of ShapeDtypeStructs for the given workload shape."""
+    B, S = shape.global_batch, shape.seq_len
+    act = cfg.activation_dtype
+    if shape.kind == "train":
+        batch = {"tokens": F((B, S), jnp.int32), "targets": F((B, S), jnp.int32)}
+        if objective == "diffusion" and cfg.family == "dit":
+            batch = {"latents": F((B, cfg.patch_tokens, cfg.latent_dim), act),
+                     "class_ids": F((B,), jnp.int32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": F((B, S), jnp.int32)}
+    else:  # decode: ONE token against a seq_len-deep cache
+        batch = {"tokens": F((B, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = F((B, cfg.image_tokens, cfg.d_model), act)
+    if cfg.family == "audio" and shape.kind != "decode":
+        batch["audio_embeds"] = F((B, cfg.audio_frames, cfg.d_model), act)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig, rng=None):
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: api.init_params(cfg, r), rng)
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        # audio cache structure comes from prefill (cross-KV included)
+        batch = {"tokens": F((B, min(S, 8)), jnp.int32),
+                 "audio_embeds": F((B, cfg.audio_frames, cfg.d_model),
+                                   cfg.activation_dtype)}
+        _, cache = jax.eval_shape(
+            lambda p, b: api.prefill_fn(cfg)(p, b, S),
+            abstract_params(cfg), batch)
+        return cache
+    return jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+
+
+# ---------------------------------------------------------------------------
+# sharding inference
+# ---------------------------------------------------------------------------
+
+# leaf-name -> logical spec for the trailing dims (earlier dims: None/stack)
+_PARAM_RULES = [
+    (r"(w_down|wo|out_proj)$", ("model", "fsdp")),
+    (r"(w_gate|w_up|wq|wk|wv|in_proj|lm_head|w1|w2|ada|img_proj|t_mlp\d)$",
+     ("fsdp", "model")),
+    (r"(embed|token_latents|class_embed)$", ("model", "fsdp")),
+    (r"router$", ("fsdp", None)),
+    (r"conv_w$", (None, "model")),
+]
+
+_CACHE_KV_KEYS = {"k", "v", "attn_k", "attn_v", "img_k", "img_v", "xk", "xv"}
+
+
+from ..parallel.sharding import _axis_len, normalize_axes
+
+
+def _guard(spec_entries, shape, mesh, rules):
+    """Map logical names -> mesh axes, dropping any that don't divide evenly,
+    are absent from this mesh, or were already claimed by an earlier dim."""
+    out = []
+    used = set()
+    for dim, logical in zip(shape, spec_entries):
+        axes = normalize_axes(
+            mesh, rules.get(logical) if logical is not None else None)
+        if axes is not None:
+            axes = tuple(a for a in axes if a not in used) or None
+        if axes is not None and dim % _axis_len(mesh, axes) != 0:
+            axes = None
+        if axes is not None:
+            used.update(axes)
+        out.append(axes)
+    return P(*out)
+
+
+def param_shardings(params_abstract, mesh: Mesh, rules: dict):
+    paths_leaves = jax.tree_util.tree_flatten_with_path(params_abstract)
+    flat, treedef = paths_leaves
+    out = []
+    for path, leaf in flat:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        spec = None
+        for pat, trailing in _PARAM_RULES:
+            if re.search(pat, name):
+                nd = leaf.ndim
+                t = list(trailing)[-nd:] if nd < len(trailing) else list(trailing)
+                entries = [None] * (nd - len(t)) + t
+                spec = _guard(entries, leaf.shape, mesh, rules)
+                break
+        if spec is None:
+            if leaf.ndim >= 2:
+                entries = [None] * (leaf.ndim - 2) + ["fsdp", "model"]
+                spec = _guard(entries, leaf.shape, mesh, rules)
+            else:
+                spec = P()
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_shardings(cache_abstract, mesh: Mesh, rules: dict):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    out = []
+    for path, leaf in flat:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        nd = leaf.ndim
+        if name in _CACHE_KV_KEYS:
+            # (..., B, W, Hkv, D)
+            entries = [None] * (nd - 4) + ["batch", "kv_seq", "kv_heads", None]
+        elif name == "ssm":
+            # (..., B, H, P, N)
+            entries = [None] * (nd - 4) + ["batch", "heads", None, None]
+        elif name == "conv":
+            # (..., B, K, C)
+            entries = [None] * (nd - 3) + ["batch", None, "d_ff"]
+        else:
+            entries = [None] * nd
+        out.append(NamedSharding(mesh, _guard(entries, leaf.shape, mesh, rules)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_abstract, mesh: Mesh, rules: dict):
+    def f(leaf):
+        entries = ["batch"] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, _guard(entries, leaf.shape, mesh, rules))
+
+    return jax.tree.map(f, batch_abstract)

@@ -1,0 +1,44 @@
+"""Diffusion-LM head: turns any backbone into the eps-network of a continuous
+diffusion process over a latent sequence (B, S, latent_dim) — the vehicle for
+applying UniPC to every assigned architecture family (DESIGN.md §3).
+
+The backbone runs WITHOUT a causal mask where the family permits (attention
+archs denoise bidirectionally); SSM/hybrid backbones stay causal by
+construction (noted in DESIGN.md). Conditioning: sinusoidal lambda(t) features
+added to the input projection (FiLM-light — sufficient for an eps-net; the
+heavy adaLN variant lives in dit.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .dit import timestep_embedding
+from .layers import dense_init
+
+
+def init_diffusion_head(cfg, rng):
+    d, L = cfg.d_model, cfg.latent_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "in_proj": dense_init(ks[0], L, d, cfg.weight_dtype),
+        "t_mlp1": dense_init(ks[1], 256, d, cfg.weight_dtype),
+        "t_mlp2": dense_init(ks[2], d, d, cfg.weight_dtype),
+        "out_proj": jnp.zeros((d, L), cfg.weight_dtype),
+    }
+
+
+def diffusion_lm_apply(head, backbone_forward, cfg, x_t, t):
+    """x_t: (B, S, latent_dim); t scalar or (B,). backbone_forward:
+    (inputs_embeds) -> (hidden, aux). Returns eps-hat (B, S, latent_dim)."""
+    B = x_t.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (B,))
+    h = jnp.einsum("bsl,ld->bsd", x_t.astype(cfg.activation_dtype),
+                   head["in_proj"].astype(cfg.activation_dtype))
+    c = jax.nn.silu(jnp.einsum("bf,fd->bd", timestep_embedding(t, 256),
+                               head["t_mlp1"].astype(jnp.float32)))
+    c = jnp.einsum("bd,de->be", c, head["t_mlp2"].astype(jnp.float32))
+    h = h + c.astype(h.dtype)[:, None]
+    hidden, _aux = backbone_forward(h)
+    return jnp.einsum("bsd,dl->bsl", hidden, head["out_proj"].astype(hidden.dtype))

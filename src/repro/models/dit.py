@@ -1,0 +1,93 @@
+"""DiT — the paper-native epsilon-network, TPU-adapted (DESIGN.md §4: the
+paper's UNet checkpoints are CNNs; on TPU the standard diffusion backbone is a
+patch transformer with adaLN-zero time conditioning, Peebles & Xie 2023).
+
+Operates on pre-patchified latents (B, patch_tokens, latent_dim); class
+conditioning optional (classifier-free guidance drops the class embedding).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .layers import NORMS, attention_apply, attention_init, dense_init, layernorm
+
+
+def timestep_embedding(t, dim: int, max_period=10000.0):
+    """t: (B,) float in [0, 1]-ish; sinusoidal features then MLP outside."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half) / half)
+    ang = t[:, None].astype(jnp.float32) * freqs[None] * 1000.0
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def _dit_block_init(rng, cfg):
+    ks = jax.random.split(rng, 4)
+    d = cfg.d_model
+    return {
+        "attn": attention_init(ks[0], cfg),
+        "w1": dense_init(ks[1], d, cfg.d_ff, cfg.weight_dtype),
+        "w2": dense_init(ks[2], cfg.d_ff, d, cfg.weight_dtype,
+                         scale=1.0 / math.sqrt(cfg.d_ff)),
+        # adaLN-zero: 6 modulation vectors, zero-init
+        "ada": jnp.zeros((d, 6 * d), cfg.weight_dtype),
+        "ada_b": jnp.zeros((6 * d,), cfg.weight_dtype),
+    }
+
+
+def init_dit(cfg, rng, num_classes: int = 0):
+    ks = jax.random.split(rng, cfg.num_layers + 5)
+    blocks = [_dit_block_init(k, cfg) for k in ks[: cfg.num_layers]]
+    d = cfg.d_model
+    p = {
+        "in_proj": dense_init(ks[-1], cfg.latent_dim, d, cfg.weight_dtype),
+        "t_mlp1": dense_init(ks[-2], 256, d, cfg.weight_dtype),
+        "t_mlp2": dense_init(ks[-3], d, d, cfg.weight_dtype),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_ada": jnp.zeros((d, 2 * d), cfg.weight_dtype),
+        "final_ada_b": jnp.zeros((2 * d,), cfg.weight_dtype),
+        "out_proj": jnp.zeros((d, cfg.latent_dim), cfg.weight_dtype),
+    }
+    if num_classes:
+        p["class_embed"] = (0.02 * jax.random.normal(
+            ks[-4], (num_classes + 1, d))).astype(cfg.weight_dtype)
+    return p
+
+
+def dit_apply(params, cfg, x_t, t, class_ids=None):
+    """x_t: (B, T, latent_dim); t: scalar or (B,). Returns eps-hat, same shape."""
+    B, T, _ = x_t.shape
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (B,))
+    x = jnp.einsum("btl,ld->btd", x_t.astype(cfg.activation_dtype),
+                   params["in_proj"].astype(cfg.activation_dtype))
+    x = shard(x, "batch", "seq", "d_model")
+    c = jax.nn.silu(jnp.einsum(
+        "bf,fd->bd", timestep_embedding(t, 256),
+        params["t_mlp1"].astype(jnp.float32)))
+    c = jnp.einsum("bd,de->be", c, params["t_mlp2"].astype(jnp.float32))
+    if class_ids is not None and "class_embed" in params:
+        c = c + params["class_embed"].astype(jnp.float32)[class_ids]
+    c = jax.nn.silu(c).astype(x.dtype)
+
+    def body(h, bp):
+        mod = (jnp.einsum("bd,de->be", c, bp["ada"].astype(h.dtype))
+               + bp["ada_b"].astype(h.dtype))
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        hn = layernorm({}, h) * (1 + sc1[:, None]) + sh1[:, None]
+        a = attention_apply(bp["attn"], hn, cfg, causal=False, rope=False)
+        h = h + g1[:, None] * a
+        hn = layernorm({}, h) * (1 + sc2[:, None]) + sh2[:, None]
+        y = jnp.einsum("btd,df->btf", hn, bp["w1"].astype(h.dtype))
+        y = jnp.einsum("btf,fd->btd", jax.nn.gelu(y), bp["w2"].astype(h.dtype))
+        return h + g2[:, None] * y, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    mod = (jnp.einsum("bd,de->be", c, params["final_ada"].astype(x.dtype))
+           + params["final_ada_b"].astype(x.dtype))
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    x = layernorm({}, x) * (1 + sc[:, None]) + sh[:, None]
+    return jnp.einsum("btd,dl->btl", x, params["out_proj"].astype(x.dtype))

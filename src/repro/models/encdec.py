@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment
+carve-out: `audio_embeds` (B, audio_frames, d_model) arrive precomputed.
+Encoder: bidirectional attention with sinusoidal positions. Decoder: causal
+self-attention + cross-attention to the encoder output; at serve time the
+cross K/V are precomputed once at prefill.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .layers import (NORMS, attention_apply, attention_init, dense_init,
+                     maybe_remat, mlp_apply, mlp_init, sdpa)
+from .transformer import _attn_with_cache, cache_window, logits_from_hidden
+
+
+def _norm(cfg):
+    init, apply = NORMS[cfg.norm]
+    return init, apply
+
+
+def sinusoids(length: int, d: int):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(length)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_init(rng, cfg):
+    ninit, _ = _norm(cfg)
+    ks = jax.random.split(rng, 2)
+    return {"ln1": ninit(cfg.d_model, cfg.weight_dtype),
+            "attn": attention_init(ks[0], cfg),
+            "ln2": ninit(cfg.d_model, cfg.weight_dtype),
+            "mlp": mlp_init(ks[1], cfg)}
+
+
+def _dec_layer_init(rng, cfg):
+    ninit, _ = _norm(cfg)
+    ks = jax.random.split(rng, 3)
+    return {"ln1": ninit(cfg.d_model, cfg.weight_dtype),
+            "attn": attention_init(ks[0], cfg),
+            "lnx": ninit(cfg.d_model, cfg.weight_dtype),
+            "xattn": attention_init(ks[1], cfg),
+            "ln2": ninit(cfg.d_model, cfg.weight_dtype),
+            "mlp": mlp_init(ks[2], cfg)}
+
+
+def init_encdec(cfg, rng):
+    ninit, _ = _norm(cfg)
+    ks = jax.random.split(rng, cfg.encoder_layers + cfg.num_layers + 3)
+    enc = [_enc_layer_init(k, cfg) for k in ks[: cfg.encoder_layers]]
+    dec = [_dec_layer_init(k, cfg)
+           for k in ks[cfg.encoder_layers: cfg.encoder_layers + cfg.num_layers]]
+    return {
+        "embed": dense_init(ks[-1], cfg.vocab_size, cfg.d_model,
+                            cfg.weight_dtype, scale=0.02),
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_ln": ninit(cfg.d_model, cfg.weight_dtype),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "final_ln": ninit(cfg.d_model, cfg.weight_dtype),
+    }
+
+
+def encode(params, cfg, audio_embeds):
+    _, napply = _norm(cfg)
+    x = audio_embeds.astype(cfg.activation_dtype)
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = shard(x, "batch", "seq", "d_model")
+
+    def body(h, lp):
+        a = attention_apply(lp["attn"], napply(lp["ln1"], h), cfg,
+                            causal=False, rope=False)
+        h = h + a
+        return h + mlp_apply(lp["mlp"], napply(lp["ln2"], h), cfg), None
+
+    x, _ = jax.lax.scan(maybe_remat(body, cfg), x, params["enc_layers"])
+    return napply(params["enc_ln"], x)
+
+
+def _dec_block(lp, h, enc_out, cfg, napply, *, causal=True):
+    a = attention_apply(lp["attn"], napply(lp["ln1"], h), cfg, causal=causal)
+    h = h + a
+    xa = attention_apply(lp["xattn"], napply(lp["lnx"], h), cfg,
+                         kv_src=enc_out, causal=False, rope=False)
+    h = h + xa
+    return h + mlp_apply(lp["mlp"], napply(lp["ln2"], h), cfg)
+
+
+def encdec_forward(params, cfg, tokens, audio_embeds, *, inputs_embeds=None,
+                   causal=True):
+    _, napply = _norm(cfg)
+    enc_out = encode(params, cfg, audio_embeds)
+    x = (inputs_embeds if inputs_embeds is not None
+         else params["embed"].astype(cfg.activation_dtype)[tokens])
+    x = shard(x, "batch", "seq", "d_model")
+
+    def body(h, lp):
+        return _dec_block(lp, h, enc_out, cfg, napply, causal=causal), None
+
+    x, _ = jax.lax.scan(maybe_remat(body, cfg), x, params["dec_layers"])
+    return napply(params["final_ln"], x), jnp.zeros((), jnp.float32)
+
+
+def _forward_embeds(params, cfg, inputs_embeds, audio_embeds):
+    """Diffusion-mode entry: bidirectional decoder over continuous inputs."""
+    return encdec_forward(params, cfg, None, audio_embeds,
+                          inputs_embeds=inputs_embeds, causal=False)
+
+
+def encdec_loss(params, cfg, tokens, targets, audio_embeds):
+    hidden, _ = encdec_forward(params, cfg, tokens, audio_embeds)
+    logits = logits_from_hidden(params, cfg, hidden).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+
+def _xattn_kv(lp, enc_out, cfg):
+    B, T = enc_out.shape[:2]
+    k = jnp.einsum("bnd,de->bne", enc_out, lp["xattn"]["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bnd,de->bne", enc_out, lp["xattn"]["wv"].astype(enc_out.dtype))
+    if "bk" in lp["xattn"]:
+        k = k + lp["xattn"]["bk"].astype(enc_out.dtype)
+        v = v + lp["xattn"]["bv"].astype(enc_out.dtype)
+    return (k.reshape(B, T, cfg.num_kv_heads, cfg.head_dim),
+            v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim))
+
+
+def encdec_prefill(params, cfg, tokens, audio_embeds, max_len):
+    from .layers import apply_rope
+    _, napply = _norm(cfg)
+    enc_out = encode(params, cfg, audio_embeds)
+    B, S = tokens.shape
+    W = cache_window(cfg, max_len)
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, lp):
+        xn = napply(lp["ln1"], h)
+        h_out = _dec_block(lp, h, enc_out, cfg, napply)
+        k = jnp.einsum("bsd,de->bse", xn, lp["attn"]["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,de->bse", xn, lp["attn"]["wv"].astype(h.dtype))
+        k = apply_rope(k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim), pos,
+                       cfg.rope_theta)
+        v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        if S >= W:
+            slots = jnp.mod(jnp.arange(S - W, S), W)
+            kc = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, S - W:])
+            vc = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, S - W:])
+        else:
+            padw = ((0, 0), (0, W - S), (0, 0), (0, 0))
+            kc, vc = jnp.pad(k, padw), jnp.pad(v, padw)
+        xk, xv = _xattn_kv(lp, enc_out, cfg)
+        return h_out, (kc, vc, xk, xv)
+
+    x, (kc, vc, xk, xv) = jax.lax.scan(body, x, params["dec_layers"])
+    hidden = napply(params["final_ln"], x[:, -1:])
+    return (logits_from_hidden(params, cfg, hidden),
+            {"k": kc, "v": vc, "xk": xk, "xv": xv})
+
+
+def encdec_decode_step(params, cfg, cache, token, pos):
+    _, napply = _norm(cfg)
+    x = params["embed"].astype(cfg.activation_dtype)[token]
+    W = cache["k"].shape[2]
+    B = x.shape[0]
+    hq, hd = cfg.num_heads, cfg.head_dim
+
+    def body(h, lc):
+        lp, kc, vc, xk, xv = lc
+        a, kc, vc = _attn_with_cache(lp, napply(lp["ln1"], h), kc, vc, pos, cfg, W)
+        h = h + a
+        xn = napply(lp["lnx"], h)
+        q = jnp.einsum("bsd,de->bse", xn, lp["xattn"]["wq"].astype(h.dtype))
+        if "bq" in lp["xattn"]:
+            q = q + lp["xattn"]["bq"].astype(h.dtype)
+        o = sdpa(q.reshape(B, 1, hq, hd), xk, xv, causal=False)
+        o = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, hq * hd),
+                       lp["xattn"]["wo"].astype(h.dtype))
+        h = h + o
+        return h + mlp_apply(lp["mlp"], napply(lp["ln2"], h), cfg), (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    hidden = napply(params["final_ln"], x)
+    return logits_from_hidden(params, cfg, hidden), dict(cache, k=kc, v=vc)

@@ -1,0 +1,266 @@
+"""SSM and hybrid LMs.
+
+* MambaLM — pure Mamba2 stack (mamba2-780m): scan over stacked SSD blocks.
+* Zamba2LM — Mamba2 backbone with ONE *shared* attention block applied every
+  `cfg.attn_every` SSM layers (zamba2's parameter-shared attention; we omit the
+  per-invocation LoRA deltas of the released checkpoints — noted in the config).
+
+Both support full-sequence forward (train/prefill) and O(1)-state decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .layers import (NORMS, attention_apply, attention_init, dense_init,
+                     maybe_remat, mlp_apply, mlp_init)
+from .ssm import (init_mamba_state, mamba2_apply, mamba2_decode, mamba2_init)
+from .transformer import (_attn_with_cache, cache_window, logits_from_hidden)
+
+
+def _norm(cfg):
+    init, apply = NORMS[cfg.norm]
+    return init, apply
+
+
+def _ssm_layer_init(rng, cfg):
+    ninit, _ = _norm(cfg)
+    return {"ln": ninit(cfg.d_model, cfg.weight_dtype),
+            "mamba": mamba2_init(rng, cfg)}
+
+
+def init_mamba_lm(cfg, rng):
+    ks = jax.random.split(rng, cfg.num_layers + 2)
+    layers = [_ssm_layer_init(k, cfg) for k in ks[: cfg.num_layers]]
+    ninit, _ = _norm(cfg)
+    return {
+        "embed": dense_init(ks[-1], cfg.vocab_size, cfg.d_model,
+                            cfg.weight_dtype, scale=0.02),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+        "final_ln": ninit(cfg.d_model, cfg.weight_dtype),
+    }
+
+
+def mamba_forward(params, cfg, tokens, *, inputs_embeds=None):
+    _, napply = _norm(cfg)
+    x = (inputs_embeds if inputs_embeds is not None
+         else params["embed"].astype(cfg.activation_dtype)[tokens])
+    x = shard(x, "batch", "seq", "d_model")
+
+    def body(h, lp):
+        return h + mamba2_apply(lp["mamba"], napply(lp["ln"], h), cfg), None
+
+    x, _ = jax.lax.scan(maybe_remat(body, cfg), x, params["layers"])
+    return napply(params["final_ln"], x), jnp.zeros((), jnp.float32)
+
+
+def mamba_lm_loss(params, cfg, tokens, targets):
+    hidden, _ = mamba_forward(params, cfg, tokens)
+    logits = logits_from_hidden(params, cfg, hidden).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+
+def init_mamba_cache(cfg, batch, max_len=None):
+    one = init_mamba_state(cfg, batch)
+    return jax.tree.map(
+        lambda z: jnp.zeros((cfg.num_layers,) + z.shape, z.dtype), one)
+
+
+def mamba_prefill(params, cfg, tokens, max_len=None):
+    """Full-sequence pass that also returns the decode state per layer."""
+    _, napply = _norm(cfg)
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+
+    def body(h, lp):
+        y, st = mamba2_apply(lp["mamba"], napply(lp["ln"], h), cfg,
+                             return_state=True)
+        return h + y, st
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    hidden = napply(params["final_ln"], x[:, -1:])
+    return logits_from_hidden(params, cfg, hidden), states
+
+
+def mamba_decode_step(params, cfg, cache, token, pos):
+    _, napply = _norm(cfg)
+    x = params["embed"].astype(cfg.activation_dtype)[token]
+
+    def body(h, lc):
+        lp, st = lc
+        y, st = mamba2_decode(lp["mamba"], st, napply(lp["ln"], h), cfg)
+        return h + y, st
+
+    x, states = jax.lax.scan(body, x, (params["layers"], cache))
+    hidden = napply(params["final_ln"], x)
+    return logits_from_hidden(params, cfg, hidden), states
+
+
+# ---------------------------------------------------------------------------
+# zamba2: groups of `attn_every` mamba layers + one shared attention block
+# ---------------------------------------------------------------------------
+
+def _zamba_groups(cfg):
+    n_groups = cfg.num_layers // cfg.attn_every
+    tail = cfg.num_layers - n_groups * cfg.attn_every
+    return n_groups, tail
+
+
+def init_zamba_lm(cfg, rng):
+    n_groups, tail = _zamba_groups(cfg)
+    ninit, _ = _norm(cfg)
+    n_ssm = n_groups * cfg.attn_every + tail
+    ks = jax.random.split(rng, n_ssm + 4)
+    layers = [_ssm_layer_init(k, cfg) for k in ks[:n_ssm]]
+    grouped = layers[: n_groups * cfg.attn_every]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grouped)
+    # reshape leading axis (n_groups * attn_every) -> (n_groups, attn_every)
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_groups, cfg.attn_every) + a.shape[1:]), stacked)
+    p = {
+        "embed": dense_init(ks[-1], cfg.vocab_size, cfg.d_model,
+                            cfg.weight_dtype, scale=0.02),
+        "groups": stacked,
+        "shared_attn": {
+            "ln1": ninit(cfg.d_model, cfg.weight_dtype),
+            "attn": attention_init(ks[-2], cfg),
+            "ln2": ninit(cfg.d_model, cfg.weight_dtype),
+            "mlp": mlp_init(ks[-3], cfg),
+        },
+        "final_ln": ninit(cfg.d_model, cfg.weight_dtype),
+    }
+    if tail:
+        tail_layers = layers[n_groups * cfg.attn_every:]
+        p["tail"] = jax.tree.map(lambda *xs: jnp.stack(xs), *tail_layers)
+    return p
+
+
+def _shared_attn_block(sp, x, cfg, napply):
+    a = attention_apply(sp["attn"], napply(sp["ln1"], x), cfg, causal=True,
+                        sliding_window=cfg.sliding_window)
+    x = x + a
+    return x + mlp_apply(sp["mlp"], napply(sp["ln2"], x), cfg)
+
+
+def zamba_forward(params, cfg, tokens, *, inputs_embeds=None):
+    _, napply = _norm(cfg)
+    x = (inputs_embeds if inputs_embeds is not None
+         else params["embed"].astype(cfg.activation_dtype)[tokens])
+    x = shard(x, "batch", "seq", "d_model")
+    sp = params["shared_attn"]
+
+    def ssm_body(h, lp):
+        return h + mamba2_apply(lp["mamba"], napply(lp["ln"], h), cfg), None
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(maybe_remat(ssm_body, cfg), h, gp)
+        return _shared_attn_block(sp, h, cfg, napply), None
+
+    x, _ = jax.lax.scan(maybe_remat(group_body, cfg), x, params["groups"])
+    if "tail" in params:
+        x, _ = jax.lax.scan(ssm_body, x, params["tail"])
+    return napply(params["final_ln"], x), jnp.zeros((), jnp.float32)
+
+
+def zamba_lm_loss(params, cfg, tokens, targets):
+    hidden, _ = zamba_forward(params, cfg, tokens)
+    logits = logits_from_hidden(params, cfg, hidden).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+
+def init_zamba_cache(cfg, batch, max_len):
+    n_groups, tail = _zamba_groups(cfg)
+    one = init_mamba_state(cfg, batch)
+    W = cache_window(cfg, max_len)
+    kv = jnp.zeros((n_groups, batch, W, cfg.num_kv_heads, cfg.head_dim),
+                   cfg.activation_dtype)
+    cache = {
+        "groups": jax.tree.map(
+            lambda z: jnp.zeros((n_groups, cfg.attn_every) + z.shape, z.dtype),
+            one),
+        "attn_k": kv, "attn_v": kv,
+    }
+    if tail:
+        cache["tail"] = jax.tree.map(
+            lambda z: jnp.zeros((tail,) + z.shape, z.dtype), one)
+    return cache
+
+
+def zamba_decode_step(params, cfg, cache, token, pos):
+    _, napply = _norm(cfg)
+    x = params["embed"].astype(cfg.activation_dtype)[token]
+    sp = params["shared_attn"]
+    W = cache["attn_k"].shape[2]
+
+    def ssm_body(h, lc):
+        lp, st = lc
+        y, st = mamba2_decode(lp["mamba"], st, napply(lp["ln"], h), cfg)
+        return h + y, st
+
+    def group_body(h, gc):
+        gp, gst, kc, vc = gc
+        h, gst = jax.lax.scan(ssm_body, h, (gp, gst))
+        a, kc, vc = _attn_with_cache(sp, napply(sp["ln1"], h), kc, vc, pos, cfg, W)
+        h = h + a
+        h = h + mlp_apply(sp["mlp"], napply(sp["ln2"], h), cfg)
+        return h, (gst, kc, vc)
+
+    x, (gst, kc, vc) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["groups"], cache["attn_k"], cache["attn_v"]))
+    new_cache = dict(cache, groups=gst, attn_k=kc, attn_v=vc)
+    if "tail" in params:
+        x, tst = jax.lax.scan(ssm_body, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = tst
+    hidden = napply(params["final_ln"], x)
+    return logits_from_hidden(params, cfg, hidden), new_cache
+
+
+def zamba_prefill(params, cfg, tokens, max_len):
+    """Prefill by running decode positions via full-sequence mamba + attention
+    with cache rebuild (attention K/V recomputed from the shared block inputs)."""
+    _, napply = _norm(cfg)
+    from .layers import apply_rope
+    B, S = tokens.shape
+    W = cache_window(cfg, max_len)
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+    sp = params["shared_attn"]
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def ssm_body(h, lp):
+        y, st = mamba2_apply(lp["mamba"], napply(lp["ln"], h), cfg,
+                             return_state=True)
+        return h + y, st
+
+    def group_body(h, gp):
+        h, gst = jax.lax.scan(ssm_body, h, gp)
+        xn = napply(sp["ln1"], h)
+        a = attention_apply(sp["attn"], xn, cfg, causal=True,
+                            sliding_window=cfg.sliding_window)
+        h2 = h + a
+        h_out = h2 + mlp_apply(sp["mlp"], napply(sp["ln2"], h2), cfg)
+        k = jnp.einsum("bsd,de->bse", xn, sp["attn"]["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,de->bse", xn, sp["attn"]["wv"].astype(h.dtype))
+        k = apply_rope(k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim), pos,
+                       cfg.rope_theta)
+        v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        if S >= W:
+            tail_pos = jnp.arange(S - W, S)
+            slots = jnp.mod(tail_pos, W)
+            kc = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, S - W:])
+            vc = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, S - W:])
+        else:
+            padw = ((0, 0), (0, W - S), (0, 0), (0, 0))
+            kc, vc = jnp.pad(k, padw), jnp.pad(v, padw)
+        return h_out, (gst, kc, vc)
+
+    x, (gst, kc, vc) = jax.lax.scan(group_body, x, params["groups"])
+    cache = {"groups": gst, "attn_k": kc, "attn_v": vc}
+    if "tail" in params:
+        x, tst = jax.lax.scan(ssm_body, x, params["tail"])
+        cache["tail"] = tst
+    hidden = napply(params["final_ln"], x[:, -1:])
+    return logits_from_hidden(params, cfg, hidden), cache

@@ -1,0 +1,204 @@
+"""Mamba2 (state-space duality / SSD) block — chunked parallel form for
+training/prefill and O(1) recurrent form for decode. (Dao & Gu, 2024,
+arXiv:2405.21060; zamba2's Mamba2 blocks use the same core.)
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim heads, state N,
+G groups for B/C (GVA-style). Chunked scan: within-chunk quadratic form +
+inter-chunk recurrence on (H, P, N) states — TPU-friendly (all einsums, one
+small sequential scan over chunks).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def mamba2_init(rng, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    dt = cfg.weight_dtype
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(rng, 5)
+    return {
+        # order: [z (di), x (di), B (G*N), C (G*N), dt (H)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * G * N + H, dt),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim))).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.log(jnp.expm1(0.01 * jnp.ones((H,)))).astype(dt),
+        "out_norm": rmsnorm_init(di, dt),
+        "out_proj": dense_init(ks[2], di, d, dt),
+    }
+
+
+def _split_proj(params, u, cfg):
+    di, G, N, H = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", u, params["in_proj"].astype(u.dtype))
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(params, xBC, cfg):
+    """Depthwise causal conv1d, window ssm_conv, then SiLU."""
+    K = cfg.ssm_conv
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    w = params["conv_w"].astype(xBC.dtype)
+    out = sum(pad[:, k: k + xBC.shape[1]] * w[k] for k in range(K))
+    return jax.nn.silu(out + params["conv_b"].astype(xBC.dtype))
+
+
+def _segsum(a):
+    """a: (..., q) -> (..., q, q) lower-triangular cumulative sums
+    L[i, j] = sum_{j < k <= i} a_k (and -inf above the diagonal)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B, C, D, chunk):
+    """SSD chunked algorithm.
+
+    x: (b, l, h, p); dt: (b, l, h) (post-softplus); A: (h,) negative;
+    B, C: (b, l, g, n); D: (h,). Returns y: (b, l, h, p) and the final
+    state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    orig_l = l
+    pad = (-l) % chunk
+    if pad:
+        # zero-pad: dt=0 rows have decay exp(0)=1 and contribute nothing
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+        l = l + pad
+    c = l // chunk
+    rep = h // g
+    ch = lambda t: t.reshape((b, c, chunk) + t.shape[2:])
+    xc, dtc, Bc, Cc = ch(x), ch(dt), ch(B), ch(C)
+    a = (dtc * A[None, None, None, :]).astype(jnp.float32)        # (b,c,q,h)
+    a = jnp.moveaxis(a, -1, 2)                                    # (b,c,h,q)
+    xdt = xc * dtc[..., None]                                     # (b,c,q,h,p)
+
+    # 1) within-chunk (quadratic) term
+    L = jnp.exp(_segsum(a))                                       # (b,c,h,q,q)
+    Bh = jnp.repeat(Bc, rep, axis=3)                              # (b,c,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    Ydiag = jnp.einsum("bcihn,bcjhn,bchij,bcjhp->bcihp",
+                       Ch.astype(jnp.float32), Bh.astype(jnp.float32),
+                       L, xdt.astype(jnp.float32))
+
+    # 2) chunk states
+    a_cum = jnp.cumsum(a, axis=-1)                                # (b,c,h,q)
+    a_tot = a_cum[..., -1]                                        # (b,c,h)
+    decay_states = jnp.exp(a_tot[..., None] - a_cum)              # (b,c,h,q)
+    states = jnp.einsum("bcqhn,bchq,bcqhp->bchpn",
+                        Bh.astype(jnp.float32),
+                        decay_states, xdt.astype(jnp.float32))    # (b,c,h,p,n)
+
+    # 3) inter-chunk recurrence  S_c = exp(a_tot_c) * S_{c-1} + states_c
+    def step(S, inp):
+        st, dk = inp
+        S = S * jnp.exp(dk)[..., None, None] + st
+        return S, S
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, S_after = jax.lax.scan(
+        step, S0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(a_tot, 1, 0)))
+    # state *entering* chunk c is S_after[c-1]; chunk 0 enters with zeros
+    S_in = jnp.concatenate([S0[None], S_after[:-1]], axis=0)
+    S_in = jnp.moveaxis(S_in, 0, 1)                               # (b,c,h,p,n)
+
+    # 4) state -> output within each chunk
+    Yoff = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                      Ch.astype(jnp.float32), S_in, jnp.exp(a_cum))
+    y = (Ydiag + Yoff).reshape(b, l, h, p).astype(x.dtype)
+    y = y + x * D[None, None, :, None].astype(x.dtype)
+    if pad:
+        y = y[:, :orig_l]
+    return y, final.astype(x.dtype)
+
+
+def mamba2_apply(params, u, cfg, *, return_state: bool = False):
+    """Full-sequence Mamba2 block. u: (B, S, d_model)."""
+    di, G, N, H = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(params, u, cfg)
+    xBC = _causal_conv(params, xBC, cfg)
+    x, B, C = jnp.split(xBC, [di, di + G * N], axis=-1)
+    b, l = u.shape[:2]
+    x = x.reshape(b, l, H, P)
+    x = shard(x, "batch", "seq", "heads", None)
+    B = B.reshape(b, l, G, N)
+    C = C.reshape(b, l, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, state = ssd_scan(x, dt, A, B, C, params["D"], cfg.ssm_chunk)
+    y = y.reshape(b, l, di)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(u.dtype))
+    if return_state:
+        conv_tail = jnp.concatenate(
+            [jnp.zeros((b, max(0, cfg.ssm_conv - 1 - l), xBC.shape[-1]), u.dtype),
+             _conv_input_tail(params, u, cfg)], axis=1)
+        return out, {"ssm": state, "conv": conv_tail}
+    return out
+
+
+def _conv_input_tail(params, u, cfg):
+    """Last (ssm_conv - 1) *pre-conv* channel rows, for decode continuation."""
+    _, xBC_raw, _ = _split_proj(params, u, cfg)
+    return xBC_raw[:, -(cfg.ssm_conv - 1):]
+
+
+def init_mamba_state(cfg, batch):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), cfg.activation_dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim),
+                          cfg.activation_dtype),
+    }
+
+
+def mamba2_decode(params, state, u_tok, cfg):
+    """One-token recurrent update. u_tok: (B, 1, d). Returns (y, state)."""
+    di, G, N, H = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    b = u_tok.shape[0]
+    z, xBC_raw, dt = _split_proj(params, u_tok, cfg)
+    window = jnp.concatenate([state["conv"], xBC_raw], axis=1)  # (B, K, conv_dim)
+    w = params["conv_w"].astype(u_tok.dtype)
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)
+                      + params["conv_b"].astype(u_tok.dtype))[:, None]
+    x, B, C = jnp.split(xBC, [di, di + G * N], axis=-1)
+    x = x.reshape(b, H, P)
+    B = jnp.repeat(B.reshape(b, G, N), H // G, axis=1)
+    C = jnp.repeat(C.reshape(b, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # (b,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A[None])                                   # (b,H)
+    S = state["ssm"].astype(jnp.float32)
+    S = S * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", (x * dt[..., None]).astype(jnp.float32),
+        B.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", C.astype(jnp.float32), S)
+    y = y.astype(u_tok.dtype) + x * params["D"].astype(u_tok.dtype)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(u_tok.dtype))
+    new_state = {"ssm": S.astype(state["ssm"].dtype), "conv": window[:, 1:]}
+    return out, new_state

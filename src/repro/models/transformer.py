@@ -1,0 +1,241 @@
+"""Decoder-only transformer LM (dense or MoE blocks), scan-over-layers.
+
+Serves qwen2-0.5b / qwen2.5-3b / olmo-1b / deepseek-67b (dense) and, with
+`cfg.num_experts > 0`, mixtral-8x7b / granite-moe (MoE). Three entry points:
+
+  forward(params, cfg, tokens)                -> hidden (B, S, d)   [train]
+  prefill(params, cfg, tokens)                -> (logits_last, cache)
+  decode_step(params, cfg, cache, tok, pos)   -> (logits, cache)
+
+KV caches are (L, B, W, Hkv, D) stacked over the layer/scan axis, where W is
+`max_len` (full cache) or `cfg.sliding_window` (rolling cache, sub-quadratic
+long-context decode). Keys are stored rope'd at their true positions.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .layers import (
+    NORMS, apply_rope, attention_apply, attention_init, dense_init, maybe_remat,
+    mlp_apply, mlp_init, sdpa,
+)
+from .moe import moe_apply, moe_apply_shard_map, moe_decode_apply, moe_init
+
+
+def _norm(cfg):
+    init, apply = NORMS[cfg.norm]
+    return init, apply
+
+
+def layer_init(rng, cfg):
+    ninit, _ = _norm(cfg)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "ln1": ninit(cfg.d_model, cfg.weight_dtype),
+        "attn": attention_init(ks[0], cfg),
+        "ln2": ninit(cfg.d_model, cfg.weight_dtype),
+    }
+    if cfg.num_experts:
+        p["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def init_lm(cfg, rng):
+    ks = jax.random.split(rng, cfg.num_layers + 3)
+    layers = [layer_init(k, cfg) for k in ks[: cfg.num_layers]]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    ninit, _ = _norm(cfg)
+    p = {
+        "embed": dense_init(ks[-1], cfg.vocab_size, cfg.d_model,
+                            cfg.weight_dtype, scale=0.02),
+        "layers": stacked,
+        "final_ln": ninit(cfg.d_model, cfg.weight_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[-2], cfg.d_model, cfg.vocab_size,
+                                  cfg.weight_dtype)
+    return p
+
+
+def _block(lp, x, cfg, *, sliding_window, causal=True):
+    _, napply = _norm(cfg)
+    h = attention_apply(lp["attn"], napply(lp["ln1"], x), cfg,
+                        causal=causal, sliding_window=sliding_window)
+    x = x + h
+    y = napply(lp["ln2"], x)
+    if cfg.num_experts:
+        from ..parallel.sharding import current_mesh
+        mesh = current_mesh()
+        if cfg.moe_shard_map and mesh is not None:
+            y, aux = moe_apply_shard_map(lp["moe"], y, cfg, mesh)
+        else:
+            y, aux = moe_apply(lp["moe"], y, cfg)
+    else:
+        y, aux = mlp_apply(lp["mlp"], y, cfg), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def forward(params, cfg, tokens, *, causal: bool = True,
+            inputs_embeds: Optional[jnp.ndarray] = None):
+    """Full-sequence forward; returns (hidden, aux_loss)."""
+    x = (inputs_embeds if inputs_embeds is not None
+         else params["embed"].astype(cfg.activation_dtype)[tokens])
+    x = shard(x, "batch", "seq", "d_model")
+
+    def body(h, lp):
+        h, aux = _block(lp, h, cfg, sliding_window=cfg.sliding_window,
+                        causal=causal)
+        return h, aux
+
+    x, auxs = jax.lax.scan(maybe_remat(body, cfg), x, params["layers"])
+    _, napply = _norm(cfg)
+    return napply(params["final_ln"], x), jnp.sum(auxs)
+
+
+def logits_from_hidden(params, cfg, hidden):
+    w = (params["embed"].T if cfg.tie_embeddings or "lm_head" not in params
+         else params["lm_head"])
+    out = jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype))
+    return shard(out, "batch", "seq", "vocab")
+
+
+def lm_loss(params, cfg, tokens, targets):
+    hidden, aux = forward(params, cfg, tokens)
+    logits = logits_from_hidden(params, cfg, hidden).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    return nll + cfg.router_aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with stacked KV caches
+# ---------------------------------------------------------------------------
+
+def cache_window(cfg, max_len: int) -> int:
+    return min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    W = cache_window(cfg, max_len)
+    shape = (cfg.num_layers, batch, W, cfg.num_kv_heads, cfg.head_dim)
+    z = jnp.zeros(shape, cfg.activation_dtype)
+    return {"k": z, "v": z}
+
+
+def _attn_with_cache(lp, x_tok, k_cache, v_cache, pos, cfg, W):
+    """x_tok: (B, 1, d); cache slices (B, W, Hkv, D); pos: scalar int."""
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    B = x_tok.shape[0]
+    q = jnp.einsum("bsd,de->bse", x_tok, lp["attn"]["wq"].astype(x_tok.dtype))
+    k = jnp.einsum("bsd,de->bse", x_tok, lp["attn"]["wk"].astype(x_tok.dtype))
+    v = jnp.einsum("bsd,de->bse", x_tok, lp["attn"]["wv"].astype(x_tok.dtype))
+    if "bq" in lp["attn"]:
+        q = q + lp["attn"]["bq"].astype(x_tok.dtype)
+        k = k + lp["attn"]["bk"].astype(x_tok.dtype)
+        v = v + lp["attn"]["bv"].astype(x_tok.dtype)
+    q = q.reshape(B, 1, hq, hd)
+    k = k.reshape(B, 1, hkv, hd)
+    v = v.reshape(B, 1, hkv, hd)
+    posb = jnp.full((B, 1), pos)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    slot = pos % W
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    # slot j holds position pos - ((pos - j) mod W); valid if <= pos (always,
+    # once written) and > pos - W (rolling window) — mask unwritten slots early.
+    j = jnp.arange(W)
+    key_pos = pos - jnp.mod(pos - j, W)
+    valid = key_pos >= jnp.maximum(0, pos - W + 1)
+    if cfg.sliding_window:
+        valid &= key_pos > pos - cfg.sliding_window
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk",
+        q.reshape(B, 1, hkv, hq // hkv, hd), k_cache).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v_cache).reshape(B, 1, hq * hd)
+    out = jnp.einsum("bse,ed->bsd", out, lp["attn"]["wo"].astype(x_tok.dtype))
+    return out, k_cache, v_cache
+
+
+def decode_step(params, cfg, cache, token, pos):
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits (B, 1, V), cache)."""
+    _, napply = _norm(cfg)
+    x = params["embed"].astype(cfg.activation_dtype)[token]
+    x = shard(x, "batch", "seq", "d_model")
+    W = cache["k"].shape[2]
+
+    def body(h, lc):
+        lp, kc, vc = lc
+        a, kc, vc = _attn_with_cache(lp, napply(lp["ln1"], h), kc, vc, pos, cfg, W)
+        h = h + a
+        y = napply(lp["ln2"], h)
+        if cfg.num_experts:
+            y = moe_decode_apply(lp["moe"], y, cfg)
+        else:
+            y = mlp_apply(lp["mlp"], y, cfg)
+        return h + y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    hidden = napply(params["final_ln"], x)
+    return logits_from_hidden(params, cfg, hidden), {"k": k_new, "v": v_new}
+
+
+def prefill(params, cfg, tokens, max_len: int):
+    """Process a full prompt, build the cache, return last-position logits.
+
+    The cache is built by re-projecting K/V from the hidden states (one fused
+    pass; equivalent to the decode path's incremental writes)."""
+    _, napply = _norm(cfg)
+    B, S = tokens.shape
+    W = cache_window(cfg, max_len)
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+    x = shard(x, "batch", "seq", "d_model")
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, lp):
+        xn = napply(lp["ln1"], h)
+        a = attention_apply(lp["attn"], xn, cfg, causal=True,
+                            sliding_window=cfg.sliding_window)
+        h2 = h + a
+        y = napply(lp["ln2"], h2)
+        if cfg.num_experts:
+            y, _ = moe_apply(lp["moe"], y, cfg)
+        else:
+            y = mlp_apply(lp["mlp"], y, cfg)
+        h_out = h2 + y
+        # rebuild this layer's K/V for the cache (last W positions)
+        k = jnp.einsum("bsd,de->bse", xn, lp["attn"]["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,de->bse", xn, lp["attn"]["wv"].astype(h.dtype))
+        if "bk" in lp["attn"]:
+            k = k + lp["attn"]["bk"].astype(h.dtype)
+            v = v + lp["attn"]["bv"].astype(h.dtype)
+        k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        if S >= W:
+            # keep positions S-W..S-1, placed at slot = position mod W
+            tail_pos = jnp.arange(S - W, S)
+            slots = jnp.mod(tail_pos, W)
+            kc = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(
+                k[:, S - W:])
+            vc = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(
+                v[:, S - W:])
+        else:
+            pad = ((0, 0), (0, W - S), (0, 0), (0, 0))
+            kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+        return h_out, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(body, x, params["layers"])
+    hidden = napply(params["final_ln"], x[:, -1:])
+    return logits_from_hidden(params, cfg, hidden), {"k": kc, "v": vc}

@@ -1,0 +1,220 @@
+"""Llama-3.2-Vision-style VLM decoder: groups of (cross_attn_every - 1)
+self-attention layers followed by one gated cross-attention layer reading a
+fixed buffer of projected image-patch embeddings.
+
+The vision encoder is a STUB per the assignment carve-out: `image_embeds`
+(B, image_tokens, d_model) arrive precomputed; only the projector + language
+decoder are real. Cross-attention K/V are position-independent and precomputed
+once at prefill — decode cost is O(1) in sequence length for those layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .layers import (NORMS, attention_apply, attention_init, dense_init,
+                     maybe_remat, mlp_apply, mlp_init, sdpa)
+from .transformer import _attn_with_cache, cache_window, layer_init, logits_from_hidden
+
+
+def _norm(cfg):
+    init, apply = NORMS[cfg.norm]
+    return init, apply
+
+
+def _xattn_layer_init(rng, cfg):
+    ninit, _ = _norm(cfg)
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": ninit(cfg.d_model, cfg.weight_dtype),
+        "xattn": attention_init(ks[0], cfg),
+        "gate_attn": jnp.zeros((), cfg.weight_dtype),
+        "ln2": ninit(cfg.d_model, cfg.weight_dtype),
+        "mlp": mlp_init(ks[1], cfg),
+        "gate_mlp": jnp.zeros((), cfg.weight_dtype),
+    }
+
+
+def _vlm_groups(cfg):
+    assert cfg.num_layers % cfg.cross_attn_every == 0
+    return cfg.num_layers // cfg.cross_attn_every
+
+
+def init_vlm(cfg, rng):
+    n_groups = _vlm_groups(cfg)
+    n_self = cfg.cross_attn_every - 1
+    ks = jax.random.split(rng, n_groups * (n_self + 1) + 3)
+    self_layers, x_layers = [], []
+    idx = 0
+    for _ in range(n_groups):
+        self_layers.append([layer_init(ks[idx + i], cfg) for i in range(n_self)])
+        idx += n_self
+        x_layers.append(_xattn_layer_init(ks[idx], cfg))
+        idx += 1
+    stack2 = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[jax.tree.map(lambda *ys: jnp.stack(ys), *g) for g in self_layers])
+    ninit, _ = _norm(cfg)
+    return {
+        "embed": dense_init(ks[-1], cfg.vocab_size, cfg.d_model,
+                            cfg.weight_dtype, scale=0.02),
+        "img_proj": dense_init(ks[-2], cfg.d_model, cfg.d_model,
+                               cfg.weight_dtype),
+        "self_groups": stack2,                      # (G, n_self, ...)
+        "xattn_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *x_layers),
+        "final_ln": ninit(cfg.d_model, cfg.weight_dtype),
+    }
+
+
+def _xattn_block(xp, h, img, cfg, napply):
+    a = attention_apply(xp["xattn"], napply(xp["ln1"], h), cfg, kv_src=img,
+                        causal=False, rope=False)
+    h = h + jnp.tanh(xp["gate_attn"]).astype(h.dtype) * a
+    y = mlp_apply(xp["mlp"], napply(xp["ln2"], h), cfg)
+    return h + jnp.tanh(xp["gate_mlp"]).astype(h.dtype) * y
+
+
+def vlm_forward(params, cfg, tokens, image_embeds, *, inputs_embeds=None,
+                causal=True):
+    from .transformer import _block
+    _, napply = _norm(cfg)
+    x = (inputs_embeds if inputs_embeds is not None
+         else params["embed"].astype(cfg.activation_dtype)[tokens])
+    x = shard(x, "batch", "seq", "d_model")
+    img = jnp.einsum("bnd,de->bne", image_embeds.astype(x.dtype),
+                     params["img_proj"].astype(x.dtype))
+
+    def self_body(h, lp):
+        h, aux = _block(lp, h, cfg, sliding_window=cfg.sliding_window,
+                        causal=causal)
+        return h, aux
+
+    def group_body(h, gp):
+        sp, xp = gp
+        h, _ = jax.lax.scan(maybe_remat(self_body, cfg), h, sp)
+        return _xattn_block(xp, h, img, cfg, napply), None
+
+    x, _ = jax.lax.scan(maybe_remat(group_body, cfg), x,
+                        (params["self_groups"], params["xattn_layers"]))
+    return napply(params["final_ln"], x), jnp.zeros((), jnp.float32)
+
+
+def _forward_embeds(params, cfg, inputs_embeds, image_embeds):
+    """Diffusion-mode entry: bidirectional, continuous inputs."""
+    return vlm_forward(params, cfg, None, image_embeds,
+                       inputs_embeds=inputs_embeds, causal=False)
+
+
+def vlm_loss(params, cfg, tokens, targets, image_embeds):
+    hidden, _ = vlm_forward(params, cfg, tokens, image_embeds)
+    logits = logits_from_hidden(params, cfg, hidden).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+
+def init_vlm_cache(cfg, batch, max_len):
+    G = _vlm_groups(cfg)
+    n_self = cfg.cross_attn_every - 1
+    W = cache_window(cfg, max_len)
+    kv = jnp.zeros((G, n_self, batch, W, cfg.num_kv_heads, cfg.head_dim),
+                   cfg.activation_dtype)
+    xkv = jnp.zeros((G, batch, cfg.image_tokens, cfg.num_kv_heads, cfg.head_dim),
+                    cfg.activation_dtype)
+    return {"k": kv, "v": kv, "img_k": xkv, "img_v": xkv}
+
+
+def _img_kv(xp, img, cfg):
+    B, T = img.shape[:2]
+    k = jnp.einsum("bnd,de->bne", img, xp["xattn"]["wk"].astype(img.dtype))
+    v = jnp.einsum("bnd,de->bne", img, xp["xattn"]["wv"].astype(img.dtype))
+    if "bk" in xp["xattn"]:
+        k = k + xp["xattn"]["bk"].astype(img.dtype)
+        v = v + xp["xattn"]["bv"].astype(img.dtype)
+    return (k.reshape(B, T, cfg.num_kv_heads, cfg.head_dim),
+            v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim))
+
+
+def vlm_prefill(params, cfg, tokens, image_embeds, max_len):
+    """Build self-attn KV caches + precompute per-layer image K/V."""
+    from .layers import apply_rope
+    _, napply = _norm(cfg)
+    B, S = tokens.shape
+    W = cache_window(cfg, max_len)
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+    img = jnp.einsum("bnd,de->bne", image_embeds.astype(x.dtype),
+                     params["img_proj"].astype(x.dtype))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def self_body(h, lp):
+        xn = napply(lp["ln1"], h)
+        a = attention_apply(lp["attn"], xn, cfg, causal=True,
+                            sliding_window=cfg.sliding_window)
+        h2 = h + a
+        h_out = h2 + mlp_apply(lp["mlp"], napply(lp["ln2"], h2), cfg)
+        k = jnp.einsum("bsd,de->bse", xn, lp["attn"]["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,de->bse", xn, lp["attn"]["wv"].astype(h.dtype))
+        k = apply_rope(k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim), pos,
+                       cfg.rope_theta)
+        v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        if S >= W:
+            slots = jnp.mod(jnp.arange(S - W, S), W)
+            kc = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, S - W:])
+            vc = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, S - W:])
+        else:
+            padw = ((0, 0), (0, W - S), (0, 0), (0, 0))
+            kc, vc = jnp.pad(k, padw), jnp.pad(v, padw)
+        return h_out, (kc, vc)
+
+    def group_body(h, gp):
+        sp, xp = gp
+        h, kv = jax.lax.scan(self_body, h, sp)
+        h = _xattn_block(xp, h, img, cfg, napply)
+        ik, iv = _img_kv(xp, img, cfg)
+        return h, (kv[0], kv[1], ik, iv)
+
+    x, (kc, vc, ik, iv) = jax.lax.scan(
+        group_body, x, (params["self_groups"], params["xattn_layers"]))
+    hidden = napply(params["final_ln"], x[:, -1:])
+    cache = {"k": kc, "v": vc, "img_k": ik, "img_v": iv}
+    return logits_from_hidden(params, cfg, hidden), cache
+
+
+def vlm_decode_step(params, cfg, cache, token, pos):
+    _, napply = _norm(cfg)
+    x = params["embed"].astype(cfg.activation_dtype)[token]
+    W = cache["k"].shape[3]
+    B = x.shape[0]
+
+    def self_body(h, lc):
+        lp, kc, vc = lc
+        a, kc, vc = _attn_with_cache(lp, napply(lp["ln1"], h), kc, vc, pos, cfg, W)
+        h = h + a
+        return h + mlp_apply(lp["mlp"], napply(lp["ln2"], h), cfg), (kc, vc)
+
+    def group_body(h, gc):
+        sp, xp, kc, vc, ik, iv = gc
+        h, (kc, vc) = jax.lax.scan(self_body, h, (sp, kc, vc))
+        # cross-attention against the fixed image K/V
+        hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        xn = napply(xp["ln1"], h)
+        q = jnp.einsum("bsd,de->bse", xn, xp["xattn"]["wq"].astype(h.dtype))
+        if "bq" in xp["xattn"]:
+            q = q + xp["xattn"]["bq"].astype(h.dtype)
+        q = q.reshape(B, 1, hq, hd)
+        o = sdpa(q, ik, iv, causal=False)
+        o = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, hq * hd),
+                       xp["xattn"]["wo"].astype(h.dtype))
+        h = h + jnp.tanh(xp["gate_attn"]).astype(h.dtype) * o
+        y = mlp_apply(xp["mlp"], napply(xp["ln2"], h), cfg)
+        h = h + jnp.tanh(xp["gate_mlp"]).astype(h.dtype) * y
+        return h, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(
+        group_body, x,
+        (params["self_groups"], params["xattn_layers"],
+         cache["k"], cache["v"], cache["img_k"], cache["img_v"]))
+    hidden = napply(params["final_ln"], x)
+    new_cache = dict(cache, k=kc, v=vc)
+    return logits_from_hidden(params, cfg, hidden), new_cache

@@ -1,0 +1,2 @@
+from .adamw import AdamW, AdamWState
+from .schedule import constant, warmup_cosine

@@ -1,0 +1,162 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+a rules table maps those to mesh axes. Outside a mesh context everything is a
+no-op, so the same model code runs in single-device smoke tests and in the
+512-chip dry-run.
+
+Two standard rule sets:
+
+* TRAIN_RULES — batch over (pod, data); FSDP: one weight dim over data;
+  tensor-parallel dims (d_ff / vocab / experts / heads) over model.
+* SERVE_RULES — batch over (pod, data); weights sharded over model only
+  (replicated over data), KV-cache batch over data, long-context KV sequence
+  over data when batch is too small to occupy the axis.
+
+Archs whose head counts don't divide the model axis simply don't annotate the
+head dim (see DESIGN.md §6); GSPMD keeps those dims replicated.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+TRAIN_RULES = {
+    "model": "model",
+    "batch": ("pod", "data"),
+    "seq": None,
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": None,          # expert weights: d_ff dim is TP; experts stacked
+    "expert_cap": ("pod", "data"),
+    "fsdp": "data",           # second weight dim (ZeRO-3 style)
+    "kv_seq": None,
+    "state": None,
+}
+
+SERVE_RULES = {
+    "model": "model",
+    "batch": ("pod", "data"),
+    "seq": None,
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": None,
+    "expert_cap": ("pod", "data"),
+    "fsdp": None,             # weights replicated over data at serve time
+    "kv_seq": None,
+    "state": None,
+}
+
+LONG_SERVE_RULES = dict(SERVE_RULES, batch=None, kv_seq=("pod", "data"))
+
+# §Perf H2: sequence parallelism — residual activations sharded over the model
+# axis along *sequence* instead of resharding d_model/d_ff per projection.
+# Weight 2D sharding (fsdp x model) stays; per-layer collectives become weight
+# all-gathers (small) instead of activation all-gathers (huge). When 'seq' and
+# a tensor dim would claim the same mesh axis in one annotation, shard() keeps
+# the first occurrence (sequence wins on the residual stream).
+SEQ_PARALLEL_TRAIN_RULES = dict(TRAIN_RULES, seq="model")
+
+# §Perf H4 (beyond the required three): decode caches for archs whose kv-head
+# count does not divide the model axis (deepseek kv=8, qwen kv=2 on 16-way TP)
+# are otherwise only batch-sharded — 119 GB/chip for deepseek decode_32k, far
+# over a v5e's 16 GB. Shard the cache *sequence* over the model axis instead
+# (kv_heads keeps precedence where it divides; _guard dedupes).
+KV_SEQ_SERVE_RULES = dict(SERVE_RULES, kv_seq="model")
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Optional[Mesh], rules: Optional[dict], drop_axes=()):
+    """Activate (mesh, rules) for `shard()` calls inside model code.
+
+    drop_axes: logical axes to force-replicate for this context (e.g. 'heads'
+    for archs whose head count doesn't divide the model axis).
+    """
+    eff = None
+    if rules is not None:
+        eff = dict(rules)
+        for ax in drop_axes:
+            eff[ax] = None
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, eff)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def logical_spec(*logical_axes) -> Optional[P]:
+    ctx = getattr(_state, "ctx", None)
+    if not ctx or ctx[1] is None:
+        return None
+    _, rules = ctx
+    return P(*[rules.get(a) if a is not None else None for a in logical_axes])
+
+
+def normalize_axes(mesh, axes):
+    """Keep only axes present in this mesh (single-pod meshes have no 'pod')."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    kept = tuple(a for a in axes if a in mesh.shape)
+    return kept or None
+
+
+def _axis_len(mesh, axes) -> int:
+    axes = normalize_axes(mesh, axes)
+    if axes is None:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard(x, *logical_axes):
+    """with_sharding_constraint by logical axis names; no-op without a context.
+
+    Axes whose mesh extent does not divide the tensor dim are dropped
+    (replicated) — this is what lets archs with awkward head counts (qwen2:
+    14 heads on a 16-way model axis) lower cleanly; see DESIGN.md §6."""
+    ctx = getattr(_state, "ctx", None)
+    if not ctx or ctx[0] is None or ctx[1] is None:
+        return x
+    mesh, rules = ctx
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    entries = []
+    used = set()
+    for dim, name in zip(x.shape, logical_axes):
+        axes = normalize_axes(mesh, rules.get(name) if name is not None else None)
+        if axes is not None:
+            axes = tuple(a for a in axes if a not in used) or None
+        if axes is not None and dim % _axis_len(mesh, axes) != 0:
+            axes = None
+        if axes is not None:
+            used.update(axes)
+        entries.append(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def named_sharding(mesh: Mesh, *logical_axes, rules: dict) -> NamedSharding:
+    return NamedSharding(
+        mesh, P(*[rules.get(a) if a is not None else None for a in logical_axes])
+    )

@@ -1,0 +1,32 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run owns the 512-device flag).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.diffusion import GaussianDPM, VPLinear  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def vp():
+    return VPLinear()
+
+
+@pytest.fixture(scope="session")
+def gaussian_dpm(vp):
+    return GaussianDPM(vp)
+
+
+@pytest.fixture(scope="session")
+def x_T():
+    return np.array([1.3, -0.2, 0.5, 0.9, -1.1], np.float64)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

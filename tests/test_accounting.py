@@ -1,0 +1,64 @@
+"""Cross-validation of the analytical accounting used in the roofline:
+active_params vs the real parameter tree, and HLO flop accounting vs the
+2ND rule on a real lowered forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze
+from repro.analysis.roofline import active_params
+from repro.configs.registry import all_arch_ids, get_config
+from repro.launch.specs import abstract_params
+
+
+def _tree_params(cfg):
+    tree = abstract_params(cfg)
+    return sum(np.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "olmo-1b", "qwen2.5-3b",
+                                  "deepseek-67b", "mamba2-780m",
+                                  "whisper-small"])
+def test_active_params_close_to_tree(arch):
+    """For non-MoE archs the analytical count must match the real tree within
+    ~10% (the tree adds the diffusion head + norms; the formula ignores them)."""
+    cfg = get_config(arch)
+    analytic = active_params(cfg)
+    real = _tree_params(cfg)
+    assert abs(real - analytic) / real < 0.10, (arch, analytic, real)
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "granite-moe-3b-a800m"])
+def test_active_params_below_total_for_moe(arch):
+    cfg = get_config(arch)
+    assert active_params(cfg) < 0.6 * _tree_params(cfg)
+
+
+def test_hlo_flops_match_2nd_rule():
+    """Lower a small dense LM forward and check HLO dot flops ~= 2*N*D
+    (+ attention quadratic term) — validates the trip-count scaling that the
+    whole roofline depends on."""
+    from repro.models import transformer
+
+    cfg = get_config("olmo-1b").reduced(num_layers=4, d_model=128, d_ff=512,
+                                        vocab_size=1024, num_heads=4,
+                                        num_kv_heads=4)
+    params = jax.eval_shape(
+        lambda r: transformer.init_lm(cfg, r), jax.random.PRNGKey(0))
+    B, S = 4, 256
+
+    def fwd(p, tokens):
+        h, _ = transformer.forward(p, cfg, tokens)
+        return transformer.logits_from_hidden(p, cfg, h)
+
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    compiled = jax.jit(fwd).lower(params, tok).compile()
+    acct = analyze(compiled.as_text(), 1)
+    # matmul params (per layer: qkvo + gelu-mlp 2*d*f; embed output matmul)
+    d, f, L, V = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.vocab_size
+    n_mat = L * (4 * d * d + 2 * d * f) + V * d
+    expect = 2 * n_mat * B * S + L * 2 * 2 * B * cfg.num_heads * S * S * (
+        d // cfg.num_heads)
+    assert abs(acct["flops"] - expect) / expect < 0.05, (acct["flops"], expect)

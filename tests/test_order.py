@@ -1,0 +1,95 @@
+"""Empirical order-of-accuracy tests on the analytic Gaussian DPM — the
+paper's central claims (Thm 3.1, Cor 3.2, Prop A.1, Prop D.5/D.6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import DDIM, DPMSolverPP, Grid, UniPC
+from repro.core.solver import CorrectorConfig
+from repro.diffusion import empirical_order
+
+MS = [20, 40, 80, 160]
+
+
+def _model(dpm, prediction):
+    if prediction == "noise":
+        return lambda x, t: dpm.eps_model(np.asarray(x, np.float64), t)
+
+    def data_model(x, t):
+        sched = dpm.schedule
+        a, s = float(sched.alpha(t)), float(sched.sigma(t))
+        return (np.asarray(x, np.float64)
+                - s * dpm.eps_model(np.asarray(x, np.float64), t)) / a
+
+    return data_model
+
+
+def _unipc_errors(dpm, x_T, order, prediction, variant, use_corrector):
+    errs = []
+    for M in MS:
+        g = Grid.build(dpm.schedule, M)
+        s = UniPC(_model(dpm, prediction), g, order=order,
+                  prediction=prediction, variant=variant,
+                  lower_order_final=False)
+        x0 = s.sample_pc(x_T, use_corrector=use_corrector)
+        ref = dpm.exact_solution(x_T, g.t[-1])
+        errs.append(float(np.max(np.abs(x0 - ref))) + 1e-300)
+    return errs
+
+
+@pytest.mark.parametrize("order,expect", [(1, 1.0), (2, 2.0), (3, 3.0)])
+@pytest.mark.parametrize("prediction", ["noise", "data"])
+def test_unip_order(gaussian_dpm, x_T, order, expect, prediction):
+    """Cor 3.2: UniP-p has order p."""
+    errs = _unipc_errors(gaussian_dpm, x_T, order, prediction, "bh2", False)
+    slope = empirical_order(errs, MS)
+    assert slope > expect - 0.35, (slope, errs)
+
+
+@pytest.mark.parametrize("order,expect", [(1, 2.0), (2, 3.0)])
+@pytest.mark.parametrize("variant", ["bh1", "bh2", "vary"])
+def test_unipc_order(gaussian_dpm, x_T, order, expect, variant):
+    """Thm 3.1: UniPC-p (predictor + corrector) has order p+1."""
+    errs = _unipc_errors(gaussian_dpm, x_T, order, "noise", variant, True)
+    slope = empirical_order(errs, MS)
+    assert slope > expect - 0.35, (slope, errs)
+
+
+def test_unic_raises_ddim_order(gaussian_dpm, x_T):
+    """Table 2 mechanism: UniC-1 after DDIM raises the measured order by ~1."""
+    slopes = {}
+    for corr in (None, CorrectorConfig(order=1, variant="bh2")):
+        errs = []
+        for M in MS:
+            g = Grid.build(gaussian_dpm.schedule, M)
+            s = DDIM(_model(gaussian_dpm, "noise"), g, prediction="noise")
+            x0 = s.sample(x_T, corrector=corr)
+            ref = gaussian_dpm.exact_solution(x_T, g.t[-1])
+            errs.append(float(np.max(np.abs(x0 - ref))) + 1e-300)
+        slopes[corr is None] = empirical_order(errs, MS)
+    assert slopes[False] > slopes[True] + 0.6, slopes
+
+
+def test_unic_improves_dpmpp(gaussian_dpm, x_T):
+    """UniC after DPM-Solver++(2M) reduces error at a fixed budget."""
+    errors = {}
+    for corr in (None, CorrectorConfig(order=2, variant="bh2")):
+        g = Grid.build(gaussian_dpm.schedule, 40)
+        s = DPMSolverPP(_model(gaussian_dpm, "data"), g, order=2)
+        x0 = s.sample(x_T, corrector=corr)
+        ref = gaussian_dpm.exact_solution(x_T, g.t[-1])
+        errors[corr is None] = float(np.max(np.abs(x0 - ref)))
+    assert errors[False] < errors[True], errors
+
+
+def test_oracle_not_worse(gaussian_dpm, x_T):
+    """Table 3: UniC-oracle (re-eval at the corrected point) >= plain UniC."""
+    res = {}
+    for oracle in (False, True):
+        g = Grid.build(gaussian_dpm.schedule, 20)
+        s = UniPC(_model(gaussian_dpm, "data"), g, order=2, prediction="data")
+        x0 = s.sample(x_T, corrector=CorrectorConfig(order=2, variant="bh2",
+                                                     oracle=oracle))
+        ref = gaussian_dpm.exact_solution(x_T, g.t[-1])
+        res[oracle] = float(np.max(np.abs(x0 - ref)))
+    assert res[True] <= res[False] * 1.5, res

@@ -1,0 +1,99 @@
+"""Unit tests for the exponential-integrator functions and UniPC coefficients."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import phi as phi_mod
+from repro.core.coeffs import (bh_value, build_unipc_schedule,
+                               default_order_schedule, unipc_weights)
+from repro.core.phi import (g_vec, phi_vec, psi, psi1_closed, psi2_closed,
+                            psi3_closed, varphi, varphi1_closed,
+                            varphi2_closed, varphi3_closed)
+
+
+@pytest.mark.parametrize("h", [0.01, 0.1, 0.4, 0.7, 2.0, 5.0])
+def test_varphi_closed_forms(h):
+    # NB: at small h the *closed forms* cancel catastrophically (that is why
+    # the implementation switches to the series) — tolerance scales with 1/h.
+    tol = 1e-10 if h >= 0.4 else 1e-6
+    np.testing.assert_allclose(varphi(1, h), varphi1_closed(h), rtol=tol)
+    np.testing.assert_allclose(varphi(2, h), varphi2_closed(h), rtol=tol)
+    np.testing.assert_allclose(varphi(3, h), varphi3_closed(h), rtol=10 * tol)
+    np.testing.assert_allclose(psi(1, h), psi1_closed(h), rtol=tol)
+    np.testing.assert_allclose(psi(2, h), psi2_closed(h), rtol=tol)
+    np.testing.assert_allclose(psi(3, h), psi3_closed(h), rtol=10 * tol)
+
+
+def test_varphi_recursion_identity():
+    # varphi_{n+1}(h) = (varphi_n(h) - 1/n!)/h (Thm 3.1) across the series/
+    # recursion switch point
+    for h in [1e-4, 0.05, 0.49, 0.51, 1.3]:
+        for n in range(0, 5):
+            lhs = varphi(n + 1, h)
+            rhs = (varphi(n, h) - 1.0 / math.factorial(n)) / h
+            np.testing.assert_allclose(lhs, rhs, rtol=1e-7, atol=1e-12)
+
+
+def test_small_h_stability():
+    # the recursion cancels catastrophically; series must stay accurate
+    for h in [1e-8, 1e-6, 1e-4]:
+        v = varphi(4, h)
+        assert abs(v - 1.0 / math.factorial(4)) < 1e-4
+        assert np.isfinite(v)
+
+
+def test_degenerate_a1_is_half():
+    # App. F: UniC-1 / UniP-2 admit a_1 = 0.5 for both B1 and B2
+    for variant in ("bh1", "bh2"):
+        for pred in ("noise", "data"):
+            w = unipc_weights(np.array([1.0]), 0.2, variant, pred,
+                              degenerate_a1=True)
+            B = bh_value(0.2, variant, pred)
+            np.testing.assert_allclose(w, [0.5 * B], rtol=1e-12)
+
+
+def test_exact_solve_b_independent():
+    # with exact Vandermonde solves, w = R^{-1} phi and B(h) cancels
+    r = np.array([-1.3, -0.6, 1.0])
+    for pred in ("noise", "data"):
+        w1 = unipc_weights(r, 0.3, "bh1", pred)
+        w2 = unipc_weights(r, 0.3, "bh2", pred)
+        np.testing.assert_allclose(w1, w2, rtol=1e-9)
+
+
+def test_vary_matches_exact_solve():
+    # UniPC_v's A = C^{-1} satisfies the same moment conditions exactly
+    r = np.array([-0.9, -0.4, 1.0])
+    for pred in ("noise", "data"):
+        wv = unipc_weights(r, 0.25, "vary", pred)
+        wb = unipc_weights(r, 0.25, "bh2", pred)
+        np.testing.assert_allclose(wv, wb, rtol=1e-8)
+
+
+def test_moment_conditions():
+    # R_p(h) a B(h) = phi_p(h) exactly for the solved systems (Eq. 5)
+    h = 0.35
+    r = np.array([-1.1, -0.5, 1.0])
+    for pred, vec in (("noise", phi_vec), ("data", g_vec)):
+        w = unipc_weights(r, h, "bh2", pred)  # w = B a / r
+        a_r = w * r  # = B a
+        R = np.vander(r * h, N=3, increasing=True).T
+        target = vec(3, h)
+        np.testing.assert_allclose(R @ a_r, target, rtol=1e-8)
+
+
+def test_default_order_schedule():
+    assert default_order_schedule(6, 3, lower_order_final=False) == [1, 2, 3, 3, 3, 3]
+    assert default_order_schedule(6, 3, lower_order_final=True) == [1, 2, 3, 3, 2, 1]
+
+
+def test_build_schedule_shapes(vp):
+    from repro.core import make_unipc_schedule
+    s = make_unipc_schedule(vp, 8, order=3, prediction="data", variant="bh2")
+    assert s.w_pred.shape == (8, 2)
+    assert s.w_corr_prev.shape == (8, 2)
+    assert s.w_corr_new.shape == (8,)
+    assert s.use_corrector[-1] == 0.0  # no corrector after the last step
+    assert np.all(np.isfinite(s.w_pred)) and np.all(np.isfinite(s.w_corr_prev))

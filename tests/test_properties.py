@@ -1,0 +1,105 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coeffs import unipc_weights
+from repro.core.phi import g_vec, phi_vec, psi, varphi
+from repro.core.solver import Grid, semilinear_base, unified_step
+from repro.diffusion import VPCosine, VPLinear, timestep_grid
+
+schedules = st.sampled_from([VPLinear(), VPCosine(),
+                             VPLinear(beta_0=0.05, beta_1=10.0)])
+
+
+@given(schedules, st.floats(1e-3, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_schedule_invariants(sched, t):
+    t = min(max(t, sched.t_eps), sched.T)
+    a = float(sched.alpha(t))
+    s = float(sched.sigma(t))
+    assert 0 < a <= 1 and 0 < s < 1
+    assert abs(a * a + s * s - 1.0) < 1e-9  # variance preserving
+    # t_of_lam inverts lam
+    lam = float(sched.lam(t))
+    t2 = float(sched.t_of_lam(lam))
+    assert abs(t2 - t) < 1e-6 * max(1.0, abs(t)) + 1e-7
+
+
+@given(schedules, st.integers(4, 40))
+@settings(max_examples=30, deadline=None)
+def test_grid_monotone(sched, M):
+    t, lam, alpha, sigma = timestep_grid(sched, M)
+    assert np.all(np.diff(t) < 0)         # time decreasing T -> eps
+    assert np.all(np.diff(lam) > 0)       # half log-SNR increasing
+    assert np.all(np.diff(alpha) > 0)     # signal grows as t -> 0
+    assert np.all(np.diff(sigma) < 0)
+
+
+@given(st.floats(1e-6, 4.0), st.integers(1, 6))
+@settings(max_examples=80, deadline=None)
+def test_phi_psi_positive_and_bounded(h, p):
+    v = float(varphi(p, h))
+    w = float(psi(p, h))
+    assert v > 0 and w > 0
+    assert w <= 1.0 / math.factorial(p - 1) + 1e-9  # psi_k(h) <= psi_k(0)
+
+
+@given(st.lists(st.floats(-3.0, -0.05).map(lambda v: round(v, 2)),
+                min_size=0, max_size=3, unique=True),
+       st.floats(0.02, 1.5), st.sampled_from(["noise", "data"]),
+       st.sampled_from(["bh1", "bh2", "vary"]))
+@settings(max_examples=120, deadline=None)
+def test_weights_finite(r_prev, h, prediction, variant):
+    # r values rounded to a 0.01 grid: near-coincident points make the
+    # Vandermonde system ill-conditioned (physically: duplicate timesteps)
+    if len(set(r_prev)) != len(r_prev):
+        return
+    r = np.array(sorted(r_prev) + [1.0])
+    w = unipc_weights(r, h, variant, prediction)
+    assert np.all(np.isfinite(w))
+    # first-moment condition: sum w_m * r_m = b_1 (exactly solved systems)
+    if len(r) > 1:
+        vec = phi_vec if prediction == "noise" else g_vec
+        b1 = float(vec(len(r), h)[0]) / h  # row 1 scaled: sum B a = phi_1/h...
+        np.testing.assert_allclose(np.sum(w * r), b1 * h, rtol=1e-6, atol=1e-9)
+
+
+@given(st.floats(-2.0, 2.0), st.floats(-1.0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_unified_step_affine_in_state(c1, c2):
+    """The unified update is affine in (x, model outputs): scaling both input
+    points scales the output (homogeneity) — a direct consequence of Eq. 3."""
+    vp = VPLinear()
+    t, lam, alpha, sigma = timestep_grid(vp, 4)
+    x = np.array([1.0, -2.0])
+    m0 = np.array([0.3, 0.1])
+    pt = (float(lam[0]), np.array([0.2, -0.4]))
+    kw = dict(lam_s=lam[1], lam_t=lam[2], alpha_s=alpha[1], alpha_t=alpha[2],
+              sigma_s=sigma[1], sigma_t=sigma[2], prediction="noise")
+    base = unified_step(x, m0, [pt], **kw)
+    scaled = unified_step(c1 * x, c1 * m0, [(pt[0], c1 * pt[1])], **kw)
+    np.testing.assert_allclose(scaled, c1 * base, rtol=1e-9, atol=1e-9)
+    # additivity
+    y = np.array([0.5, 0.25])
+    m0b = np.array([-0.1, 0.2])
+    ptb = (pt[0], np.array([0.05, 0.15]))
+    two = unified_step(x + y, m0 + m0b, [(pt[0], pt[1] + ptb[1])], **kw)
+    one_b = unified_step(y, m0b, [ptb], **kw)
+    np.testing.assert_allclose(two, base + one_b, rtol=1e-9, atol=1e-9)
+
+
+@given(st.integers(2, 64), st.integers(2, 1024), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_token_stream_deterministic_seekable(batch, vocab, idx):
+    from repro.data.synthetic import TokenStream
+    s1 = TokenStream(vocab, 16, batch % 8 + 1, seed=3)
+    s2 = TokenStream(vocab, 16, batch % 8 + 1, seed=3)
+    b1 = s1.block(idx % 1000)
+    b2 = s2.block(idx % 1000)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < vocab

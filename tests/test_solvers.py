@@ -1,0 +1,139 @@
+"""Solver equivalences and baseline behaviour (paper §3.3, Tables 2/6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (DDIM, DEIS, DPMSolverPP, DPMSolverSinglestep, PNDM,
+                        Grid, UniPC, UniPCSinglestep)
+from repro.core.solver import CorrectorConfig
+
+
+def _noise_model(dpm):
+    return lambda x, t: dpm.eps_model(np.asarray(x, np.float64), t)
+
+
+def _data_model(dpm):
+    def f(x, t):
+        sched = dpm.schedule
+        a, s = float(sched.alpha(t)), float(sched.sigma(t))
+        return (np.asarray(x, np.float64) - s * _noise_model(dpm)(x, t)) / a
+    return f
+
+
+def _err(x0, dpm, x_T, g):
+    return float(np.max(np.abs(x0 - dpm.exact_solution(x_T, g.t[-1]))))
+
+
+def test_ddim_equals_unip1(gaussian_dpm, x_T):
+    """§3.3: when p=1, UniP reduces to DDIM — exact equality."""
+    g = Grid.build(gaussian_dpm.schedule, 12)
+    d = DDIM(_noise_model(gaussian_dpm), g, prediction="noise").sample(x_T)
+    u = UniPC(_noise_model(gaussian_dpm), g, order=1,
+              prediction="noise").sample_pc(x_T, use_corrector=False)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(u), rtol=1e-12)
+
+
+def test_dpm_solver2_equals_unip2_bh2(gaussian_dpm, x_T):
+    """§3.3: DPM-Solver-2 lies in the UniPC framework as UniP-2 with
+    B(h) = e^h - 1 (singlestep, r1 = 0.5)."""
+    g = Grid.build(gaussian_dpm.schedule, 10)
+    ref = DPMSolverSinglestep(_noise_model(gaussian_dpm), g,
+                              gaussian_dpm.schedule, order=2,
+                              prediction="noise").sample(x_T)
+    uni = UniPCSinglestep(_noise_model(gaussian_dpm), g,
+                          gaussian_dpm.schedule, order=2,
+                          prediction="noise", variant="bh2").sample(x_T)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(uni), rtol=1e-7)
+
+
+@pytest.mark.parametrize("solver_key", ["ddim", "dpmpp2", "dpmpp3", "dpm3s",
+                                        "pndm", "deis"])
+def test_baselines_converge(gaussian_dpm, x_T, solver_key):
+    errs = []
+    for M in (20, 80):
+        g = Grid.build(gaussian_dpm.schedule, M)
+        if solver_key == "ddim":
+            s = DDIM(_noise_model(gaussian_dpm), g, prediction="noise")
+        elif solver_key == "dpmpp2":
+            s = DPMSolverPP(_data_model(gaussian_dpm), g, order=2)
+        elif solver_key == "dpmpp3":
+            s = DPMSolverPP(_data_model(gaussian_dpm), g, order=3)
+        elif solver_key == "dpm3s":
+            s = DPMSolverSinglestep(_noise_model(gaussian_dpm), g,
+                                    gaussian_dpm.schedule, order=3,
+                                    prediction="noise")
+        elif solver_key == "pndm":
+            s = PNDM(_noise_model(gaussian_dpm), g)
+        else:
+            s = DEIS(_noise_model(gaussian_dpm), g, gaussian_dpm.schedule,
+                     order=3)
+        errs.append(_err(s.sample(x_T), gaussian_dpm, x_T, g))
+    assert errs[1] < errs[0], (solver_key, errs)
+    assert errs[1] < 0.05, (solver_key, errs)
+
+
+@pytest.mark.parametrize("solver_key,order,pred", [
+    ("ddim", 1, "noise"), ("dpmpp2", 2, "data"), ("dpmpp3", 3, "data"),
+    ("dpm3s", 3, "noise"), ("pndm", 3, "noise"), ("deis", 3, "noise"),
+])
+def test_unic_improves_every_solver(gaussian_dpm, x_T, solver_key, order, pred):
+    """Table 2: UniC is method-agnostic — it improves each off-the-shelf
+    solver at the same grid."""
+    res = {}
+    for use_c in (False, True):
+        g = Grid.build(gaussian_dpm.schedule, 16)
+        if solver_key == "ddim":
+            s = DDIM(_noise_model(gaussian_dpm), g, prediction="noise")
+        elif solver_key == "dpmpp2":
+            s = DPMSolverPP(_data_model(gaussian_dpm), g, order=2)
+        elif solver_key == "dpmpp3":
+            s = DPMSolverPP(_data_model(gaussian_dpm), g, order=3)
+        elif solver_key == "dpm3s":
+            s = DPMSolverSinglestep(_noise_model(gaussian_dpm), g,
+                                    gaussian_dpm.schedule, order=3,
+                                    prediction="noise")
+        elif solver_key == "pndm":
+            s = PNDM(_noise_model(gaussian_dpm), g)
+        else:
+            s = DEIS(_noise_model(gaussian_dpm), g, gaussian_dpm.schedule,
+                     order=3)
+        corr = CorrectorConfig(order=order, variant="bh2") if use_c else None
+        res[use_c] = _err(s.sample(x_T, corrector=corr), gaussian_dpm, x_T, g)
+    assert res[True] < res[False], (solver_key, res)
+
+
+def test_singlestep_unipc_converges(gaussian_dpm, x_T):
+    errs = []
+    for M in (10, 40):
+        g = Grid.build(gaussian_dpm.schedule, M)
+        s = UniPCSinglestep(_noise_model(gaussian_dpm), g,
+                            gaussian_dpm.schedule, order=3,
+                            prediction="noise")
+        errs.append(_err(s.sample(x_T), gaussian_dpm, x_T, g))
+    assert errs[1] < errs[0] and errs[1] < 0.01, errs
+
+
+def test_custom_order_schedule(gaussian_dpm, x_T):
+    """Table 4 mechanism: arbitrary order schedules run and stay finite;
+    an all-max schedule is not automatically better."""
+    g = Grid.build(gaussian_dpm.schedule, 7)
+    for sched in ([1, 2, 3, 3, 3, 2, 1], [1, 2, 2, 3, 3, 3, 4],
+                  [1, 2, 3, 4, 5, 6, 7]):
+        s = UniPC(_noise_model(gaussian_dpm), g, order=max(sched),
+                  prediction="noise", order_schedule=sched)
+        x0 = s.sample_pc(x_T, use_corrector=True)
+        assert np.all(np.isfinite(np.asarray(x0))), sched
+
+
+def test_nfe_accounting(gaussian_dpm, x_T):
+    """Corrector must not add NFE (the current-step eval is re-used)."""
+    for use_c in (False, True):
+        g = Grid.build(gaussian_dpm.schedule, 9)
+        s = UniPC(_noise_model(gaussian_dpm), g, order=3, prediction="noise")
+        s.sample_pc(x_T, use_corrector=use_c)
+        assert s.model.nfe == 9, (use_c, s.model.nfe)
+    # oracle costs extra evals (Table 3's NFE caveat)
+    g = Grid.build(gaussian_dpm.schedule, 9)
+    s = UniPC(_noise_model(gaussian_dpm), g, order=3, prediction="noise")
+    s.sample(x_T, corrector=CorrectorConfig(order=3, oracle=True))
+    assert s.model.nfe > 9

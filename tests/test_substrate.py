@@ -1,0 +1,123 @@
+"""Optimizer, checkpointing, sharding helpers, HLO parser, roofline math."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze, parse_computations
+from repro.analysis.roofline import Roofline, active_params
+from repro.checkpoint import ckpt
+from repro.configs.registry import get_config
+from repro.optim import AdamW, warmup_cosine
+
+
+def test_adamw_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_warmup_cosine():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.asarray(100))) <= 0.2
+    assert float(lr(jnp.asarray(5))) == 0.5
+
+
+def test_ckpt_roundtrip():
+    tree = {"a": {"b": np.arange(12, dtype=np.float32).reshape(3, 4)},
+            "c": [np.ones((2,), np.int32), np.zeros((5,), np.float32)],
+            "d": np.float32(3.5)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, tree, step=7)
+        out, step = ckpt.restore(d)
+    assert step == 7
+    np.testing.assert_array_equal(out["a"]["b"], tree["a"]["b"])
+    np.testing.assert_array_equal(out["c"][0], tree["c"][0])
+    np.testing.assert_array_equal(out["c"][1], tree["c"][1])
+    assert float(out["d"]) == 3.5
+
+
+def test_ckpt_multi_shard():
+    tree = {f"k{i}": np.random.default_rng(i).normal(
+        size=(64, 64)).astype(np.float32) for i in range(8)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, tree, shard_mb=0)  # force one shard per array
+        assert len([f for f in os.listdir(d) if f.endswith(".npz")]) == 8
+        out, _ = ckpt.restore(d)
+    for k in tree:
+        np.testing.assert_array_equal(out[k], tree[k])
+
+
+def test_shard_noop_without_context():
+    from repro.parallel.sharding import shard
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", "d_model") is x
+
+
+def test_hlo_trip_count_scaling():
+    """flops of a 12-iteration scan == 12x the single matmul."""
+    def step(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    w = jnp.ones((12, 64, 64))
+    x = jnp.ones((8, 64))
+    compiled = jax.jit(step).lower(w, x).compile()
+    acct = analyze(compiled.as_text(), 1)
+    expect = 12 * 2 * 8 * 64 * 64
+    assert abs(acct["flops"] - expect) / expect < 0.05, acct["flops"]
+
+
+def test_hlo_collectives_detected():
+    """A psum across 1-device 'mesh' compiles away; check parser on text with
+    a synthetic all-reduce line instead."""
+    text = """
+HloModule m
+
+ENTRY %main.1 (p: f32[128,256]) -> f32[128,256] {
+  %p = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(%p), replica_groups=[2,8]<=[16], to_apply=%add.1
+  ROOT %r = f32[128,256]{1,0} copy(%ar)
+}
+"""
+    acct = analyze(text, 16)
+    b = 128 * 256 * 4
+    assert abs(acct["collectives"]["all-reduce"] - 2 * (7 / 8) * b) < 1.0
+
+
+def test_roofline_bottleneck():
+    r = Roofline(flops=1e15, hbm_bytes=1e12, collective_bytes=1e9, chips=256,
+                 model_flops=6e14)
+    assert r.compute_s > 0 and r.memory_s > 0 and r.collective_s > 0
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 < r.useful_flops_ratio < 1
+
+
+def test_active_params_moe_less_than_total():
+    moe = get_config("mixtral-8x7b")
+    act = active_params(moe)
+    # top-2 of 8 experts: active far below the ~46B total
+    assert 1e10 < act < 2e10
+
+
+def test_param_sharding_inference():
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import abstract_params, param_shardings
+    from repro.parallel.sharding import TRAIN_RULES
+    cfg = get_config("olmo-1b").reduced()
+    mesh = make_host_mesh()
+    p_abs = abstract_params(cfg)
+    sh = param_shardings(p_abs, mesh, TRAIN_RULES)
+    assert jax.tree.structure(sh) == jax.tree.structure(p_abs)
