@@ -20,6 +20,38 @@ def _chain_update(terms, weights):
     return out
 
 
+# The eager op-chain schedule, one jitted kernel per op — how reference
+# implementations (and any eager framework) execute the update. Jitting the
+# whole chain at once would let XLA fuse it into a single pass (CPU XLA even
+# strips optimization_barrier), so the multi-pass schedule has to be pinned
+# at the dispatch boundary, exactly where eager frameworks pin it.
+_opchain_mul = jax.jit(lambda t0, w0: w0 * t0)
+_opchain_axpy = jax.jit(lambda acc, tk, wk: acc + wk * tk)
+
+
+def _opchain_run(ts, w):
+    """ts: list of K per-term arrays; returns sum_k w[k] * ts[k] eagerly."""
+    out = _opchain_mul(ts[0], w[0])
+    for k in range(1, len(ts)):
+        out = _opchain_axpy(out, ts[k], w[k])
+    return out
+
+
+def _opchain_bytes(shape, dtype):
+    """Measured HBM bytes of the eager schedule: sum of the per-op HLO
+    accounting over the K dispatches ((3K-1) full-state arrays). The weight
+    scalar carries the term dtype — a strong-typed f32 scalar would promote
+    the whole chain to f32 (eager frameworks keep the tensor dtype)."""
+    K = shape[0]
+    a_t = jax.ShapeDtypeStruct(shape[1:], dtype)
+    a_w = jax.ShapeDtypeStruct((), dtype)
+    total = analyze(_opchain_mul.lower(a_t, a_w).compile().as_text(), 1)[
+        "hbm_bytes"]
+    axpy = analyze(_opchain_axpy.lower(a_t, a_t, a_w).compile().as_text(), 1)[
+        "hbm_bytes"]
+    return total + (K - 1) * axpy
+
+
 def kernel_unipc_update():
     for K, n in ((4, 1 << 20), (5, 1 << 22), (7, 1 << 22)):
         terms = jax.ShapeDtypeStruct((K, n), jnp.bfloat16)
@@ -32,6 +64,46 @@ def kernel_unipc_update():
         emit(f"kernels/unipc_update/K{K}_n{n}", 0.0,
              f"chain_bytes={chain_bytes:.3e};single_pass={ideal:.3e};"
              f"ratio={chain_bytes/ideal:.2f}")
+
+
+# Production sampling-state shapes (batch, tokens, latent_dim) of the two
+# paper workloads — see src/repro/configs/{dit_cifar,dit_i256}.py.
+LATENT_SHAPES = (
+    ("dit-cifar", (64, 64, 48)),
+    ("dit-i256", (32, 256, 32)),
+)
+
+
+def kernel_unipc_update_latents():
+    """Fused-vs-opchain at the paper's sampling shapes: HBM bytes of the
+    lowered op-chain (trip-scaled HLO accounting) vs the kernel's single-pass
+    schedule, plus wall-clock of both dispatched paths. K = order + 2 = 5 is
+    the UniC-3 combine, the widest update on the default settings. The byte
+    ratio is the measured form of the (3K-1)/(K+1)x claim in DESIGN.md §4."""
+    from repro.kernels.unipc_update import ops as uops
+
+    K = 5
+    for name, (B, T, C) in LATENT_SHAPES:
+        for dtype, isize in ((jnp.float32, 4), (jnp.bfloat16, 2)):
+            shape = (K, B, T, C)
+            chain_bytes = _opchain_bytes(shape, dtype)
+            fused_bytes = (K + 1) * B * T * C * isize
+            t = jax.random.normal(jax.random.PRNGKey(0), shape,
+                                  jnp.float32).astype(dtype)
+            w = jax.random.normal(jax.random.PRNGKey(1), (K,), jnp.float32)
+            ts = [t[k] for k in range(K)]
+            ws = [w[k].astype(dtype) for k in range(K)]  # keep the chain in dtype
+            fused_fn = jax.jit(uops.weighted_combine)
+            jax.block_until_ready(_opchain_run(ts, ws))
+            jax.block_until_ready(fused_fn(t, w))
+            _, us_chain = timed(
+                lambda: jax.block_until_ready(_opchain_run(ts, ws)))
+            _, us_fused = timed(lambda: jax.block_until_ready(fused_fn(t, w)))
+            dt = "f32" if dtype == jnp.float32 else "bf16"
+            emit(f"kernels/unipc_update/{name}_{dt}", us_fused,
+                 f"opchain_bytes={chain_bytes:.3e};fused_bytes={fused_bytes:.3e};"
+                 f"traffic_ratio={chain_bytes/fused_bytes:.2f};"
+                 f"opchain_us={us_chain:.1f};fused_us={us_fused:.1f}")
 
 
 def kernel_flash_attention():

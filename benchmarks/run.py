@@ -25,6 +25,7 @@ def main() -> None:
         "fig4": bench_figs.fig4_guided,
         "free_oracle": bench_figs.free_oracle_study,
         "kernels": lambda: (bench_kernels.kernel_unipc_update(),
+                            bench_kernels.kernel_unipc_update_latents(),
                             bench_kernels.kernel_flash_attention(),
                             bench_kernels.kernel_correctness_timing()),
         "roofline": bench_roofline.roofline_table,

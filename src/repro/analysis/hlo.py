@@ -51,7 +51,7 @@ _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
 _BOOKKEEPING = {
     "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
-    "after-all", "partition-id", "replica-id", "iota",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
 }
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",

@@ -1,6 +1,6 @@
 """dit-cifar — paper-native unconditional CIFAR10-scale pixel diffusion
 backbone (stand-in for the ScoreSDE DDPM++ checkpoint the paper samples;
-DESIGN.md §4). 8 blocks, d_model=384, 64 tokens of dim 48 (= 4x4 patches of
+DESIGN.md §6). 8 blocks, d_model=384, 64 tokens of dim 48 (= 4x4 patches of
 32x32x3 pixels). [Song et al. 2021b for the setting]."""
 
 from .base import ModelConfig

@@ -1,5 +1,5 @@
 """dit-i256 — paper-native conditional ImageNet-256 latent diffusion backbone
-(TPU adaptation of the paper's ADM UNet; DESIGN.md §4). DiT-XL/2 geometry:
+(TPU adaptation of the paper's ADM UNet; DESIGN.md §6). DiT-XL/2 geometry:
 28 blocks, d_model=1152, 16 heads, 256 latent patch tokens of dim 32
 (= 2x2 patches of a 32x32x8 latent). [Peebles & Xie 2023; Dhariwal & Nichol
 2021 for the guided-sampling setting the paper evaluates]."""

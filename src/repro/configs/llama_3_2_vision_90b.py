@@ -4,7 +4,7 @@ buffer of projected image-patch embeddings (ViT encoder STUBBED).
 [hf:meta-llama/Llama-3.2-11B-Vision, scaled per assignment]
 
 long_500k runs with sliding_window=8192 on the self-attn layers; cross-attn
-reads the fixed image buffer (O(1) in sequence length). DESIGN.md §3."""
+reads the fixed image buffer (O(1) in sequence length). DESIGN.md §7.2."""
 
 from .base import ModelConfig
 

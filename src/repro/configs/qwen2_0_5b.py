@@ -2,7 +2,7 @@
 QKV bias, tied embeddings. [arXiv:2407.10671]
 
 14 heads / kv=2 do not divide a 16-way model axis -> head dims replicated on
-'model' (DESIGN.md §6); d_ff=4864=16*304 and vocab shard fine."""
+'model' (DESIGN.md §7.3); d_ff=4864=16*304 and vocab shard fine."""
 
 from .base import ModelConfig
 

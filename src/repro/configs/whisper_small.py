@@ -2,7 +2,7 @@
 d_model=768 12H d_ff=3072 vocab=51865; conv/mel frontend STUBBED — the
 input_specs provide 1500 precomputed frame embeddings. [arXiv:2212.04356]
 
-long_500k is SKIPPED for this arch (enc-dec full cross-attention; DESIGN.md §3)."""
+long_500k is SKIPPED for this arch (enc-dec full cross-attention; DESIGN.md §7.2)."""
 
 from .base import ModelConfig
 

@@ -5,7 +5,7 @@ vocab=32000, ssm_state=64. [arXiv:2411.15242]
 Note: the released checkpoints add per-invocation LoRA deltas to the shared
 block and concatenate the original embedding into the attention input; both
 are omitted here (parameter sharing itself is the architectural feature).
-long_500k uses sliding_window=8192 on the shared attention (DESIGN.md §3)."""
+long_500k uses sliding_window=8192 on the shared attention (DESIGN.md §7.2)."""
 
 from .base import ModelConfig
 

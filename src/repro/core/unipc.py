@@ -9,7 +9,8 @@ Three implementations, all sharing the coefficient machinery in `coeffs.py`:
   r in (0,1), lower-order estimates for the inner points.
 * `unipc_sample_scan` — the production path: all coefficients are a static
   per-step table, the whole sampler is one `lax.scan` that jits, shards, and
-  (optionally) routes the state update through the fused Pallas kernel.
+  routes the state update through the fused Pallas kernel by default
+  (`fused_update=True`; the dispatch policy lives in `kernels.unipc_update.ops`).
 """
 
 from __future__ import annotations
@@ -159,7 +160,7 @@ def unipc_sample_scan(
     x_T: jnp.ndarray,
     sched: UniPCSchedule,
     *,
-    fused_update: bool = False,
+    fused_update: bool = True,
     dtype=jnp.float32,
 ):
     """Multistep UniPC as a single lax.scan over a static coefficient table.
@@ -169,6 +170,12 @@ def unipc_sample_scan(
     zero-padded weight rows, so the scan body is shape-static and jit/pjit-able.
     One model eval per step (the corrector re-uses it). NFE = M - 1 + (1 if the
     schedule keeps the last eval, see coeffs.build_unipc_schedule).
+
+    fused_update=True (the default) routes the K-term state combine through
+    `kernels.unipc_update`: the single-pass Pallas kernel on TPU, an
+    XLA-fused fp32 axpy chain elsewhere — equivalent to fused_update=False
+    on CPU to <=1e-5 at fp32 (DESIGN.md §4-§5). fused_update=False pins the
+    inline jnp tensordot form, kept as the reference for equivalence tests.
     """
     order = sched.order
     K = max(1, order - 1)
@@ -220,7 +227,7 @@ def unipc_sample_scan(
     return x
 
 
-def sample_step_fn(sched: UniPCSchedule, fused_update: bool = False):
+def sample_step_fn(sched: UniPCSchedule, fused_update: bool = True):
     """Return a closure suitable for jit/lower in the dry-run: one full UniPC
     sampling trajectory given (params -> model_fn factory) handled by caller."""
     return partial(unipc_sample_scan, sched=sched, fused_update=fused_update)

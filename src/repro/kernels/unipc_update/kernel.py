@@ -2,14 +2,21 @@
 
 The UniPC step is x_next = sum_k w_k * term_k over K = order+2 tensors (the
 previous state, the anchor model output, and the difference buffer). The
-reference implementations execute this as a chain of ~K pointwise ops, i.e.
-K+1 HBM round-trips of the full state; at sampling time the state is the
-entire image/latent batch, so the update is purely memory-bound. This kernel
-streams each VMEM tile of all K terms once and writes the result once:
-(K+1)/2x less HBM traffic than the op-chain (DESIGN.md §4).
+reference implementations execute this as a chain of K pointwise ops, each a
+separate kernel launch streaming the full state through HBM: 3K-1 full-state
+arrays of traffic (K term reads, K-1 accumulator re-reads, K writes). At
+sampling time the state is the entire image/latent batch, so the update is
+purely memory-bound. This kernel streams each VMEM tile of all K terms once
+and writes the result once — K+1 arrays, a (3K-1)/(K+1)x traffic reduction
+(2.3x at the default order-3 K=5, approaching 3x with order; measured in
+benchmarks/bench_kernels.py, argument in DESIGN.md §4).
 
-Layout: terms (K, N) fp32/bf16, weights (K,) fp32 broadcast from SMEM-like
-small VMEM block; grid over N tiles; TILE is a multiple of 128 lanes.
+Layout: terms (K, B, N) fp32/bf16 with N = flattened per-sample size, weights
+(K,) fp32 broadcast from a small VMEM block; 2D grid (B, N tiles) so batched
+states tile directly, no flat copy. TILE is a multiple of 128 lanes; arbitrary
+N is handled by the boundary tile — Pallas pads the load and masks the store
+for blocks that overrun the array, so no host-side padding of the state is
+needed. Accumulation is always fp32, also for bf16 terms (DESIGN.md §4.2).
 """
 
 from __future__ import annotations
@@ -20,30 +27,42 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE = 16 * 128  # (sublane, lane)-aligned flat tile
+TILE = 16 * 128  # (sublane, lane)-aligned flat tile, valid for fp32 and bf16
 
 
 def _kernel(w_ref, t_ref, o_ref):
-    # t_ref: (K, TILE); w_ref: (K, 1); o_ref: (TILE,)
-    acc = jnp.zeros((t_ref.shape[1],), jnp.float32)
+    # t_ref: (K, 1, TILE); w_ref: (K, 1); o_ref: (1, TILE)
+    acc = jnp.zeros((1, t_ref.shape[2]), jnp.float32)
     for k in range(t_ref.shape[0]):  # K is static and small (order + 2)
-        acc = acc + w_ref[k, 0] * t_ref[k, :].astype(jnp.float32)
-    o_ref[:] = acc.astype(o_ref.dtype)
+        acc = acc + w_ref[k, 0] * t_ref[k, :, :].astype(jnp.float32)
+    o_ref[:, :] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def fused_combine_flat(terms, weights, interpret: bool = True):
-    """terms: (K, N) with N % TILE == 0; weights: (K,). Returns (N,)."""
-    K, N = terms.shape
-    grid = (N // TILE,)
+def fused_combine_batched(terms, weights, interpret: bool = False):
+    """terms: (K, B, N) with arbitrary N; weights: (K,). Returns (B, N).
+
+    Grid is (B, ceil(N / TILE)); the last column of the grid is a padded
+    remainder tile whose out-of-bounds lanes Pallas masks on store.
+    """
+    K, B, N = terms.shape
+    grid = (B, pl.cdiv(N, TILE))
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((K, 1), lambda i: (0, 0)),
-            pl.BlockSpec((K, TILE), lambda i: (0, i)),
+            pl.BlockSpec((K, 1), lambda b, i: (0, 0)),
+            pl.BlockSpec((K, 1, TILE), lambda b, i: (0, b, i)),
         ],
-        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((N,), terms.dtype),
+        out_specs=pl.BlockSpec((1, TILE), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, N), terms.dtype),
         interpret=interpret,
     )(weights.reshape(K, 1).astype(jnp.float32), terms)
+
+
+def fused_combine_flat(terms, weights, interpret: bool = False):
+    """terms: (K, N), arbitrary N; weights: (K,). Returns (N,)."""
+    K, N = terms.shape
+    return fused_combine_batched(
+        terms.reshape(K, 1, N), weights, interpret=interpret
+    ).reshape(N)

@@ -1,4 +1,19 @@
-"""Jit'd public wrapper: shape plumbing + TPU/interpret dispatch + fallback."""
+"""Public wrapper for the fused UniPC update: backend dispatch + shape plumbing.
+
+Three backends (DESIGN.md §5):
+
+* ``"pallas"``    — the compiled Pallas kernel; the production path on TPU.
+* ``"interpret"`` — the same kernel under the Pallas interpreter; correct on
+  any platform, slow; used for cross-platform kernel testing.
+* ``"jnp"``       — a pure-jnp fp32 axpy chain that XLA fuses into a single
+  pass; the right default off-TPU. (Not a ``tensordot``: that lowers to a
+  gemm, measured ~2.8x slower on CPU at serving shapes — DESIGN.md §5. The
+  tensordot form survives as the test oracle in `ref.py`.)
+
+`select_backend` encodes the policy; `weighted_combine` applies it. Callers
+can pin a backend explicitly (tests, benchmarks) or let the dispatcher choose
+by platform and shape.
+"""
 
 from __future__ import annotations
 
@@ -6,26 +21,65 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .kernel import TILE, fused_combine_flat
+from .kernel import TILE, fused_combine_batched, fused_combine_flat  # noqa: F401
+
+BACKENDS = ("pallas", "interpret", "jnp")
 
 
-def weighted_combine(terms, weights, force_pallas: bool = False):
-    """terms: (K, *shape); weights: (K,). Fused on TPU (or in interpret mode
-    when forced); falls back to the jnp oracle elsewhere — XLA fuses that path
-    reasonably, the Pallas kernel guarantees the single-pass schedule."""
-    on_tpu = jax.default_backend() == "tpu"
-    if not (on_tpu or force_pallas):
-        return ref.weighted_combine(terms, weights)
-    K = terms.shape[0]
+def _jnp_combine(terms, weights):
+    """Unrolled fp32 axpy chain (K is static and small). XLA fuses this into
+    one pass over the state — the same schedule the Pallas kernel encodes."""
+    w = weights.astype(jnp.float32)
+    acc = w[0] * terms[0].astype(jnp.float32)
+    for k in range(1, terms.shape[0]):
+        acc = acc + w[k] * terms[k].astype(jnp.float32)
+    return acc.astype(terms.dtype)
+
+
+def select_backend(n: int, platform: str | None = None) -> str:
+    """Pick the backend for a per-sample flat size `n` on `platform`.
+
+    TPU gets the compiled kernel unless the state is smaller than one tile —
+    sub-tile launches waste the masked remainder lanes and the op is cheaper
+    to leave to XLA. Everything else gets the jnp oracle: without Mosaic there
+    is no compiled Pallas, and the interpreter is strictly for testing.
+    """
+    platform = platform or jax.default_backend()
+    if platform == "tpu" and n >= TILE:
+        return "pallas"
+    return "jnp"
+
+
+def weighted_combine(terms, weights, backend: str | None = None,
+                     force_pallas: bool = False):
+    """terms: (K, *shape); weights: (K,). Returns sum_k w_k * terms[k].
+
+    shape may be anything; for batched states (B, ...) the kernel runs on a
+    (B, N-tiles) grid over the (K, B, N) view — a reshape of contiguous
+    trailing dims, never a flat copy of the whole batch. `backend` pins one of
+    BACKENDS; `force_pallas` (kept for tests/benchmarks) means "run the kernel
+    even off-TPU", i.e. compiled on TPU, interpreted elsewhere.
+    """
     shape = terms.shape[1:]
-    n = 1
-    for s in shape:
-        n *= s
-    pad = (-n) % TILE
-    flat = terms.reshape(K, n)
-    if pad:
-        flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    out = fused_combine_flat(flat, weights, interpret=not on_tpu)
-    if pad:
-        out = out[:n]
+    K = terms.shape[0]
+    if backend is None:
+        if force_pallas:
+            backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+        else:
+            n = 1
+            for s in (shape[1:] if len(shape) >= 2 else shape):
+                n *= s
+            backend = select_backend(n)
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "jnp":
+        return _jnp_combine(terms, weights)
+    interpret = backend == "interpret"
+    if len(shape) >= 2:
+        B = shape[0]
+        out = fused_combine_batched(
+            terms.reshape(K, B, -1), weights, interpret=interpret)
+    else:
+        out = fused_combine_flat(
+            terms.reshape(K, -1), weights, interpret=interpret)
     return out.reshape(shape)

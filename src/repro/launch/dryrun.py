@@ -37,14 +37,14 @@ from .mesh import make_production_mesh
 from .specs import (abstract_cache, abstract_params, batch_shardings,
                     cache_shardings, input_specs, param_shardings)
 
-# (arch, shape) pairs that do not lower, with the reason (DESIGN.md §3)
+# (arch, shape) pairs that do not lower, with the reason (DESIGN.md §7.2)
 SKIPS = {
     ("whisper-small", "long_500k"):
         "enc-dec full cross-attention; no sub-quadratic decode variant",
 }
 
 # long-context overrides: dense/moe/vlm/hybrid archs get a sliding window so
-# long_500k decode is sub-quadratic with an O(window) cache (DESIGN.md §3)
+# long_500k decode is sub-quadratic with an O(window) cache (DESIGN.md §7.2)
 LONG_SWA_WINDOW = 8192
 
 
@@ -240,7 +240,7 @@ def run_one(arch, shape_name, mesh_kind, objective="ar", out_dir=None,
 
 
 def run_sample_workload(arch="dit-i256", mesh_kind="single", batch=256,
-                        nfe=10, order=3, out_dir=None):
+                        nfe=10, order=3, out_dir=None, fused_update=True):
     """Beyond the assigned 40 pairs: lower the paper's production workload —
     a full UniPC sampling trajectory (one lax.scan over the static coefficient
     table, one eps-net eval per step) — on the production mesh."""
@@ -262,6 +262,7 @@ def run_sample_workload(arch="dit-i256", mesh_kind="single", batch=256,
             return ((x.astype(jnp.float32) - sg * eps.astype(jnp.float32))
                     / a).astype(x.dtype)
         return unipc_sample_scan(data_model, x_T, sched,
+                                 fused_update=fused_update,
                                  dtype=cfg.activation_dtype)
 
     rules = SERVE_RULES

@@ -41,7 +41,7 @@ def latent_shape(cfg, batch):
 
 def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
            variant="bh2", prediction="data", batch=4, seed=0,
-           params=None, use_scan=False):
+           params=None, use_scan=False, fused_update=True):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -59,7 +59,7 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
     if use_scan and solver == "unipc":
         us = make_unipc_schedule(schedule, nfe, order=order,
                                  prediction=prediction, variant=variant)
-        x0 = unipc_sample_scan(model, x_T, us)
+        x0 = unipc_sample_scan(model, x_T, us, fused_update=fused_update)
         nfe_used = nfe + 1  # the scan evaluates the final step's eps too
     else:
         grid_steps = nfe if solver in ("unipc", "ddim", "dpmpp", "pndm",
@@ -107,7 +107,13 @@ def main():
     ap.add_argument("--prediction", default="data", choices=["data", "noise"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--scan", action="store_true")
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-fused-update", action="store_true",
+                    help="pin the inline jnp op-chain combine in the scan "
+                         "sampler (default: fused kernel dispatch)")
+    scale = ap.add_mutually_exclusive_group()
+    scale.add_argument("--reduced", action="store_true",
+                       help="reduced CPU-scale config (the default)")
+    scale.add_argument("--full", action="store_true")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     params = None
@@ -117,7 +123,7 @@ def main():
     sample(args.arch, reduced=not args.full, solver=args.solver,
            order=args.order, nfe=args.nfe, variant=args.variant,
            prediction=args.prediction, batch=args.batch, params=params,
-           use_scan=args.scan)
+           use_scan=args.scan, fused_update=not args.no_fused_update)
 
 
 if __name__ == "__main__":

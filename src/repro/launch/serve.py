@@ -1,8 +1,13 @@
-"""Batched serving loop: prefill a batch of prompts, then greedy/temperature
-decode with the per-family cache. CPU-runnable at reduced scale.
+"""Batched serving loop. Token models: prefill a batch of prompts, then
+greedy/temperature decode with the per-family cache. Diffusion models (dit
+family): one request = one latent to generate, the whole batch rides a single
+jitted UniPC scan sampler with the fused state update (DESIGN.md §3-§4).
+CPU-runnable at reduced scale.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 4 --prompt-len 32 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --arch dit-cifar --reduced \
+        --batch 8 --nfe 10
 """
 
 from __future__ import annotations
@@ -15,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.registry import get_config
-from ..data.synthetic import TokenStream, stub_embeds
+from ..data.synthetic import TokenStream, class_ids, stub_embeds
 from ..models import api
 
 
@@ -67,6 +72,43 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, gen=32,
     return out
 
 
+def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
+                    fused_update=True, seed=0):
+    """Diffusion batch-serving: sample `batch` latents in one jitted UniPC
+    scan (one eps-net eval per step for the whole batch). The fused-update
+    choice is threaded straight to `unipc_sample_scan`; on TPU it selects the
+    single-pass Pallas combine, the hot path of the memory-bound update."""
+    from ..core import make_unipc_schedule, unipc_sample_scan
+    from ..diffusion import VPLinear, wrap_model
+
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    rng = jax.random.PRNGKey(seed)
+    params = api.init_params(cfg, rng)
+    schedule = VPLinear()
+    net = api.eps_network(cfg)
+    extra = {"class_ids": jnp.asarray(class_ids(batch, seed=seed))}
+    eps = jax.jit(lambda x, t: net(params, x, jnp.asarray(t, jnp.float32),
+                                   extra))
+    model = wrap_model(schedule, eps, "data")
+    us = make_unipc_schedule(schedule, nfe, order=order, prediction="data")
+    run = jax.jit(lambda x: unipc_sample_scan(model, x, us,
+                                              fused_update=fused_update))
+    x_T = jax.random.normal(rng, (batch, cfg.patch_tokens, cfg.latent_dim),
+                            jnp.float32)
+    t0 = time.time()
+    out = jax.block_until_ready(run(x_T))  # includes compile
+    compile_s = time.time() - t0
+    t0 = time.time()
+    out = jax.block_until_ready(run(x_T))
+    serve_s = time.time() - t0
+    print(f"diffusion batch={batch} nfe={nfe} order={order} "
+          f"fused_update={fused_update}: compile {compile_s:.2f}s, "
+          f"serve {serve_s*1e3:.1f} ms ({serve_s/batch*1e3:.2f} ms/latent)")
+    return np.asarray(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -74,8 +116,22 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--nfe", type=int, default=10,
+                    help="diffusion serving: sampler steps")
+    ap.add_argument("--order", type=int, default=3,
+                    help="diffusion serving: UniPC order")
+    ap.add_argument("--no-fused-update", action="store_true",
+                    help="diffusion serving: pin the jnp op-chain combine")
+    scale = ap.add_mutually_exclusive_group()
+    scale.add_argument("--reduced", action="store_true",
+                       help="reduced CPU-scale config (the default)")
+    scale.add_argument("--full", action="store_true")
     args = ap.parse_args()
+    if get_config(args.arch).family == "dit":
+        serve_diffusion(args.arch, reduced=not args.full, batch=args.batch,
+                        nfe=args.nfe, order=args.order,
+                        fused_update=not args.no_fused_update)
+        return
     serve(args.arch, reduced=not args.full, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,
           temperature=args.temperature)

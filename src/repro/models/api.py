@@ -12,7 +12,7 @@ dry-run, tests, and benchmarks are family-agnostic:
 `batch` is a dict: tokens/targets always; image_embeds (vlm), audio_embeds
 (audio), latents (dit). The diffusion objective implements embedding-space
 diffusion-LM (Li et al., 2022-style: learned token latents + eps-loss +
-rounding CE) — the vehicle for UniPC on every backbone (DESIGN.md §3).
+rounding CE) — the vehicle for UniPC on every backbone (DESIGN.md §7.1).
 """
 
 from __future__ import annotations

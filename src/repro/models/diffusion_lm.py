@@ -1,10 +1,10 @@
 """Diffusion-LM head: turns any backbone into the eps-network of a continuous
 diffusion process over a latent sequence (B, S, latent_dim) — the vehicle for
-applying UniPC to every assigned architecture family (DESIGN.md §3).
+applying UniPC to every assigned architecture family (DESIGN.md §7.1).
 
 The backbone runs WITHOUT a causal mask where the family permits (attention
 archs denoise bidirectionally); SSM/hybrid backbones stay causal by
-construction (noted in DESIGN.md). Conditioning: sinusoidal lambda(t) features
+construction (noted in DESIGN.md §7.1). Conditioning: sinusoidal lambda(t) features
 added to the input projection (FiLM-light — sufficient for an eps-net; the
 heavy adaLN variant lives in dit.py).
 """

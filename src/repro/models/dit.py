@@ -1,4 +1,4 @@
-"""DiT — the paper-native epsilon-network, TPU-adapted (DESIGN.md §4: the
+"""DiT — the paper-native epsilon-network, TPU-adapted (DESIGN.md §7.1: the
 paper's UNet checkpoints are CNNs; on TPU the standard diffusion backbone is a
 patch transformer with adaLN-zero time conditioning, Peebles & Xie 2023).
 

@@ -4,7 +4,7 @@ Dispatch is scatter-based (position-in-expert via cumsum) into per-expert
 buffers (E, C, d_model) with C = ceil(k * N / E * capacity_factor); dropped
 tokens fall through the residual connection. Expert FFNs run as one einsum
 over stacked expert weights — tensor-parallel over the per-expert hidden on
-the 'model' mesh axis, expert capacity sharded over 'data' (see DESIGN.md:
+the 'model' mesh axis, expert capacity sharded over 'data' (see DESIGN.md §7.3:
 this sidesteps expert-count divisibility — mixtral has 8 experts, granite 40,
 neither divides a 16-way model axis).
 

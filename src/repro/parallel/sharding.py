@@ -12,7 +12,7 @@ Two standard rule sets:
   over data when batch is too small to occupy the axis.
 
 Archs whose head counts don't divide the model axis simply don't annotate the
-head dim (see DESIGN.md §6); GSPMD keeps those dims replicated.
+head dim (see DESIGN.md §7.3); GSPMD keeps those dims replicated.
 """
 
 from __future__ import annotations
@@ -135,7 +135,7 @@ def shard(x, *logical_axes):
 
     Axes whose mesh extent does not divide the tensor dim are dropped
     (replicated) — this is what lets archs with awkward head counts (qwen2:
-    14 heads on a 16-way model axis) lower cleanly; see DESIGN.md §6."""
+    14 heads on a 16-way model axis) lower cleanly; see DESIGN.md §7.3."""
     ctx = getattr(_state, "ctx", None)
     if not ctx or ctx[0] is None or ctx[1] is None:
         return x

@@ -5,7 +5,7 @@ measured with the paper's own convergence-error metric)."""
 import numpy as np
 import pytest
 
-from repro.launch.serve import serve
+from repro.launch.serve import serve, serve_diffusion
 from repro.launch.train import train
 
 
@@ -33,10 +33,27 @@ def test_serve_emits_tokens():
     assert out.dtype in (np.int32, np.int64)
 
 
+def test_serve_diffusion_emits_latents():
+    """The dit serving path: a request batch rides one UniPC scan, both with
+    the fused-update dispatch (the default) and with it pinned off."""
+    outs = [serve_diffusion("dit-cifar", reduced=True, batch=2, nfe=4,
+                            fused_update=f) for f in (True, False)]
+    for out in outs:
+        assert out.shape[0] == 2 and np.isfinite(out).all()
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.slow
 def test_unipc_beats_ddim_on_trained_model(tmp_path):
     """Fig. 4c methodology: l2 distance to a fine-grid reference, UniPC-3 vs
-    DDIM at NFE=8 on a (briefly) trained DiT."""
+    DDIM at NFE=8 on a (briefly) trained DiT.
+
+    The training budget matters: at 40 steps the eps-net is still near its
+    random init, both solvers' errors are dominated by the rough model rather
+    than discretization, and they tie (observed ratio ~1.001 — the seed-state
+    flake). At 120 steps the model is smooth enough for solver order to show:
+    observed unipc/ddim error ratio ~0.73 on this fixed seed, so the 0.9
+    assertion bound has a comfortable deterministic margin."""
     import jax
     import jax.numpy as jnp
     from repro.configs.registry import get_config
@@ -46,7 +63,7 @@ def test_unipc_beats_ddim_on_trained_model(tmp_path):
     from repro.models import api
 
     params, _ = _train("dit-cifar", reduced=True, objective="diffusion",
-                       steps=40, batch=8, seq=32, lr=1e-3, log_every=50)
+                       steps=120, batch=8, seq=32, lr=1e-3, log_every=50)
     cfg = get_config("dit-cifar").reduced()
     sched = VPLinear()
     net = api.eps_network(cfg)
@@ -66,4 +83,4 @@ def test_unipc_beats_ddim_on_trained_model(tmp_path):
     u = UniPC(model, Grid.build(sched, 8), order=3, prediction="data")
     errs["unipc"] = np.linalg.norm(
         np.asarray(u.sample_pc(x_T, use_corrector=True)) - ref) / D
-    assert errs["unipc"] < errs["ddim"], errs
+    assert errs["unipc"] < 0.9 * errs["ddim"], errs
