@@ -1,0 +1,66 @@
+"""Engine benchmark: scan-compiled vs python-loop wall-clock, per solver, at
+the dit-cifar serving shapes. `derived` = loop_us / scan_us (the speedup the
+engine's scan compilation buys that solver), plus a fused-vs-sequential CFG
+row (the serving win of one 2B-batched eval per step).
+
+The eps-net is the reduced dit-cifar backbone — the same geometry
+`launch/serve.py` serves — so the ratio reflects real dispatch overheads,
+not toy-model noise. On CPU the eval dominates and scan ~= loop; the scan's
+structural wins (one jitted program, no per-step python dispatch, the fused
+Pallas combine, shardability) show on TPU — this bench records the numbers
+wherever it runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, timed
+
+SOLVER_ORDERS = [("unipc", 3), ("ddim", 1), ("dpmpp", 2), ("dpmpp", 3),
+                 ("pndm", 4), ("deis", 3), ("dpm", 2)]
+
+
+def _dit_engine(batch=8, cfg_scale=0.0, seed=0):
+    from repro.configs.registry import get_config
+    from repro.diffusion import VPLinear
+    from repro.launch.sample import build_engine
+    from repro.models import api
+
+    cfg = get_config("dit-cifar").reduced()
+    rng = jax.random.PRNGKey(seed)
+    params = api.init_params(cfg, rng)
+    engine = build_engine(cfg, params, VPLinear(), batch, seed,
+                          want_cfg=cfg_scale != 0.0)
+    x_T = jax.random.normal(rng, (batch, cfg.patch_tokens, cfg.latent_dim),
+                            jnp.float32)
+    return engine, x_T
+
+
+def bench_engine(nfe=10, batch=8):
+    """Per-solver scan vs loop wall-clock at dit-cifar serving shapes."""
+    from repro.engine import EngineSpec
+
+    engine, x_T = _dit_engine(batch=batch)
+    for solver, order in SOLVER_ORDERS:
+        spec = EngineSpec(solver=solver, order=order, nfe=nfe)
+        run = engine.build(spec)
+        jax.block_until_ready(run(x_T))  # compile outside the timing
+        _, scan_us = timed(lambda: jax.block_until_ready(run(x_T)))
+        loop = engine.build_loop(spec)
+        _, loop_us = timed(lambda: jax.block_until_ready(loop(x_T)))
+        emit(f"engine/{solver}{order}/scan_b{batch}_nfe{nfe}", scan_us,
+             f"loop_us={loop_us:.0f};speedup={loop_us / scan_us:.2f}")
+
+    # fused CFG vs the sequential two-eval loop reference (UniPC-3)
+    engine, x_T = _dit_engine(batch=batch, cfg_scale=2.0)
+    spec = EngineSpec(solver="unipc", order=3, nfe=nfe, cfg_scale=2.0)
+    run = engine.build(spec)
+    jax.block_until_ready(run(x_T))
+    _, fused_us = timed(lambda: jax.block_until_ready(run(x_T)))
+    loop = engine.build_loop(spec)
+    _, seq_us = timed(lambda: jax.block_until_ready(loop(x_T)))
+    emit(f"engine/cfg_fused_b{batch}_nfe{nfe}", fused_us,
+         f"seq_loop_us={seq_us:.0f};speedup={seq_us / fused_us:.2f}")

@@ -1,6 +1,10 @@
 """Solver-zoo comparison on an analytic DPM: every solver in the repo, with
-and without the method-agnostic UniC — a miniature of the paper's Table 2 and
-Figure 3 that runs in seconds on CPU with machine-checkable ground truth.
+and without the method-agnostic UniC, plus the engine's scan-compiled path —
+a miniature of the paper's Table 2 and Figure 3 that runs in seconds on CPU
+with machine-checkable ground truth. The `scan` column is the same solver
+compiled to a per-step weight table and run through the production
+`lax.scan` + fused-update path (DESIGN.md §8): it should agree with `plain`
+to fp32 accuracy.
 
     PYTHONPATH=src python examples/sample_comparison.py --nfe 8
 """
@@ -10,12 +14,14 @@ import sys
 
 sys.path.insert(0, "src")
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DDIM, DEIS, DPMSolverPP, DPMSolverSinglestep, PNDM,
                         Grid, UniPC)
 from repro.core.solver import CorrectorConfig
 from repro.diffusion import GaussianDPM, VPLinear
+from repro.engine import EngineSpec, SamplerEngine
 
 
 def main():
@@ -31,22 +37,42 @@ def main():
         a, s = float(sched.alpha(t)), float(sched.sigma(t))
         return (np.asarray(x, np.float64) - s * eps(x, t)) / a
 
+    def eps_jx(x, t):  # the same analytic model, traceable for the scan path
+        t = jnp.asarray(t)
+        a = jnp.exp(sched.log_alpha_jax(t))
+        sig = jnp.sqrt(1 - a * a)
+        return sig * (x - a * dpm.mu) / (a * a * dpm.s ** 2 + sig * sig)
+
+    engine = SamplerEngine(sched, eps=eps_jx)
+
+    # zoo rows: loop constructor, UniC order, engine spec for the scan column
     zoo = {
-        "ddim (order 1)": (lambda g: DDIM(eps, g, prediction="noise"), 1),
-        "dpm-solver++ 2M": (lambda g: DPMSolverPP(dm, g, order=2), 2),
-        "dpm-solver++ 3M": (lambda g: DPMSolverPP(dm, g, order=3), 3),
+        "ddim (order 1)": (lambda g: DDIM(eps, g, prediction="noise"), 1,
+                           EngineSpec(solver="ddim", order=1, nfe=args.nfe)),
+        "dpm-solver++ 2M": (lambda g: DPMSolverPP(dm, g, order=2), 2,
+                            EngineSpec(solver="dpmpp", order=2, nfe=args.nfe)),
+        "dpm-solver++ 3M": (lambda g: DPMSolverPP(dm, g, order=3), 3,
+                            EngineSpec(solver="dpmpp", order=3, nfe=args.nfe)),
+        # the engine compiles G = nfe // order grid steps; feed it the same
+        # clamped grid the loop rows below use so the columns stay comparable
         "dpm-solver 3S": (lambda g: DPMSolverSinglestep(
-            eps, g, sched, order=3, prediction="noise"), 3),
-        "pndm": (lambda g: PNDM(eps, g), 4),
-        "deis tAB3": (lambda g: DEIS(eps, g, sched, order=3), 3),
-        "unipc-3 (ours)": (None, 3),
+            eps, g, sched, order=3, prediction="noise"), 3,
+            EngineSpec(solver="dpm", order=3,
+                       nfe=3 * max(2, args.nfe // 3))),
+        "pndm": (lambda g: PNDM(eps, g), 4,
+                 EngineSpec(solver="pndm", nfe=args.nfe)),
+        "deis tAB3": (lambda g: DEIS(eps, g, sched, order=3), 3,
+                      EngineSpec(solver="deis", order=3, nfe=args.nfe)),
+        "unipc-3 (ours)": (None, 3,
+                           EngineSpec(solver="unipc", order=3, nfe=args.nfe)),
     }
+
     def rms(a, ref):
         return float(np.sqrt(np.mean((np.asarray(a) - ref) ** 2)))
 
     print(f"NFE={args.nfe}; RMS error vs exact ODE solution, lower is better")
-    print(f"{'solver':24s} {'plain':>12s} {'+UniC':>12s}")
-    for name, (mk, order) in zoo.items():
+    print(f"{'solver':24s} {'plain':>12s} {'+UniC':>12s} {'scan':>12s}")
+    for name, (mk, order, spec) in zoo.items():
         g = Grid.build(sched, args.nfe)
         ref = dpm.exact_solution(x_T, g.t[-1])
         if mk is None:
@@ -62,7 +88,8 @@ def main():
             s2 = mk(Grid.build(sched, steps))
             cor = rms(s2.sample(x_T, corrector=CorrectorConfig(order=order)),
                       ref)
-        print(f"{name:24s} {plain:12.3e} {cor:12.3e}")
+        scan = rms(engine.build(spec)(jnp.asarray(x_T, jnp.float32)), ref)
+        print(f"{name:24s} {plain:12.3e} {cor:12.3e} {scan:12.3e}")
 
 
 if __name__ == "__main__":

@@ -161,6 +161,17 @@ class DPMSolverSinglestep(GridSolver):
                 + (1.0 / r2) * a_t * phi_2 * (m2 - m_s))
 
 
+# Adams-Bashforth coefficients on newest-first evals (PLMS warm-up ladder).
+# Shared with the engine compiler: a PLMS step is the DDIM transfer map of
+# e_AB = sum_j AB[n][j] * E[j], and sum_j AB[n][j] == 1 for every n.
+PLMS_AB = {
+    1: np.array([1.0]),
+    2: np.array([3.0, -1.0]) / 2.0,
+    3: np.array([23.0, -16.0, 5.0]) / 12.0,
+    4: np.array([55.0, -59.0, 37.0, -9.0]) / 24.0,
+}
+
+
 class PNDM(GridSolver):
     """PLMS variant of PNDM: Adams-Bashforth extrapolation of the noise
     prediction fed through the DDIM transfer map; lower-order AB warm-up."""
@@ -170,16 +181,10 @@ class PNDM(GridSolver):
 
     def predict(self, i, x, hist: History):
         g = self.grid
-        es = [e for _, _, e in reversed(hist.items[-4:])]  # newest first
+        es = [e for _, _, e in hist.last(4)]  # newest first
         n = min(len(es), i)
-        if n >= 4:
-            e = (55 * es[0] - 59 * es[1] + 37 * es[2] - 9 * es[3]) / 24.0
-        elif n == 3:
-            e = (23 * es[0] - 16 * es[1] + 5 * es[2]) / 12.0
-        elif n == 2:
-            e = (3 * es[0] - es[1]) / 2.0
-        else:
-            e = es[0]
+        ab = PLMS_AB[min(n, 4)]
+        e = sum(c * e_j for c, e_j in zip(ab, es))
         return semilinear_base(
             x, e, alpha_s=g.alpha[i - 1], alpha_t=g.alpha[i],
             sigma_s=g.sigma[i - 1], sigma_t=g.sigma[i],
@@ -206,37 +211,40 @@ class DEIS(GridSolver):
         self.noise_schedule = noise_schedule
         self.quad_points = quad_points
 
-    def _dlam_dt(self, t, eps=1e-5):
-        s = self.noise_schedule
-        return (s.lam(t + eps) - s.lam(t - eps)) / (2 * eps)
-
-    def _weights(self, i, ts_prev):
-        """w_j = -alpha_i * int_{t_{i-1}}^{t_i} e^{-lam(tau)} lam'(tau) L_j(tau) dtau."""
-        g = self.grid
-        lo, hi = float(g.t[i - 1]), float(g.t[i])
-        nodes, gl_w = np.polynomial.legendre.leggauss(self.quad_points)
-        tau = 0.5 * (hi - lo) * nodes + 0.5 * (hi + lo)
-        jac = 0.5 * (hi - lo)
-        lam_tau = self.noise_schedule.lam(tau)
-        dlam = self._dlam_dt(tau)
-        kern = np.exp(-lam_tau) * dlam
-        ws = []
-        for j in range(len(ts_prev)):
-            L = np.ones_like(tau)
-            for k in range(len(ts_prev)):
-                if k != j:
-                    L *= (tau - ts_prev[k]) / (ts_prev[j] - ts_prev[k])
-            ws.append(-float(g.alpha[i]) * float(np.sum(gl_w * kern * L)) * jac)
-        return ws
-
     def predict(self, i, x, hist: History):
         g = self.grid
         k = min(self.order, i)
         pts = hist.last(k)  # newest first: t_{i-1}, t_{i-2}, ...
         ts_prev = [t for _, t, _ in pts]
         es = [e for _, _, e in pts]
-        ws = self._weights(i, ts_prev)
+        ws = deis_quad_weights(self.noise_schedule, float(g.t[i - 1]),
+                               float(g.t[i]), float(g.alpha[i]), ts_prev,
+                               self.quad_points)
         acc = 0.0
         for w, e in zip(ws, es):
             acc = acc + w * e
         return (g.alpha[i] / g.alpha[i - 1]) * x + acc
+
+
+def deis_quad_weights(noise_schedule, t_lo, t_hi, alpha_t, ts_prev,
+                      quad_points: int = 64):
+    """DEIS per-eval weights w_j = -alpha_t * int_{t_lo}^{t_hi} e^{-lam(tau)}
+    lam'(tau) L_j(tau) dtau, with L_j the Lagrange basis over `ts_prev`.
+
+    Module-level (shared by the python-loop `DEIS` and the engine's weight-
+    table compiler): Gauss-Legendre quadrature in float64 — faithful to the
+    method, whose integrals are also evaluated numerically."""
+    nodes, gl_w = np.polynomial.legendre.leggauss(quad_points)
+    tau = 0.5 * (t_hi - t_lo) * nodes + 0.5 * (t_hi + t_lo)
+    jac = 0.5 * (t_hi - t_lo)
+    eps = 1e-5
+    dlam = (noise_schedule.lam(tau + eps) - noise_schedule.lam(tau - eps)) / (2 * eps)
+    kern = np.exp(-noise_schedule.lam(tau)) * dlam
+    ws = []
+    for j in range(len(ts_prev)):
+        L = np.ones_like(tau)
+        for k in range(len(ts_prev)):
+            if k != j:
+                L *= (tau - ts_prev[k]) / (ts_prev[j] - ts_prev[k])
+        ws.append(-float(alpha_t) * float(np.sum(gl_w * kern * L)) * jac)
+    return ws

@@ -33,6 +33,15 @@ BH_VARIANTS = ("bh1", "bh2", "vary")
 PREDICTION_TYPES = ("noise", "data")
 
 
+def semilinear_coeffs(h: float, alpha_s: float, alpha_t: float,
+                      sigma_s: float, sigma_t: float, prediction: str):
+    """(base_x, base_m0) of the order-1 semilinear (DDIM) transfer — the base
+    every unified update (and UniC corrector row) is built on."""
+    if prediction == "noise":
+        return alpha_t / alpha_s, -sigma_t * math.expm1(h)
+    return sigma_t / sigma_s, alpha_t * (-math.expm1(-h))
+
+
 def bh_value(h: float, variant: str, prediction: str) -> float:
     """B(h), sign-normalized so B(h) = h + O(h^2) for BOTH prediction types.
 
@@ -109,11 +118,16 @@ def default_order_schedule(num_steps: int, order: int, lower_order_final: bool =
 
 @dataclass
 class UniPCSchedule:
-    """Static per-step coefficient table consumed by the scan-based sampler.
+    """Static per-step weight table consumed by the scan-based sampler.
+
+    Despite the name this is the *solver-agnostic* table format: every
+    multistep solver in the zoo (and the singlestep ones, on an expanded grid)
+    compiles to rows of this table — see `repro.engine`. UniPC is simply the
+    solver whose rows `build_unipc_schedule` emits.
 
     All arrays are float64 numpy; the sampler casts once. M = number of steps.
-    max_prev = order (corrector uses up to `order` differences: order-1 previous
-    + 1 current; predictor uses up to order-1 previous).
+    The difference-weight width K = w_pred.shape[1] (order-1 for UniPC; the
+    sampler derives its eval-ring size from it, not from `order`).
     """
 
     lambdas: np.ndarray           # (M+1,) half log-SNR at t_0..t_M
@@ -122,17 +136,31 @@ class UniPCSchedule:
     order: int
     prediction: str
     variant: str
-    # per-step (M,) / (M, order-1) / (M,) tables:
+    # per-step (M,) / (M, K) / (M,) tables:
     base_x: np.ndarray = field(default=None)       # coeff on x_{i-1}
     base_m0: np.ndarray = field(default=None)      # coeff on m0
-    w_pred: np.ndarray = field(default=None)       # (M, order-1) predictor diff weights (0-padded)
-    w_corr_prev: np.ndarray = field(default=None)  # (M, order-1) corrector prev-diff weights
+    w_pred: np.ndarray = field(default=None)       # (M, K) predictor diff weights (0-padded)
+    w_corr_prev: np.ndarray = field(default=None)  # (M, K) corrector prev-diff weights
     w_corr_new: np.ndarray = field(default=None)   # (M,) corrector current-diff weight
     use_corrector: np.ndarray = field(default=None)  # (M,) 0/1
     out_scale: np.ndarray = field(default=None)    # sigma_t (noise) / alpha_t (data) per step
     sign: float = field(default=None)              # -1 noise, +1 data
     timesteps: np.ndarray = field(default=None)    # (M+1,) t grid (for the model)
     orders: list = field(default=None)
+    # corrector base coefficients: UniC is always the *semilinear* base plus
+    # difference terms, which coincides with the predictor's base for UniPC /
+    # DDIM / DPM-Solver++ but not for e.g. DEIS (whose predictor folds the
+    # quadrature weights into base_m0). None -> same as base_x / base_m0.
+    base_x_corr: np.ndarray = field(default=None)  # (M,)
+    base_m0_corr: np.ndarray = field(default=None)  # (M,)
+    # per-eval model columns: {name: (M+1,) array} fed to model_fn as keyword
+    # arguments (row 0 at the initial eval, row i at step i's eval). Used by
+    # the engine for guidance-scale schedules and thresholding percentiles.
+    model_cols: dict = field(default=None)
+
+
+# The engine refers to the table by its role, not by the solver that named it.
+SolverTable = UniPCSchedule
 
 
 def build_unipc_schedule(
@@ -188,14 +216,9 @@ def build_unipc_schedule(
         w_corr_new[i - 1] = wc[-1]
         corr_here = use_corrector and (corrector_at_last or i < M)
         use_c[i - 1] = 1.0 if corr_here else 0.0
-        if prediction == "noise":
-            base_x[i - 1] = alphas[i] / alphas[i - 1]
-            base_m0[i - 1] = -sigmas[i] * math.expm1(h)
-            out_scale[i - 1] = sigmas[i]
-        else:
-            base_x[i - 1] = sigmas[i] / sigmas[i - 1]
-            base_m0[i - 1] = alphas[i] * (-math.expm1(-h))
-            out_scale[i - 1] = alphas[i]
+        base_x[i - 1], base_m0[i - 1] = semilinear_coeffs(
+            h, alphas[i - 1], alphas[i], sigmas[i - 1], sigmas[i], prediction)
+        out_scale[i - 1] = sigmas[i] if prediction == "noise" else alphas[i]
     return UniPCSchedule(
         lambdas=lambdas,
         alphas=np.asarray(alphas, dtype=np.float64),

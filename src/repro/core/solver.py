@@ -14,8 +14,9 @@ The production scan-based sampler lives in `core/unipc.py`.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -45,16 +46,18 @@ class Grid:
 
 
 class History:
-    """Recent model evaluations as (lambda, t, output) in evaluation order."""
+    """Recent model evaluations as (lambda, t, output) in evaluation order.
+
+    Backed by a bounded deque: push is O(1) (the old list form paid an O(n)
+    `pop(0)` on every eviction), and all consumers iterate (newest-first via
+    `reversed` / `last`) rather than slice."""
 
     def __init__(self, maxlen: int = 16):
         self.maxlen = maxlen
-        self.items: List[Tuple[float, float, Array]] = []
+        self.items: Deque[Tuple[float, float, Array]] = deque(maxlen=maxlen)
 
     def push(self, lam: float, t: float, out: Array):
         self.items.append((float(lam), float(t), out))
-        if len(self.items) > self.maxlen:
-            self.items.pop(0)
 
     def last(self, k: int, before_lam: Optional[float] = None, exclude_lam=()):
         """Most recent k entries (newest first), optionally excluding lambdas."""
@@ -204,14 +207,16 @@ class GridSolver:
                     # estimate of eps(x_c) instead of eps(x_pred): secant
                     # diagonal-Jacobian from the previous (sample, eval) pair.
                     xp, ep = prev_pair
-                    denom = np.asarray(x_pred) - np.asarray(xp)
-                    jhat = np.where(np.abs(denom) > 1e-8,
-                                    (np.asarray(e_new) - np.asarray(ep))
-                                    / np.where(np.abs(denom) > 1e-8, denom, 1.0),
-                                    0.0)
-                    jhat = np.clip(jhat, -5.0, 5.0)
-                    e_new = e_new + corrector.free_oracle * jhat * (
-                        np.asarray(x) - np.asarray(x_pred))
+                    denom = jnp.asarray(x_pred) - jnp.asarray(xp)
+                    ok = jnp.abs(denom) > 1e-8
+                    jhat = jnp.where(
+                        ok,
+                        (jnp.asarray(e_new) - jnp.asarray(ep))
+                        / jnp.where(ok, denom, 1.0),
+                        0.0)
+                    jhat = jnp.clip(jhat, -5.0, 5.0)
+                    e_new = jnp.asarray(e_new) + corrector.free_oracle * jhat * (
+                        jnp.asarray(x) - jnp.asarray(x_pred))
             else:
                 x = x_pred
             if e_new is not None:

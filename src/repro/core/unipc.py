@@ -176,17 +176,25 @@ def unipc_sample_scan(
     XLA-fused fp32 axpy chain elsewhere — equivalent to fused_update=False
     on CPU to <=1e-5 at fp32 (DESIGN.md §4-§5). fused_update=False pins the
     inline jnp tensordot form, kept as the reference for equivalence tests.
+
+    The scan is solver-agnostic: it executes whatever weight rows the table
+    carries, so any solver `repro.engine` compiles to a `SolverTable` (DDIM,
+    DPM-Solver++, PLMS, DEIS, expanded-grid singlestep) runs through this one
+    function. `sched.model_cols` entries ((M+1,) per-eval arrays, e.g. a
+    guidance-scale schedule) are passed to `model_fn` as keyword arguments.
     """
-    order = sched.order
-    K = max(1, order - 1)
-    M = len(sched.base_x)
+    K = sched.w_pred.shape[1]
     f = lambda a: jnp.asarray(a, dtype=dtype)
+    base_x_c = sched.base_x_corr if sched.base_x_corr is not None else sched.base_x
+    base_m0_c = sched.base_m0_corr if sched.base_m0_corr is not None else sched.base_m0
+    cols = sched.model_cols or {}
     tab = dict(
         base_x=f(sched.base_x), base_m0=f(sched.base_m0),
+        base_x_c=f(base_x_c), base_m0_c=f(base_m0_c),
         w_pred=f(sched.w_pred), w_corr_prev=f(sched.w_corr_prev),
         w_corr_new=f(sched.w_corr_new), use_c=f(sched.use_corrector),
         out_scale=f(sched.out_scale), t=f(sched.timesteps[1:]),
-        last=f((np.arange(1, M + 1) == M).astype(np.float64)),
+        **{f"mc_{k}": f(np.asarray(v)[1:]) for k, v in cols.items()},
     )
     sign = jnp.asarray(sched.sign, dtype)
 
@@ -202,18 +210,19 @@ def unipc_sample_scan(
         x, E = carry
         m0 = E[0]
         diffs = E[1:] - m0[None] if K > 0 else jnp.zeros((0,) + x.shape, x.dtype)
+        extras = {k: step[f"mc_{k}"] for k in cols}
         # predictor
         terms = jnp.concatenate([x[None], m0[None], diffs], axis=0)
         wts_p = jnp.concatenate(
             [step["base_x"][None], step["base_m0"][None],
              sign * step["out_scale"] * step["w_pred"]], axis=0)
         x_pred = combine(terms, wts_p)
-        e_new = model_fn(x_pred, step["t"])
+        e_new = model_fn(x_pred, step["t"], **extras)
         # corrector (re-uses e_new; no extra NFE)
         d_new = e_new - m0
         terms_c = jnp.concatenate([terms, d_new[None]], axis=0)
         wts_c = jnp.concatenate(
-            [step["base_x"][None], step["base_m0"][None],
+            [step["base_x_c"][None], step["base_m0_c"][None],
              sign * step["out_scale"] * step["w_corr_prev"],
              (sign * step["out_scale"] * step["w_corr_new"])[None]], axis=0)
         x_corr = combine(terms_c, wts_c)
@@ -221,7 +230,10 @@ def unipc_sample_scan(
         E_next = jnp.concatenate([e_new[None], E[:-1]], axis=0)
         return (x_next, E_next), None
 
-    e0 = model_fn(x_T, tab["t"][0] * 0 + jnp.asarray(sched.timesteps[0], dtype))
+    # the initial timestep rides the schedule table explicitly — the first
+    # model eval is at sched.timesteps[0], with row 0 of every model column
+    t0 = jnp.asarray(sched.timesteps[0], dtype)
+    e0 = model_fn(x_T, t0, **{k: f(np.asarray(v)[0]) for k, v in cols.items()})
     E = jnp.concatenate([e0[None], jnp.zeros((K,) + x_T.shape, x_T.dtype)], axis=0)
     (x, _), _ = jax.lax.scan(body, (x_T.astype(dtype), E.astype(dtype)), tab)
     return x

@@ -1,4 +1,5 @@
 from .schedules import EDMSchedule, NoiseSchedule, VPCosine, VPLinear, timestep_grid
 from .process import diffusion_loss, eps_to_x0, q_sample, wrap_model, x0_to_eps
-from .guidance import cfg_model, dynamic_threshold, guided_data_model
+from .guidance import (cfg_model, cfg_model_fused, dynamic_threshold,
+                       guidance_schedule, guided_data_model)
 from .gaussian import GaussianDPM, MixtureDPM, empirical_order

@@ -1,13 +1,27 @@
-"""Guided sampling: classifier-free guidance and dynamic thresholding (Sec. 3.4)."""
+"""Guided sampling: classifier-free guidance and dynamic thresholding (Sec. 3.4).
+
+Two CFG forms:
+
+* `cfg_model` — two sequential network evals per step (cond, then uncond);
+  the reference semantics, used by the python-loop solvers.
+* `cfg_model_fused` — ONE batched network eval per step: the caller provides
+  an eps-net whose conditioning is already stacked `[cond; uncond]` along the
+  batch, the guided eps is recombined from the two halves. This is what the
+  engine compiles into the sampling scan (`repro.engine`), with the guidance
+  scale riding the schedule table as a per-eval column (`guidance_schedule`).
+"""
 
 from __future__ import annotations
 
 from typing import Callable, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from .process import eps_to_x0, x0_to_eps
 from .schedules import NoiseSchedule
+
+GUIDANCE_SCHEDULES = ("constant", "linear", "cosine")
 
 
 def cfg_model(eps_cond: Callable, eps_uncond: Callable, scale: float):
@@ -17,6 +31,43 @@ def cfg_model(eps_cond: Callable, eps_uncond: Callable, scale: float):
         return (1.0 + scale) * eps_cond(x, t) - scale * eps_uncond(x, t)
 
     return fn
+
+
+def cfg_model_fused(eps_stacked: Callable):
+    """Fused CFG: one batched eval per step instead of `cfg_model`'s two.
+
+    eps_stacked(xx, t) must run the eps-net on a 2B batch whose conditioning
+    is [cond_0..cond_{B-1}, null_0..null_{B-1}] (e.g. a DiT called with
+    class_ids = concat([ids, null_ids])). The returned fn takes the guidance
+    scale `g` as an argument so a per-step scale schedule can ride the scan's
+    static table.
+    """
+
+    def fn(x, t, g):
+        ee = eps_stacked(jnp.concatenate([x, x], axis=0), t)
+        e_cond, e_uncond = jnp.split(ee, 2, axis=0)
+        return (1.0 + g) * e_cond - g * e_uncond
+
+    return fn
+
+
+def guidance_schedule(scale: float, n_evals: int, kind: str = "constant",
+                      scale_end: Optional[float] = None) -> np.ndarray:
+    """(n_evals,) per-eval guidance scales, host-side float64.
+
+    'constant' holds `scale`; 'linear' / 'cosine' ramp from `scale` at the
+    first eval to `scale_end` (default 0) at the last — low guidance late in
+    the trajectory is the usual fidelity/diversity knob.
+    """
+    if kind not in GUIDANCE_SCHEDULES:
+        raise ValueError(f"kind must be one of {GUIDANCE_SCHEDULES}, got {kind!r}")
+    end = 0.0 if scale_end is None else float(scale_end)
+    u = np.linspace(0.0, 1.0, n_evals)
+    if kind == "constant":
+        return np.full(n_evals, float(scale))
+    if kind == "linear":
+        return scale + (end - scale) * u
+    return scale + (end - scale) * 0.5 * (1.0 - np.cos(np.pi * u))
 
 
 def dynamic_threshold(x0, percentile: float = 0.995, floor: float = 1.0):

@@ -1,0 +1,14 @@
+"""Solver-agnostic sampling engine: compile the zoo to the fused scan path.
+
+Importing this package populates the solver registry (`SOLVERS`) — each
+entry pairs a per-step weight-table compiler with its python-loop reference.
+"""
+
+from .specs import SOLVERS, EngineSpec, SolverDef, solver_def
+from .compiler import build_loop, compile_table
+from .engine import SamplerEngine
+
+__all__ = [
+    "SOLVERS", "EngineSpec", "SolverDef", "solver_def",
+    "SamplerEngine", "compile_table", "build_loop",
+]

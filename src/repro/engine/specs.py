@@ -1,0 +1,101 @@
+"""Engine specs and the solver registry.
+
+The engine's view (after Liu et al. 2023's unified-framework reading of the
+paper): every multistep solver is a per-step *weight table* over one shared
+state update — a semilinear base plus weighted model-output differences —
+so the whole zoo compiles to the same `lax.scan` + fused-kernel path that
+`unipc_sample_scan` runs. A `SolverDef` is the pairing of that compiler with
+its python-loop reference (the `GridSolver` subclass the tests and benches
+compare against); `EngineSpec` is the user-facing configuration every entry
+point (`launch/sample.py`, `launch/serve.py`, `benchmarks/`) passes to
+`SamplerEngine.build`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, Optional
+
+SOLVERS: Dict[str, "SolverDef"] = {}
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """Everything `SamplerEngine.build` needs to produce a jitted run_fn."""
+
+    solver: str = "unipc"
+    nfe: int = 10
+    order: int = 3
+    prediction: Optional[str] = None   # None -> the solver's default
+    variant: str = "bh2"               # B(h) variant (UniPC / UniC rows)
+    spacing: str = "logsnr"
+    lower_order_final: bool = True
+    # corrector: UniPC's own, or the method-agnostic UniC bolt-on (Table 2)
+    # for any other multistep solver. None -> solver default (on for unipc).
+    use_corrector: Optional[bool] = None
+    corrector_order: Optional[int] = None  # None -> solver-matched UniC-p
+    corrector_at_last: bool = False
+    # classifier-free guidance + thresholding (fused into the scan)
+    cfg_scale: float = 0.0
+    cfg_schedule: str = "constant"     # constant | linear | cosine
+    cfg_scale_end: Optional[float] = None
+    thresholding: bool = False
+    threshold_percentile: float = 0.995
+    # execution
+    fused_update: bool = True
+
+    def resolve(self) -> "EngineSpec":
+        """Fill solver-dependent defaults; validate against the registry."""
+        sd = solver_def(self.solver)
+        out = self
+        if out.prediction is None:
+            out = replace(out, prediction=sd.prediction)
+        elif sd.fixed_prediction and out.prediction != sd.prediction:
+            raise ValueError(
+                f"solver {sd.name!r} is {sd.prediction}-prediction only, "
+                f"got prediction={out.prediction!r}")
+        if out.use_corrector is None:
+            out = replace(out, use_corrector=sd.corrector_default)
+        if out.use_corrector and sd.singlestep:
+            raise ValueError(
+                f"UniC bolt-on is grid-anchored; singlestep solver "
+                f"{sd.name!r} compiles with use_corrector=False")
+        if out.corrector_order is None:
+            out = replace(out, corrector_order=sd.unic_order(out))
+        return out
+
+
+@dataclass(frozen=True)
+class SolverDef:
+    """One registry entry: a weight-table compiler plus its loop reference.
+
+    compile(spec, noise_schedule) -> SolverTable  (host-side float64 rows)
+    loop(spec, noise_schedule, model_fn) -> sample_fn(x_T)  (GridSolver path)
+    """
+
+    name: str
+    prediction: str                    # default prediction type
+    compile: Callable
+    loop: Callable
+    fixed_prediction: bool = True
+    singlestep: bool = False
+    corrector_default: bool = False
+    # UniC-p order matched to the solver (Table 2), as a function of the spec
+    default_corrector_order: Optional[Callable] = None
+
+    def unic_order(self, spec: EngineSpec) -> int:
+        if self.default_corrector_order is None:
+            return spec.order
+        return self.default_corrector_order(spec)
+
+
+def register(sd: SolverDef) -> SolverDef:
+    SOLVERS[sd.name] = sd
+    return sd
+
+
+def solver_def(name: str) -> SolverDef:
+    if name not in SOLVERS:
+        raise KeyError(f"unknown solver {name!r}; registered: "
+                       f"{sorted(SOLVERS)}")
+    return SOLVERS[name]

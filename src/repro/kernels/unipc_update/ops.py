@@ -27,8 +27,10 @@ BACKENDS = ("pallas", "interpret", "jnp")
 
 
 def _jnp_combine(terms, weights):
-    """Unrolled fp32 axpy chain (K is static and small). XLA fuses this into
-    one pass over the state — the same schedule the Pallas kernel encodes."""
+    """Unrolled fp32 axpy chain (K is static and small: order+2 for UniPC,
+    up to 6 across the engine-compiled zoo, e.g. PLMS-4 + UniC). XLA fuses
+    this into one pass over the state — the same schedule the Pallas kernel
+    encodes."""
     w = weights.astype(jnp.float32)
     acc = w[0] * terms[0].astype(jnp.float32)
     for k in range(1, terms.shape[0]):

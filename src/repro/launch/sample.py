@@ -1,9 +1,15 @@
 """Diffusion sampling launcher — the paper's workload. Loads (or freshly
 initializes) an eps-network for --arch, then samples with any solver in the
-zoo at a given NFE budget.
+zoo at a given NFE budget. Every solver runs scan-compiled through the
+engine (`SamplerEngine.build`: weight-table compiler -> one `lax.scan` ->
+fused Pallas state update); `--loop` pins the python-loop GridSolver
+reference instead. Conditional sampling (dit family): `--cfg-scale` fuses
+classifier-free guidance into the scan — cond+uncond stacked into ONE
+batched network call per step — and `--thresholding` adds Imagen-style
+dynamic thresholding; both default off.
 
     PYTHONPATH=src python -m repro.launch.sample --arch dit-cifar --reduced \
-        --solver unipc --order 3 --nfe 10
+        --solver dpmpp --order 2 --nfe 10 --cfg-scale 2.0
 """
 
 from __future__ import annotations
@@ -17,20 +23,42 @@ import numpy as np
 
 from ..checkpoint import ckpt
 from ..configs.registry import get_config
-from ..core import (DDIM, DEIS, DPMSolverPP, DPMSolverSinglestep, PNDM, Grid,
-                    UniPC, make_unipc_schedule, unipc_sample_scan)
 from ..data.synthetic import class_ids
-from ..diffusion import VPLinear, wrap_model
+from ..diffusion import VPLinear
+from ..engine import EngineSpec, SamplerEngine
 from ..models import api
 
+NULL_CLASS_ID = 1000  # init_dit allocates num_classes + 1 embeddings; the
+                      # extra row is the CFG null class
 
-def build_model_fn(cfg, params, batch, schedule, prediction):
+
+def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
+                 want_cfg: bool = False) -> SamplerEngine:
+    """Wire the arch's eps-network into a SamplerEngine: the cond branch,
+    and — for dit-family conditional sampling — the stacked 2B cond+uncond
+    branch that fused CFG serves from, plus the uncond branch for the
+    sequential loop reference."""
     net = api.eps_network(cfg)
 
-    def eps(x, t):
-        return net(params, x, jnp.asarray(t, jnp.float32), batch)
+    def eps_with(extra):
+        # jit so the python-loop reference path gets compiled evals too; the
+        # scan path's outer jit simply inlines it
+        return jax.jit(
+            lambda x, t: net(params, x, jnp.asarray(t, jnp.float32), extra))
 
-    return wrap_model(schedule, jax.jit(eps), prediction)
+    if cfg.family != "dit":
+        if want_cfg:
+            raise ValueError("classifier-free guidance needs the dit family "
+                             "(class-conditional eps-net)")
+        return SamplerEngine(schedule, eps=eps_with({}))
+    ids = jnp.asarray(class_ids(batch, seed=seed))
+    null = jnp.full((batch,), NULL_CLASS_ID, jnp.int32)
+    return SamplerEngine(
+        schedule,
+        eps=eps_with({"class_ids": ids}),
+        eps_stacked=eps_with({"class_ids": jnp.concatenate([ids, null])}),
+        eps_uncond=eps_with({"class_ids": null}),
+    )
 
 
 def latent_shape(cfg, batch):
@@ -40,8 +68,9 @@ def latent_shape(cfg, batch):
 
 
 def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
-           variant="bh2", prediction="data", batch=4, seed=0,
-           params=None, use_scan=False, fused_update=True):
+           variant="bh2", prediction=None, batch=4, seed=0, params=None,
+           loop=False, fused_update=True, cfg_scale=0.0,
+           cfg_schedule="constant", thresholding=False):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -49,67 +78,61 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
     if params is None:
         params = api.init_params(cfg, rng)
     schedule = VPLinear()
-    extra = {}
-    if cfg.family == "dit":
-        extra["class_ids"] = jnp.asarray(class_ids(batch))
-    model = build_model_fn(cfg, params, extra, schedule, prediction)
+    engine = build_engine(cfg, params, schedule, batch, seed,
+                          want_cfg=cfg_scale != 0.0)
+    spec = EngineSpec(solver=solver, nfe=nfe, order=order, variant=variant,
+                      prediction=prediction, cfg_scale=cfg_scale,
+                      cfg_schedule=cfg_schedule, thresholding=thresholding,
+                      fused_update=fused_update)
     x_T = jax.random.normal(rng, latent_shape(cfg, batch), jnp.float32)
 
     t0 = time.time()
-    if use_scan and solver == "unipc":
-        us = make_unipc_schedule(schedule, nfe, order=order,
-                                 prediction=prediction, variant=variant)
-        x0 = unipc_sample_scan(model, x_T, us, fused_update=fused_update)
-        nfe_used = nfe + 1  # the scan evaluates the final step's eps too
+    if loop:
+        run = engine.build_loop(spec)
+        x0 = run(x_T)
+        nfe_used = run.solver.model.nfe  # measured eval count
     else:
-        grid_steps = nfe if solver in ("unipc", "ddim", "dpmpp", "pndm",
-                                       "deis") else max(1, nfe // order)
-        grid = Grid.build(schedule, grid_steps)
-        if solver == "unipc":
-            s = UniPC(model, grid, order=order, prediction=prediction,
-                      variant=variant)
-            x0 = s.sample_pc(x_T, use_corrector=True)
-        elif solver == "ddim":
-            s = DDIM(model, grid, prediction=prediction)
-            x0 = s.sample(x_T)
-        elif solver == "dpmpp":
-            s = DPMSolverPP(model, grid, order=min(order, 3))
-            x0 = s.sample(x_T)
-        elif solver == "dpm":
-            s = DPMSolverSinglestep(model, grid, schedule, order=min(order, 3),
-                                    prediction="noise")
-            x0 = s.sample(x_T)
-        elif solver == "pndm":
-            s = PNDM(model, grid)
-            x0 = s.sample(x_T)
-        elif solver == "deis":
-            s = DEIS(model, grid, schedule, order=min(order, 3))
-            x0 = s.sample(x_T)
-        else:
-            raise ValueError(solver)
-        nfe_used = s.model.nfe
+        tab = engine.compile(spec)
+        x0 = engine.build(spec, table=tab)(x_T)
+        # the scan evaluates the final step's eps too; fused CFG keeps one
+        # (2B-batched) call per step
+        nfe_used = len(tab.timesteps)
     dt = time.time() - t0
     x0 = np.asarray(x0)
-    print(f"{solver}-{order} nfe={nfe_used} wall={dt:.2f}s "
-          f"out_shape={x0.shape} mean={x0.mean():+.4f} std={x0.std():.4f} "
-          f"finite={np.isfinite(x0).all()}")
+    path = "loop" if loop else "scan"
+    print(f"{solver}-{order} [{path}] nfe={nfe_used} cfg={cfg_scale} "
+          f"wall={dt:.2f}s out_shape={x0.shape} mean={x0.mean():+.4f} "
+          f"std={x0.std():.4f} finite={np.isfinite(x0).all()}")
     return x0
 
 
 def main():
+    from ..engine import SOLVERS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dit-cifar")
-    ap.add_argument("--solver", default="unipc",
-                    choices=["unipc", "ddim", "dpmpp", "dpm", "pndm", "deis"])
+    ap.add_argument("--solver", default="unipc", choices=sorted(SOLVERS))
     ap.add_argument("--order", type=int, default=3)
     ap.add_argument("--nfe", type=int, default=10)
     ap.add_argument("--variant", default="bh2", choices=["bh1", "bh2", "vary"])
-    ap.add_argument("--prediction", default="data", choices=["data", "noise"])
+    ap.add_argument("--prediction", default=None, choices=["data", "noise"],
+                    help="override the solver's native prediction type "
+                         "(unipc/ddim/dpm support both)")
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--scan", action="store_true")
+    ap.add_argument("--loop", action="store_true",
+                    help="python-loop GridSolver reference instead of the "
+                         "scan-compiled engine path")
     ap.add_argument("--no-fused-update", action="store_true",
                     help="pin the inline jnp op-chain combine in the scan "
                          "sampler (default: fused kernel dispatch)")
+    ap.add_argument("--cfg-scale", type=float, default=0.0,
+                    help="classifier-free guidance scale (0 = off); fused "
+                         "into the scan as one batched eval per step")
+    ap.add_argument("--cfg-schedule", default="constant",
+                    choices=["constant", "linear", "cosine"])
+    ap.add_argument("--thresholding", action="store_true",
+                    help="Imagen-style dynamic thresholding of the x0 "
+                         "prediction (data-prediction solvers)")
     scale = ap.add_mutually_exclusive_group()
     scale.add_argument("--reduced", action="store_true",
                        help="reduced CPU-scale config (the default)")
@@ -123,7 +146,9 @@ def main():
     sample(args.arch, reduced=not args.full, solver=args.solver,
            order=args.order, nfe=args.nfe, variant=args.variant,
            prediction=args.prediction, batch=args.batch, params=params,
-           use_scan=args.scan, fused_update=not args.no_fused_update)
+           loop=args.loop, fused_update=not args.no_fused_update,
+           cfg_scale=args.cfg_scale, cfg_schedule=args.cfg_schedule,
+           thresholding=args.thresholding)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,15 @@
 """Batched serving loop. Token models: prefill a batch of prompts, then
 greedy/temperature decode with the per-family cache. Diffusion models (dit
-family): one request = one latent to generate, the whole batch rides a single
-jitted UniPC scan sampler with the fused state update (DESIGN.md §3-§4).
-CPU-runnable at reduced scale.
+family): one request = one latent to generate, the whole batch rides a
+single jitted scan built by the engine — any registered solver, fused state
+update, and optionally fused classifier-free guidance (one 2B-batched
+cond+uncond eval per step; DESIGN.md §3-§4, §8). CPU-runnable at reduced
+scale.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 4 --prompt-len 32 --gen 32
     PYTHONPATH=src python -m repro.launch.serve --arch dit-cifar --reduced \
-        --batch 8 --nfe 10
+        --batch 8 --nfe 10 --solver dpmpp --order 2 --cfg-scale 2.0
 """
 
 from __future__ import annotations
@@ -73,28 +75,31 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, gen=32,
 
 
 def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
-                    fused_update=True, seed=0):
-    """Diffusion batch-serving: sample `batch` latents in one jitted UniPC
-    scan (one eps-net eval per step for the whole batch). The fused-update
-    choice is threaded straight to `unipc_sample_scan`; on TPU it selects the
-    single-pass Pallas combine, the hot path of the memory-bound update."""
-    from ..core import make_unipc_schedule, unipc_sample_scan
-    from ..diffusion import VPLinear, wrap_model
+                    solver="unipc", fused_update=True, cfg_scale=0.0,
+                    cfg_schedule="constant", thresholding=False, seed=0):
+    """Diffusion batch-serving through the engine: sample `batch` latents in
+    one jitted scan — any registered solver, one eps-net eval per step for
+    the whole batch. `cfg_scale` turns on fused classifier-free guidance:
+    still ONE (2B-batched, cond+uncond stacked) network call per step, with
+    the guidance scale riding the schedule table; `thresholding` adds dynamic
+    thresholding of the x0 prediction. On TPU the fused-update dispatch
+    selects the single-pass Pallas combine, the hot path of the memory-bound
+    state update."""
+    from ..engine import EngineSpec
+    from ..diffusion import VPLinear
+    from .sample import build_engine
 
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
     rng = jax.random.PRNGKey(seed)
     params = api.init_params(cfg, rng)
-    schedule = VPLinear()
-    net = api.eps_network(cfg)
-    extra = {"class_ids": jnp.asarray(class_ids(batch, seed=seed))}
-    eps = jax.jit(lambda x, t: net(params, x, jnp.asarray(t, jnp.float32),
-                                   extra))
-    model = wrap_model(schedule, eps, "data")
-    us = make_unipc_schedule(schedule, nfe, order=order, prediction="data")
-    run = jax.jit(lambda x: unipc_sample_scan(model, x, us,
-                                              fused_update=fused_update))
+    engine = build_engine(cfg, params, VPLinear(), batch, seed,
+                          want_cfg=cfg_scale != 0.0)
+    spec = EngineSpec(solver=solver, nfe=nfe, order=order,
+                      cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
+                      thresholding=thresholding, fused_update=fused_update)
+    run = engine.build(spec)
     x_T = jax.random.normal(rng, (batch, cfg.patch_tokens, cfg.latent_dim),
                             jnp.float32)
     t0 = time.time()
@@ -103,9 +108,10 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     t0 = time.time()
     out = jax.block_until_ready(run(x_T))
     serve_s = time.time() - t0
-    print(f"diffusion batch={batch} nfe={nfe} order={order} "
-          f"fused_update={fused_update}: compile {compile_s:.2f}s, "
-          f"serve {serve_s*1e3:.1f} ms ({serve_s/batch*1e3:.2f} ms/latent)")
+    print(f"diffusion batch={batch} solver={solver} nfe={nfe} order={order} "
+          f"cfg={cfg_scale} fused_update={fused_update}: "
+          f"compile {compile_s:.2f}s, serve {serve_s*1e3:.1f} ms "
+          f"({serve_s/batch*1e3:.2f} ms/latent)")
     return np.asarray(out)
 
 
@@ -119,9 +125,20 @@ def main():
     ap.add_argument("--nfe", type=int, default=10,
                     help="diffusion serving: sampler steps")
     ap.add_argument("--order", type=int, default=3,
-                    help="diffusion serving: UniPC order")
+                    help="diffusion serving: solver order")
+    from ..engine import SOLVERS
+    ap.add_argument("--solver", default="unipc", choices=sorted(SOLVERS),
+                    help="diffusion serving: any engine-registered solver")
     ap.add_argument("--no-fused-update", action="store_true",
                     help="diffusion serving: pin the jnp op-chain combine")
+    ap.add_argument("--cfg-scale", type=float, default=0.0,
+                    help="diffusion serving: fused classifier-free guidance "
+                         "scale (0 = off; one batched eval per step)")
+    ap.add_argument("--cfg-schedule", default="constant",
+                    choices=["constant", "linear", "cosine"])
+    ap.add_argument("--thresholding", action="store_true",
+                    help="diffusion serving: dynamic thresholding (off by "
+                         "default)")
     scale = ap.add_mutually_exclusive_group()
     scale.add_argument("--reduced", action="store_true",
                        help="reduced CPU-scale config (the default)")
@@ -129,8 +146,11 @@ def main():
     args = ap.parse_args()
     if get_config(args.arch).family == "dit":
         serve_diffusion(args.arch, reduced=not args.full, batch=args.batch,
-                        nfe=args.nfe, order=args.order,
-                        fused_update=not args.no_fused_update)
+                        nfe=args.nfe, order=args.order, solver=args.solver,
+                        fused_update=not args.no_fused_update,
+                        cfg_scale=args.cfg_scale,
+                        cfg_schedule=args.cfg_schedule,
+                        thresholding=args.thresholding)
         return
     serve(args.arch, reduced=not args.full, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,

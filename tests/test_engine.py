@@ -1,0 +1,301 @@
+"""The solver-agnostic engine: every zoo solver scan-compiled == its
+python-loop GridSolver reference; UniC bolt-on composition; fused CFG
+(one batched eval per step) == sequential guided_data_model + loop UniPC."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Grid, UniPC
+from repro.diffusion import (GaussianDPM, VPLinear, guidance_schedule,
+                             guided_data_model)
+from repro.engine import SOLVERS, EngineSpec, SamplerEngine, compile_table
+
+
+def _eps_np(dpm):
+    return lambda x, t: dpm.eps_model(np.asarray(x, np.float64), t)
+
+
+def _eps_jx(dpm):
+    sched = dpm.schedule
+
+    def eps(x, t):
+        t = jnp.asarray(t)
+        a = jnp.exp(sched.log_alpha_jax(t))
+        sig = jnp.sqrt(1 - a * a)
+        return sig * (x - a * dpm.mu) / (a * a * dpm.s ** 2 + sig * sig)
+
+    return eps
+
+
+def _engines(dpm):
+    """(scan engine on the jnp model, loop engine on the float64 np model)."""
+    return (SamplerEngine(dpm.schedule, eps=_eps_jx(dpm)),
+            SamplerEngine(dpm.schedule, eps=_eps_np(dpm)))
+
+
+# ---------------------------------------------------------------------------
+# scan-compiled zoo == python-loop references
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("solver,order", [
+    ("ddim", 1), ("dpmpp", 1), ("dpmpp", 2), ("dpmpp", 3),
+    ("pndm", 4), ("deis", 2), ("deis", 3), ("unipc", 2), ("unipc", 3),
+])
+@pytest.mark.parametrize("nfe", [5, 10, 20])
+def test_scan_compiled_matches_loop(gaussian_dpm, x_T, solver, order, nfe):
+    spec = EngineSpec(solver=solver, order=order, nfe=nfe)
+    eng, eng_np = _engines(gaussian_dpm)
+    out = eng.build(spec, jit=False)(jnp.asarray(x_T, jnp.float32))
+    ref = eng_np.build_loop(spec)(x_T)
+    np.testing.assert_allclose(np.asarray(out, np.float64),
+                               np.asarray(ref, np.float64), atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("order", [2, 3])
+@pytest.mark.parametrize("nfe", [10, 20])
+def test_singlestep_dpm_scan_matches_loop(gaussian_dpm, x_T, order, nfe):
+    """DPM-Solver 2S/3S on the expanded grid. At very few grid steps the
+    re-based rows carry expm1(h)-sized coefficients whose fp32 cancellation
+    dominates (the compile itself is exact — see the fp64 test below), so
+    the fp32 bound is checked at NFE >= 10."""
+    spec = EngineSpec(solver="dpm", order=order, nfe=nfe)
+    eng, eng_np = _engines(gaussian_dpm)
+    out = eng.build(spec, jit=False)(jnp.asarray(x_T, jnp.float32))
+    ref = eng_np.build_loop(spec)(x_T)
+    np.testing.assert_allclose(np.asarray(out, np.float64),
+                               np.asarray(ref, np.float64), atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("order", [2, 3])
+def test_singlestep_dpm_compile_exact_fp64(gaussian_dpm, x_T, order):
+    """The expanded-grid re-basing is exact linear algebra: at float64 the
+    scan reproduces the python loop to near machine precision even at the
+    worst-conditioned grid (one or two giant-h steps)."""
+    from repro.core.unipc import unipc_sample_scan
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        spec = EngineSpec(solver="dpm", order=order, nfe=5)
+        eng, eng_np = _engines(gaussian_dpm)
+        tab = eng.compile(spec)
+        out = unipc_sample_scan(eng.model_fn(spec, tab),
+                                jnp.asarray(x_T, jnp.float64), tab,
+                                fused_update=False, dtype=jnp.float64)
+        ref = eng_np.build_loop(spec)(x_T)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-9, rtol=0)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("solver,order", [
+    ("ddim", 1), ("dpmpp", 2), ("dpmpp", 3), ("pndm", 4), ("deis", 3),
+])
+def test_unic_bolt_on_scan_matches_loop(gaussian_dpm, x_T, solver, order):
+    """Table 2 on the scan path: the method-agnostic UniC composes with any
+    compiled solver — same rows the python loop's CorrectorConfig applies —
+    and improves the solution at the same grid."""
+    spec = EngineSpec(solver=solver, order=order, nfe=16, use_corrector=True)
+    eng, eng_np = _engines(gaussian_dpm)
+    out = eng.build(spec, jit=False)(jnp.asarray(x_T, jnp.float32))
+    ref = eng_np.build_loop(spec)(x_T)
+    np.testing.assert_allclose(np.asarray(out, np.float64),
+                               np.asarray(ref, np.float64), atol=1e-5, rtol=0)
+    plain = eng.build(EngineSpec(solver=solver, order=order, nfe=16),
+                      jit=False)(jnp.asarray(x_T, jnp.float32))
+    g = Grid.build(gaussian_dpm.schedule, 16)
+    exact = gaussian_dpm.exact_solution(x_T, g.t[-1])
+
+    def err(x0):
+        return float(np.max(np.abs(np.asarray(x0, np.float64) - exact)))
+
+    assert err(out) < err(plain), (solver, err(out), err(plain))
+
+
+def test_wide_k_tables_through_kernel_dispatch(gaussian_dpm):
+    """PLMS-4 + UniC-4 produces the widest combine in the zoo (6 terms at
+    the corrector); the fused dispatch (and the interpret-mode Pallas
+    kernel) must agree with the pinned jnp tensordot reference."""
+    from repro.core.unipc import unipc_sample_scan
+    from repro.kernels.unipc_update import ops as fused_ops
+
+    eng, _ = _engines(gaussian_dpm)
+    spec = EngineSpec(solver="pndm", nfe=12, use_corrector=True)
+    tab = eng.compile(spec)
+    assert tab.w_pred.shape[1] == 3  # K=3 -> corrector combine has 6 terms
+    model = eng.model_fn(spec, tab)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(2, 8)), jnp.float32)
+    fused = unipc_sample_scan(model, x, tab, fused_update=True)
+    ref = unipc_sample_scan(model, x, tab, fused_update=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               atol=1e-5, rtol=0)
+    # the Pallas kernel itself (interpret mode off-TPU) at K=6
+    terms = jnp.asarray(np.random.default_rng(4).normal(size=(6, 2, 200)),
+                        jnp.float32)
+    w = jnp.asarray(np.random.default_rng(5).normal(size=(6,)), jnp.float32)
+    out = fused_ops.weighted_combine(terms, w, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.tensordot(w, terms, axes=1)),
+                               atol=1e-5, rtol=0)
+
+
+def test_engine_scan_is_jittable(gaussian_dpm):
+    eng, _ = _engines(gaussian_dpm)
+    run = eng.build(EngineSpec(solver="dpmpp", order=2, nfe=8))
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8))
+    out = run(x)
+    assert out.shape == x.shape and np.all(np.isfinite(np.asarray(out)))
+
+
+# ---------------------------------------------------------------------------
+# fused CFG
+# ---------------------------------------------------------------------------
+
+
+def _cfg_setup(vp):
+    cond = GaussianDPM(vp, mu=0.7, s=0.35)
+    uncond = GaussianDPM(vp, mu=-0.4, s=0.5)
+    eps_c, eps_u = _eps_jx(cond), _eps_jx(uncond)
+
+    def eps_stacked(xx, t):
+        x1, x2 = jnp.split(xx, 2, axis=0)
+        return jnp.concatenate([eps_c(x1, t), eps_u(x2, t)], axis=0)
+
+    return eps_c, eps_u, eps_stacked
+
+
+@pytest.mark.parametrize("thresholding", [False, True])
+def test_fused_cfg_matches_guided_loop(vp, thresholding):
+    """Fused-CFG-in-scan (one stacked batched eval per step) == sequential
+    guided_data_model (two evals per step) + python-loop UniPC."""
+    eps_c, eps_u, eps_stacked = _cfg_setup(vp)
+    x_T = jnp.asarray(
+        np.random.default_rng(0).normal(size=(4, 8)), jnp.float32)
+    eng = SamplerEngine(vp, eps=eps_c, eps_stacked=eps_stacked,
+                        eps_uncond=eps_u)
+    spec = EngineSpec(solver="unipc", order=3, nfe=10, cfg_scale=2.0,
+                      thresholding=thresholding)
+    out = eng.build(spec)(x_T)
+    gm = guided_data_model(vp, eps_c, eps_u, guidance_scale=2.0,
+                           thresholding=thresholding)
+    ref = UniPC(gm, Grid.build(vp, 10), order=3,
+                prediction="data").sample_pc(x_T, use_corrector=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=0)
+
+
+def test_cfg_one_batched_eval_per_step(vp):
+    """The acceptance property: with cfg_scale != 0, the scan performs
+    exactly one network call per eval point, each on the stacked 2B batch —
+    never cfg_model's two sequential B-sized calls."""
+    eps_c, eps_u, _ = _cfg_setup(vp)
+    calls = []
+    B, nfe = 3, 6
+
+    def eps_stacked(xx, t):
+        rows = xx.shape[0]  # static under trace
+        jax.debug.callback(lambda _: calls.append(rows), t)
+        x1, x2 = jnp.split(xx, 2, axis=0)
+        return jnp.concatenate([eps_c(x1, t), eps_u(x2, t)], axis=0)
+
+    eng = SamplerEngine(vp, eps=eps_c, eps_stacked=eps_stacked)
+    run = eng.build(EngineSpec(solver="unipc", order=3, nfe=nfe,
+                               cfg_scale=2.0))
+    x_T = jnp.asarray(np.random.default_rng(1).normal(size=(B, 8)),
+                      jnp.float32)
+    jax.block_until_ready(run(x_T))
+    assert len(calls) == nfe + 1, calls
+    assert all(c == 2 * B for c in calls), calls
+
+
+def test_serve_diffusion_cfg_one_batched_eval_per_step(monkeypatch):
+    """`serve_diffusion --cfg-scale 2.0` end to end: the dit eps-net is
+    entered once per eval point, always on the stacked 2B batch."""
+    from repro.launch.serve import serve_diffusion
+    from repro.models import api
+
+    calls = []
+    real_factory = api.eps_network
+
+    def counting_factory(cfg):
+        net = real_factory(cfg)
+
+        def wrapped(p, x_t, t, batch):
+            jax.debug.callback(lambda _: calls.append(x_t.shape[0]), t)
+            return net(p, x_t, t, batch)
+
+        return wrapped
+
+    monkeypatch.setattr(api, "eps_network", counting_factory)
+    batch, nfe = 2, 4
+    out = serve_diffusion("dit-cifar", reduced=True, batch=batch, nfe=nfe,
+                          cfg_scale=2.0)
+    assert out.shape[0] == batch and np.isfinite(out).all()
+    # serve runs the jitted scan twice (compile-timing + serve-timing pass)
+    assert len(calls) == 2 * (nfe + 1), calls
+    assert all(c == 2 * batch for c in calls), calls
+
+
+def test_cfg_schedule_columns(vp):
+    """Guidance-scale schedules ride the table as per-eval columns."""
+    g = guidance_schedule(2.0, 5, "constant")
+    np.testing.assert_allclose(g, 2.0)
+    g = guidance_schedule(2.0, 5, "linear", scale_end=0.0)
+    np.testing.assert_allclose(g, [2.0, 1.5, 1.0, 0.5, 0.0])
+    g = guidance_schedule(2.0, 5, "cosine", scale_end=0.0)
+    assert g[0] == 2.0 and abs(g[-1]) < 1e-12 and np.all(np.diff(g) < 0)
+    eps_c, eps_u, eps_stacked = _cfg_setup(vp)
+    eng = SamplerEngine(vp, eps=eps_c, eps_stacked=eps_stacked)
+    tab = eng.compile(EngineSpec(solver="dpmpp", order=2, nfe=6,
+                                 cfg_scale=2.0, cfg_schedule="linear",
+                                 cfg_scale_end=0.5, thresholding=True))
+    assert set(tab.model_cols) == {"g", "tq"}
+    assert len(tab.model_cols["g"]) == len(tab.timesteps) == 7
+    assert tab.model_cols["g"][0] == 2.0 and tab.model_cols["g"][-1] == 0.5
+    np.testing.assert_allclose(tab.model_cols["tq"], 0.995)
+    # the scheduled-cfg scan runs and stays finite
+    x_T = jnp.asarray(np.random.default_rng(2).normal(size=(2, 8)),
+                      jnp.float32)
+    out = eng.build(EngineSpec(solver="dpmpp", order=2, nfe=6, cfg_scale=2.0,
+                               cfg_schedule="cosine", cfg_scale_end=0.0))(x_T)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+# ---------------------------------------------------------------------------
+# registry / spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_the_zoo():
+    assert {"unipc", "ddim", "dpmpp", "pndm", "deis", "dpm"} <= set(SOLVERS)
+
+
+def test_spec_validation(vp):
+    with pytest.raises(KeyError):
+        EngineSpec(solver="euler").resolve()
+    with pytest.raises(ValueError):  # dpmpp is data-prediction only
+        EngineSpec(solver="dpmpp", prediction="noise").resolve()
+    with pytest.raises(ValueError):  # UniC is grid-anchored
+        EngineSpec(solver="dpm", use_corrector=True).resolve()
+    with pytest.raises(ValueError):  # thresholding needs data prediction
+        eng = SamplerEngine(vp, eps=lambda x, t: x)
+        eng.compile(EngineSpec(solver="deis", thresholding=True))
+    # resolve fills solver defaults
+    spec = EngineSpec(solver="unipc").resolve()
+    assert spec.prediction == "data" and spec.use_corrector
+    spec = EngineSpec(solver="pndm").resolve()
+    assert spec.prediction == "noise" and not spec.use_corrector
+
+
+def test_unipc_table_unchanged_through_engine(vp):
+    """The engine's unipc compile is exactly core's build_unipc_schedule."""
+    from repro.core import make_unipc_schedule
+
+    tab = compile_table(EngineSpec(solver="unipc", order=3, nfe=8), vp)
+    ref = make_unipc_schedule(vp, 8, order=3, prediction="data")
+    for f in ("base_x", "base_m0", "w_pred", "w_corr_prev", "w_corr_new",
+              "use_corrector", "out_scale", "timesteps"):
+        np.testing.assert_array_equal(getattr(tab, f), getattr(ref, f))
