@@ -1,0 +1,94 @@
+"""Continuous-batching serving benchmark -> BENCH_serve.json.
+
+For each dit workload shape (DESIGN.md §6), serve the same Poisson arrival
+trace — at 2x the slot-capacity rate, the acceptance setting — through two
+admission policies over the *same* AOT-compiled per-slot step program:
+
+* ``continuous`` — admit-on-free-slot (the `serving.SlotScheduler` default);
+* ``gang``       — sequential full-batch: admit only into an empty batch,
+                   i.e. what `launch/serve.py` did before the scheduler.
+
+Emits the CSV row per run (us = measured wall per tick) and writes the full
+metric rows (throughput, p50/p95 latency in ticks and seconds, slot
+occupancy, evals-per-latent, AOT compile seconds) to BENCH_serve.json at the
+repo root so the perf trajectory is tracked across PRs. The derived ratio is
+continuous-over-gang throughput — the number that must stay > 1.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+
+from .common import emit, timed  # noqa: F401  (timed: CSV-harness parity)
+
+ARCHS = ("dit-cifar", "dit-i256")
+SLOTS = 4
+NFE = 8
+REQUESTS = 16
+
+
+def _program(arch: str, cfg_scale: float, seed: int = 0):
+    from repro.configs.registry import get_config
+    from repro.diffusion import VPLinear
+    from repro.engine import EngineSpec
+    from repro.launch.sample import build_engine
+    from repro.models import api
+
+    cfg = get_config(arch).reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(seed))
+    engine = build_engine(cfg, params, VPLinear(), SLOTS, seed,
+                          want_cfg=cfg_scale != 0.0)
+    spec = EngineSpec(solver="unipc", order=3, nfe=NFE, cfg_scale=cfg_scale)
+    return (engine.build_step(spec), (cfg.patch_tokens, cfg.latent_dim))
+
+
+def _serve(arch: str, cfg_scale: float, gang: bool):
+    from repro.serving import SlotScheduler, poisson_requests, run_trace
+
+    program, sample_shape = _program(arch, cfg_scale)
+    sched = SlotScheduler(program, SLOTS, sample_shape, gang=gang)
+    compile_s = sched.aot_compile()
+    rate = 2.0 * SLOTS / program.n_rows  # 2x capacity: the acceptance point
+    cfg_scales = [1.5, 2.0, 3.0] if cfg_scale else None
+    reqs = poisson_requests(REQUESTS, rate, seed=11, cfg_scales=cfg_scales)
+    m = run_trace(sched, reqs)
+    row = m.row()
+    row.update(arch=arch, cfg_scale=cfg_scale, aot_compile_s=compile_s,
+               arrival_rate_per_tick=rate)
+    return row
+
+
+def bench_serve(out_path: str = "BENCH_serve.json"):
+    """Continuous vs gang serving at both dit shapes; writes BENCH_serve.json."""
+    rows = []
+    for arch in ARCHS:
+        for cfg_scale in ((0.0, 2.0) if arch == "dit-cifar" else (0.0,)):
+            cont = _serve(arch, cfg_scale, gang=False)
+            gang = _serve(arch, cfg_scale, gang=True)
+            rows += [cont, gang]
+            ratio = cont["throughput_per_tick"] / gang["throughput_per_tick"]
+            tag = f"{arch}_cfg{cfg_scale:g}"
+            emit(f"serve/{tag}/continuous", cont["tick_s"] * 1e6,
+                 f"rps={cont['throughput_rps']:.2f};"
+                 f"p95_ms={cont['latency_s_p95']*1e3:.1f};"
+                 f"evals_per_latent={cont['evals_per_latent']:.2f}")
+            emit(f"serve/{tag}/gang", gang["tick_s"] * 1e6,
+                 f"rps={gang['throughput_rps']:.2f};"
+                 f"p95_ms={gang['latency_s_p95']*1e3:.1f};"
+                 f"evals_per_latent={gang['evals_per_latent']:.2f}")
+            emit(f"serve/{tag}/continuous_over_gang", 0.0,
+                 f"throughput_ratio={ratio:.2f}")
+            assert ratio > 1.0, (
+                f"continuous batching must beat sequential full-batch "
+                f"serving at 2x arrival rate; got ratio {ratio:.3f} ({tag})")
+    with open(out_path, "w") as f:
+        json.dump({"slots": SLOTS, "nfe": NFE, "requests": REQUESTS,
+                   "runs": rows}, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    bench_serve()

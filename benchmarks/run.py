@@ -14,10 +14,11 @@ sys.path.insert(0, "src")
 
 def main() -> None:
     from . import (bench_engine, bench_figs, bench_kernels, bench_roofline,
-                   bench_tables)
+                   bench_serve, bench_tables)
 
     benches = {
         "engine": bench_engine.bench_engine,
+        "serve": bench_serve.bench_serve,
         "table1": bench_tables.table1_bh_ablation,
         "table2": bench_tables.table2_unic_any_solver,
         "table3": bench_tables.table3_oracle,

@@ -163,6 +163,42 @@ class UniPCSchedule:
 SolverTable = UniPCSchedule
 
 
+def augment_step_rows(sched: UniPCSchedule) -> dict:
+    """The row-gatherable step table: one numpy float64 array per column, each
+    with M+1 rows indexable by a per-slot step index.
+
+    Row 0 is the *init row* — an identity transfer (base_x = 1, every other
+    weight 0, corrector off) whose model eval lands at timesteps[0]. A slot
+    whose ring buffer has been zeroed and which executes rows 0, 1, ..., M on
+    consecutive ticks reproduces the uniform scan exactly: the init row pushes
+    e_0 into the ring, and the zero-padded weight rows of the early body rows
+    null the still-empty ring slots, so a freshly admitted slot warms up at
+    low effective order as data, never as shape (DESIGN.md §2, §9).
+
+    Model columns (guidance scale, thresholding percentile) keep their native
+    (M+1,) per-eval layout — row i is the column value at eval i.
+    """
+    base_x_c = sched.base_x_corr if sched.base_x_corr is not None else sched.base_x
+    base_m0_c = sched.base_m0_corr if sched.base_m0_corr is not None else sched.base_m0
+
+    def aug(v, head):
+        v = np.asarray(v, np.float64)
+        head_row = np.full((1,) + v.shape[1:], head, np.float64)
+        return np.concatenate([head_row, v], axis=0)
+
+    rows = dict(
+        base_x=aug(sched.base_x, 1.0), base_m0=aug(sched.base_m0, 0.0),
+        base_x_c=aug(base_x_c, 1.0), base_m0_c=aug(base_m0_c, 0.0),
+        w_pred=aug(sched.w_pred, 0.0), w_corr_prev=aug(sched.w_corr_prev, 0.0),
+        w_corr_new=aug(sched.w_corr_new, 0.0),
+        use_c=aug(sched.use_corrector, 0.0), out_scale=aug(sched.out_scale, 0.0),
+        t=np.asarray(sched.timesteps, np.float64),
+    )
+    for k, v in (sched.model_cols or {}).items():
+        rows[f"mc_{k}"] = np.asarray(v, np.float64)
+    return rows
+
+
 def build_unipc_schedule(
     *,
     lambdas: np.ndarray,

@@ -11,6 +11,10 @@ Three implementations, all sharing the coefficient machinery in `coeffs.py`:
   per-step table, the whole sampler is one `lax.scan` that jits, shards, and
   routes the state update through the fused Pallas kernel by default
   (`fused_update=True`; the dispatch policy lives in `kernels.unipc_update.ops`).
+  Since the continuous-batching refactor it is a thin scan over
+  `unipc_step_fn`, the per-row step function that also powers the serving
+  scheduler (`repro.serving`): with a per-slot index vector, every batch
+  element executes its *own* row of the table (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -23,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .coeffs import UniPCSchedule, build_unipc_schedule, default_order_schedule
+from .coeffs import (UniPCSchedule, augment_step_rows, build_unipc_schedule,
+                     default_order_schedule)
 from .solver import CorrectorConfig, Grid, GridSolver, History, unified_step
 
 
@@ -155,6 +160,93 @@ def make_unipc_schedule(schedule, num_steps, *, order=3, prediction="data",
     )
 
 
+def unipc_step_fn(
+    model_fn: Callable,
+    sched: UniPCSchedule,
+    *,
+    fused_update: bool = True,
+    dtype=jnp.float32,
+):
+    """The per-row step function: (step, n_rows) over the augmented table.
+
+    `step((x, E), idx, model_kwargs=None) -> (x, E)` executes one table row
+    per sample, where the table is `coeffs.augment_step_rows(sched)` — the
+    init row (identity transfer, eval at timesteps[0]) followed by the M body
+    rows. Two index shapes, one body:
+
+    * idx scalar — one uniform row for the whole state: exactly one iteration
+      of the classic scan (weights enter the combine as scalars). This is what
+      `unipc_sample_scan` folds over.
+    * idx (B,) — *per-slot* rows: every batch element gathers its own row
+      (weights, timestep, model columns), so a heterogeneous slot batch can
+      sit at different trajectory positions — the continuous-batching step
+      (DESIGN.md §9). Weights enter the combine as per-slot (K+2, B) columns
+      and the model sees per-sample timesteps/columns. A fresh slot needs its
+      ring zeroed and idx = 0; idle slots park on the init row (clipped), an
+      identity update.
+
+    E is the (K+1, ...) eval ring, newest first; warm-up is data (zero-padded
+    weight rows over a zeroed ring), never shape. `model_kwargs` entries are
+    forwarded to the model on top of the gathered per-eval columns — the hook
+    per-request guidance scales ride in on.
+    """
+    K = sched.w_pred.shape[1]
+    cols = sched.model_cols or {}
+    rows_np = augment_step_rows(sched)
+    n_rows = len(rows_np["t"])
+    tab = {k: jnp.asarray(v, dtype) for k, v in rows_np.items()}
+    sign = jnp.asarray(sched.sign, dtype)
+
+    if fused_update:
+        from ..kernels.unipc_update import ops as fused_ops
+        combine = fused_ops.weighted_combine
+    else:
+        def combine(terms, weights):
+            # terms: (K+2, *x); weights: (K+2,) or per-slot (K+2, B)
+            if weights.ndim == 2:
+                w = weights.reshape(weights.shape + (1,) * (terms.ndim - 2))
+                return jnp.sum(w * terms, axis=0)
+            return jnp.tensordot(weights, terms, axes=1)
+
+    def step(carry, idx, model_kwargs=None):
+        x, E = carry
+        idx = jnp.clip(jnp.asarray(idx), 0, n_rows - 1)
+        per_slot = idx.ndim == 1
+        row = {k: v[idx] for k, v in tab.items()}
+
+        def wstack(base_x, base_m0, w_prev, w_new=None):
+            # scalar rows: (K,) weights; per-slot rows: (B, K) -> (K, B)
+            scale = row["out_scale"][..., None] if per_slot else row["out_scale"]
+            parts = [base_x[None], base_m0[None],
+                     jnp.moveaxis(sign * scale * w_prev, -1, 0)]
+            if w_new is not None:
+                parts.append((sign * row["out_scale"] * w_new)[None])
+            return jnp.concatenate(parts, axis=0)
+
+        m0 = E[0]
+        diffs = E[1:] - m0[None] if K > 0 else jnp.zeros((0,) + x.shape, x.dtype)
+        extras = {k: row[f"mc_{k}"] for k in cols}
+        if model_kwargs:
+            extras = {**extras, **model_kwargs}
+        # predictor
+        terms = jnp.concatenate([x[None], m0[None], diffs], axis=0)
+        x_pred = combine(terms, wstack(row["base_x"], row["base_m0"],
+                                       row["w_pred"]))
+        e_new = model_fn(x_pred, row["t"], **extras)
+        # corrector (re-uses e_new; no extra NFE)
+        d_new = e_new - m0
+        terms_c = jnp.concatenate([terms, d_new[None]], axis=0)
+        x_corr = combine(terms_c, wstack(row["base_x_c"], row["base_m0_c"],
+                                         row["w_corr_prev"], row["w_corr_new"]))
+        use_c = (row["use_c"].reshape((-1,) + (1,) * (x.ndim - 1))
+                 if per_slot else row["use_c"])
+        x_next = x_pred + use_c * (x_corr - x_pred)
+        E_next = jnp.concatenate([e_new[None], E[:-1]], axis=0)
+        return (x_next, E_next)
+
+    return step, n_rows
+
+
 def unipc_sample_scan(
     model_fn: Callable,
     x_T: jnp.ndarray,
@@ -163,7 +255,9 @@ def unipc_sample_scan(
     fused_update: bool = True,
     dtype=jnp.float32,
 ):
-    """Multistep UniPC as a single lax.scan over a static coefficient table.
+    """Multistep UniPC as a single lax.scan over the step function: rows
+    0..M of the augmented table with a uniform index (row 0 is the init eval
+    at timesteps[0] over a zeroed ring — see `coeffs.augment_step_rows`).
 
     model_fn(x, t) -> prediction of `sched.prediction` type. The eval buffer is a
     ring of `order` slots; warm-up and order schedules are realized purely through
@@ -183,59 +277,13 @@ def unipc_sample_scan(
     function. `sched.model_cols` entries ((M+1,) per-eval arrays, e.g. a
     guidance-scale schedule) are passed to `model_fn` as keyword arguments.
     """
+    step, n_rows = unipc_step_fn(model_fn, sched, fused_update=fused_update,
+                                 dtype=dtype)
     K = sched.w_pred.shape[1]
-    f = lambda a: jnp.asarray(a, dtype=dtype)
-    base_x_c = sched.base_x_corr if sched.base_x_corr is not None else sched.base_x
-    base_m0_c = sched.base_m0_corr if sched.base_m0_corr is not None else sched.base_m0
-    cols = sched.model_cols or {}
-    tab = dict(
-        base_x=f(sched.base_x), base_m0=f(sched.base_m0),
-        base_x_c=f(base_x_c), base_m0_c=f(base_m0_c),
-        w_pred=f(sched.w_pred), w_corr_prev=f(sched.w_corr_prev),
-        w_corr_new=f(sched.w_corr_new), use_c=f(sched.use_corrector),
-        out_scale=f(sched.out_scale), t=f(sched.timesteps[1:]),
-        **{f"mc_{k}": f(np.asarray(v)[1:]) for k, v in cols.items()},
-    )
-    sign = jnp.asarray(sched.sign, dtype)
-
-    if fused_update:
-        from ..kernels.unipc_update import ops as fused_ops
-        combine = fused_ops.weighted_combine
-    else:
-        def combine(terms, weights):
-            # terms: (K+2, *x), weights: (K+2,)
-            return jnp.tensordot(weights, terms, axes=1)
-
-    def body(carry, step):
-        x, E = carry
-        m0 = E[0]
-        diffs = E[1:] - m0[None] if K > 0 else jnp.zeros((0,) + x.shape, x.dtype)
-        extras = {k: step[f"mc_{k}"] for k in cols}
-        # predictor
-        terms = jnp.concatenate([x[None], m0[None], diffs], axis=0)
-        wts_p = jnp.concatenate(
-            [step["base_x"][None], step["base_m0"][None],
-             sign * step["out_scale"] * step["w_pred"]], axis=0)
-        x_pred = combine(terms, wts_p)
-        e_new = model_fn(x_pred, step["t"], **extras)
-        # corrector (re-uses e_new; no extra NFE)
-        d_new = e_new - m0
-        terms_c = jnp.concatenate([terms, d_new[None]], axis=0)
-        wts_c = jnp.concatenate(
-            [step["base_x_c"][None], step["base_m0_c"][None],
-             sign * step["out_scale"] * step["w_corr_prev"],
-             (sign * step["out_scale"] * step["w_corr_new"])[None]], axis=0)
-        x_corr = combine(terms_c, wts_c)
-        x_next = x_pred + step["use_c"] * (x_corr - x_pred)
-        E_next = jnp.concatenate([e_new[None], E[:-1]], axis=0)
-        return (x_next, E_next), None
-
-    # the initial timestep rides the schedule table explicitly — the first
-    # model eval is at sched.timesteps[0], with row 0 of every model column
-    t0 = jnp.asarray(sched.timesteps[0], dtype)
-    e0 = model_fn(x_T, t0, **{k: f(np.asarray(v)[0]) for k, v in cols.items()})
-    E = jnp.concatenate([e0[None], jnp.zeros((K,) + x_T.shape, x_T.dtype)], axis=0)
-    (x, _), _ = jax.lax.scan(body, (x_T.astype(dtype), E.astype(dtype)), tab)
+    x0 = x_T.astype(dtype)
+    E0 = jnp.zeros((K + 1,) + x_T.shape, dtype)
+    (x, _), _ = jax.lax.scan(lambda c, j: (step(c, j), None), (x0, E0),
+                             jnp.arange(n_rows))
     return x
 
 

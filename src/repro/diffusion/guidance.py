@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -40,12 +41,21 @@ def cfg_model_fused(eps_stacked: Callable):
     is [cond_0..cond_{B-1}, null_0..null_{B-1}] (e.g. a DiT called with
     class_ids = concat([ids, null_ids])). The returned fn takes the guidance
     scale `g` as an argument so a per-step scale schedule can ride the scan's
-    static table.
+    static table. Both `t` and `g` may be per-sample (B,) — the per-slot
+    serving path, where each slot carries its own timestep and request-level
+    guidance scale; t is then tiled to the 2B stacked batch and g broadcast
+    over the sample dims. Extra keyword arguments (per-slot conditioning,
+    e.g. class ids) pass through to eps_stacked untouched.
     """
 
-    def fn(x, t, g):
-        ee = eps_stacked(jnp.concatenate([x, x], axis=0), t)
+    def fn(x, t, g, **extra):
+        t = jnp.asarray(t)
+        tt = jnp.concatenate([t, t], axis=0) if t.ndim == 1 else t
+        ee = eps_stacked(jnp.concatenate([x, x], axis=0), tt, **extra)
         e_cond, e_uncond = jnp.split(ee, 2, axis=0)
+        g = jnp.asarray(g)
+        if g.ndim == 1:
+            g = g.reshape(g.shape + (1,) * (e_cond.ndim - 1))
         return (1.0 + g) * e_cond - g * e_uncond
 
     return fn
@@ -72,9 +82,15 @@ def guidance_schedule(scale: float, n_evals: int, kind: str = "constant",
 
 def dynamic_threshold(x0, percentile: float = 0.995, floor: float = 1.0):
     """Imagen-style dynamic thresholding (Saharia et al., 2022): clip x0 to the
-    per-sample `percentile` absolute value and rescale into [-floor, floor]."""
+    per-sample `percentile` absolute value and rescale into [-floor, floor].
+    `percentile` may be a (B,) array — per-slot percentiles in the
+    continuous-batching step, each sample quantiled at its own level."""
     flat = jnp.abs(x0.reshape(x0.shape[0], -1))
-    s = jnp.quantile(flat, percentile, axis=-1)
+    percentile = jnp.asarray(percentile)
+    if percentile.ndim == 1:
+        s = jax.vmap(lambda row, q: jnp.quantile(row, q))(flat, percentile)
+    else:
+        s = jnp.quantile(flat, percentile, axis=-1)
     s = jnp.maximum(s, floor).reshape((-1,) + (1,) * (x0.ndim - 1))
     return jnp.clip(x0, -s, s) / s * floor
 

@@ -34,15 +34,26 @@ def diffusion_loss(schedule: NoiseSchedule, eps_model: Callable, x0, rng,
     return jnp.mean(err)
 
 
+def _bcast_t(coef, t, x):
+    """Align a t-shaped coefficient with x: scalar t broadcasts as before; a
+    (B,) per-sample t (the continuous-batching step, where every slot sits at
+    its own timestep) gains trailing singleton dims to scale (B, ...) states."""
+    if jnp.ndim(t) == 0:
+        return coef
+    return coef.reshape(coef.shape + (1,) * (jnp.ndim(x) - jnp.ndim(t)))
+
+
 def eps_to_x0(schedule: NoiseSchedule, x_t, t, eps):
-    """x0 = (x_t - sigma_t eps) / alpha_t (App. A.1)."""
-    a, s = schedule.alpha_sigma_jax(jnp.asarray(t))
-    return (x_t - s * eps) / a
+    """x0 = (x_t - sigma_t eps) / alpha_t (App. A.1). t: scalar or (B,)."""
+    t = jnp.asarray(t)
+    a, s = schedule.alpha_sigma_jax(t)
+    return (x_t - _bcast_t(s, t, x_t) * eps) / _bcast_t(a, t, x_t)
 
 
 def x0_to_eps(schedule: NoiseSchedule, x_t, t, x0):
-    a, s = schedule.alpha_sigma_jax(jnp.asarray(t))
-    return (x_t - a * x0) / s
+    t = jnp.asarray(t)
+    a, s = schedule.alpha_sigma_jax(t)
+    return (x_t - _bcast_t(a, t, x_t) * x0) / _bcast_t(s, t, x_t)
 
 
 def wrap_model(schedule: NoiseSchedule, eps_model: Callable, prediction: str):

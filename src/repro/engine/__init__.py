@@ -5,10 +5,11 @@ entry pairs a per-step weight-table compiler with its python-loop reference.
 """
 
 from .specs import SOLVERS, EngineSpec, SolverDef, solver_def
-from .compiler import build_loop, compile_table
-from .engine import SamplerEngine
+from .compiler import build_loop, compile_table, step_guidance_profile
+from .engine import SamplerEngine, StepProgram
 
 __all__ = [
     "SOLVERS", "EngineSpec", "SolverDef", "solver_def",
-    "SamplerEngine", "compile_table", "build_loop",
+    "SamplerEngine", "StepProgram", "compile_table", "build_loop",
+    "step_guidance_profile",
 ]

@@ -55,6 +55,24 @@ def build_loop(spec: EngineSpec, noise_schedule, model_fn):
     return solver_def(spec.solver).loop(spec, noise_schedule, model_fn)
 
 
+def step_guidance_profile(tab: SolverTable, spec: EngineSpec) -> np.ndarray:
+    """(M+1,) guidance profile for the per-slot step path, host-side float64.
+
+    The step function carries the guidance scale as *per-slot state* (every
+    request its own scale) instead of the scan's absolute per-eval column, so
+    the table contributes only the schedule *shape*: the compiled `g` column
+    normalized by the spec's nominal scale. Effective per-slot scale at row i
+    is then `g_slot * profile[i]` — identically `g_slot` for the constant
+    schedule (profile == 1), and a proportional ramp for linear/cosine
+    schedules. Requires a compiled table with cfg on (a `g` model column).
+    """
+    cols = tab.model_cols or {}
+    if "g" not in cols or not spec.cfg_scale:
+        raise ValueError("guidance profile needs a table compiled with "
+                         "cfg_scale != 0")
+    return np.asarray(cols["g"], np.float64) / float(spec.cfg_scale)
+
+
 # ---------------------------------------------------------------------------
 # shared machinery
 # ---------------------------------------------------------------------------

@@ -9,6 +9,11 @@ The single entry point every launcher and benchmark builds on:
                                   cfg_scale=2.0, thresholding=True))
     x0 = run(x_T)
 
+`build` is the whole-trajectory path (one uniform batch, one scan);
+`build_step` compiles the same table into a per-slot `StepProgram` — the
+continuous-batching step function `repro.serving`'s scheduler drives, where
+every slot gathers its own table row and guidance scale (DESIGN.md §9).
+
 `build` compiles the solver's weight table (registry-driven — see
 `compiler.py`), wraps the eps-network into the table's prediction type, and
 jits one `unipc_sample_scan` over the result. Conditional sampling (the
@@ -24,20 +29,57 @@ paper's Table 9 setting) is fused into that same scan:
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Optional
+from dataclasses import dataclass, replace as dc_replace
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.coeffs import SolverTable
-from ..core.unipc import unipc_sample_scan
+from ..core.unipc import unipc_sample_scan, unipc_step_fn
 from ..diffusion.guidance import (cfg_model, cfg_model_fused,
                                   dynamic_threshold, guidance_schedule)
 from ..diffusion.process import eps_to_x0
 from ..diffusion.schedules import NoiseSchedule
-from .compiler import build_loop, compile_table
+from ..parallel.sharding import shard
+from .compiler import build_loop, compile_table, step_guidance_profile
 from .specs import EngineSpec, SOLVERS
+
+
+@dataclass
+class StepProgram:
+    """A compiled per-slot step program — what the serving scheduler drives.
+
+    step(state, idx[, g]) -> state advances every slot by one table row:
+    `state = (x, E)` with x (B, *sample) and E the (K+1, B, *sample) eval
+    ring, `idx` (B,) int32 the per-slot row index (0 = init row; idle slots
+    park there), and `g` (B,) float32 the per-slot guidance scale (only for
+    cfg-enabled programs). Slot batches are sharded over the data axis via
+    the active `parallel.sharding` rules (SERVE_RULES on the mesh; a no-op
+    single-device), so the same tick loop runs everywhere. One batched model
+    eval per call — a request admitted at tick tau and stepped through rows
+    0..n_rows-1 reproduces the uniform `build()` scan for its own
+    (solver, order, nfe, seed, cfg-scale) exactly.
+    """
+
+    step: Callable
+    n_rows: int          # ticks (= model evals) a request needs, M + 1
+    table: SolverTable
+    spec: EngineSpec
+    uses_cfg: bool
+    ring: int            # eval-ring slots carried per sample, K + 1
+
+    def init_state(self, slots: int, sample_shape: Tuple[int, ...],
+                   dtype=jnp.float32):
+        """Zeroed slot state: every slot idle on the init row."""
+        shape = tuple(sample_shape)
+        return (jnp.zeros((slots,) + shape, dtype),
+                jnp.zeros((self.ring, slots) + shape, dtype))
+
+    def init_g(self, slots: int):
+        """Per-slot guidance scales, seeded with the spec's nominal scale."""
+        return jnp.full((slots,), float(self.spec.cfg_scale or 0.0),
+                        jnp.float32)
 
 
 @dataclass
@@ -77,20 +119,22 @@ class SamplerEngine:
     # -- model ---------------------------------------------------------------
     def model_fn(self, spec: EngineSpec, tab: SolverTable) -> Callable:
         """Wrap the eps-net into the table's prediction type, consuming the
-        per-eval model columns the table carries (g, tq)."""
+        per-eval model columns the table carries (g, tq). Any further keyword
+        arguments (per-slot conditioning from a StepProgram's extras, e.g.
+        class ids) pass through to the eps-net."""
         spec = spec.resolve()
         if spec.cfg_scale:
             if self.eps_stacked is None:
                 raise ValueError("cfg_scale != 0 needs eps_stacked (a 2B "
                                  "cond+uncond batched eps-net)")
-            eps = cfg_model_fused(self.eps_stacked)   # (x, t, g)
+            eps = cfg_model_fused(self.eps_stacked)   # (x, t, g, **extra)
         else:
-            eps = lambda x, t, g=None: self.eps(x, t)
+            eps = lambda x, t, g=None, **extra: self.eps(x, t, **extra)
 
         schedule = self.schedule
 
-        def model(x, t, g=None, tq=None):
-            e = eps(x, t, g)
+        def model(x, t, g=None, tq=None, **extra):
+            e = eps(x, t, g, **extra)
             if tab.prediction == "noise":
                 return e
             x0 = eps_to_x0(schedule, x, t, e)
@@ -111,6 +155,48 @@ class SamplerEngine:
         run = lambda x_T: unipc_sample_scan(model, x_T, tab,
                                             fused_update=spec.fused_update)
         return jax.jit(run) if jit else run
+
+    def build_step(self, spec: EngineSpec, jit: bool = True,
+                   table: Optional[SolverTable] = None) -> StepProgram:
+        """spec -> StepProgram: the per-slot step function for continuous
+        batching (DESIGN.md §9). The same table rows `build` scans uniformly,
+        gathered per slot; the guidance scale becomes per-slot state
+        (multiplied by the table's schedule profile) so every request can
+        carry its own cfg scale through one compiled program."""
+        spec = spec.resolve()
+        tab = table if table is not None else self.compile(spec)
+        model = self.model_fn(spec, tab)
+        uses_cfg = bool(spec.cfg_scale)
+        step_tab = tab
+        prof = None
+        if uses_cfg:
+            # the scan's absolute g column is replaced by per-slot state x
+            # schedule profile; the core step must not gather it
+            prof = jnp.asarray(step_guidance_profile(tab, spec), jnp.float32)
+            cols = {k: v for k, v in (tab.model_cols or {}).items()
+                    if k != "g"}
+            step_tab = dc_replace(tab, model_cols=cols)
+        core_step, n_rows = unipc_step_fn(model, step_tab,
+                                          fused_update=spec.fused_update)
+
+        def _shard_state(x, E):
+            x = shard(x, "batch", *([None] * (x.ndim - 1)))
+            E = shard(E, None, "batch", *([None] * (E.ndim - 2)))
+            return x, E
+
+        def step(state, idx, g=None, extras=None):
+            x, E = _shard_state(*state)
+            kw = dict(extras) if extras else {}
+            if uses_cfg:
+                gs = (jnp.full(idx.shape, float(spec.cfg_scale), jnp.float32)
+                      if g is None else jnp.asarray(g, jnp.float32))
+                kw["g"] = gs * prof[jnp.clip(idx, 0, n_rows - 1)]
+            x, E = core_step((x, E), idx, model_kwargs=kw or None)
+            return _shard_state(x, E)
+
+        return StepProgram(step=jax.jit(step) if jit else step, n_rows=n_rows,
+                           table=tab, spec=spec, uses_cfg=uses_cfg,
+                           ring=tab.w_pred.shape[1] + 1)
 
     def build_loop(self, spec: EngineSpec) -> Callable:
         """The python-loop GridSolver reference for the same spec — identical

@@ -17,6 +17,12 @@ states tile directly, no flat copy. TILE is a multiple of 128 lanes; arbitrary
 N is handled by the boundary tile — Pallas pads the load and masks the store
 for blocks that overrun the array, so no host-side padding of the state is
 needed. Accumulation is always fp32, also for bf16 terms (DESIGN.md §4.2).
+
+Per-slot weights (continuous batching, DESIGN.md §9): weights may instead be
+(K, B) — every batch row combines with its *own* column of weights, which is
+what lets a heterogeneous slot batch sit at different rows of the solver
+table. Same kernel body: the weight block index just follows the batch grid
+coordinate instead of broadcasting column 0.
 """
 
 from __future__ import annotations
@@ -40,24 +46,29 @@ def _kernel(w_ref, t_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fused_combine_batched(terms, weights, interpret: bool = False):
-    """terms: (K, B, N) with arbitrary N; weights: (K,). Returns (B, N).
+    """terms: (K, B, N) with arbitrary N; weights: (K,) or (K, B). Returns (B, N).
 
     Grid is (B, ceil(N / TILE)); the last column of the grid is a padded
-    remainder tile whose out-of-bounds lanes Pallas masks on store.
+    remainder tile whose out-of-bounds lanes Pallas masks on store. (K,)
+    weights broadcast over the batch; (K, B) weights are per-slot — grid row b
+    reads its own (K, 1) weight column.
     """
     K, B, N = terms.shape
     grid = (B, pl.cdiv(N, TILE))
+    per_slot = weights.ndim == 2
+    w = (weights if per_slot else weights.reshape(K, 1)).astype(jnp.float32)
+    w_map = (lambda b, i: (0, b)) if per_slot else (lambda b, i: (0, 0))
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((K, 1), lambda b, i: (0, 0)),
+            pl.BlockSpec((K, 1), w_map),
             pl.BlockSpec((K, 1, TILE), lambda b, i: (0, b, i)),
         ],
         out_specs=pl.BlockSpec((1, TILE), lambda b, i: (b, i)),
         out_shape=jax.ShapeDtypeStruct((B, N), terms.dtype),
         interpret=interpret,
-    )(weights.reshape(K, 1).astype(jnp.float32), terms)
+    )(w, terms)
 
 
 def fused_combine_flat(terms, weights, interpret: bool = False):

@@ -30,8 +30,11 @@ def _jnp_combine(terms, weights):
     """Unrolled fp32 axpy chain (K is static and small: order+2 for UniPC,
     up to 6 across the engine-compiled zoo, e.g. PLMS-4 + UniC). XLA fuses
     this into one pass over the state — the same schedule the Pallas kernel
-    encodes."""
+    encodes. Per-slot (K, B) weights broadcast each batch row's own scalar
+    over that row's trailing dims."""
     w = weights.astype(jnp.float32)
+    if w.ndim == 2:  # (K, B) per-slot columns over (K, B, ...) terms
+        w = w.reshape(w.shape + (1,) * (terms.ndim - w.ndim))
     acc = w[0] * terms[0].astype(jnp.float32)
     for k in range(1, terms.shape[0]):
         acc = acc + w[k] * terms[k].astype(jnp.float32)
@@ -54,16 +57,24 @@ def select_backend(n: int, platform: str | None = None) -> str:
 
 def weighted_combine(terms, weights, backend: str | None = None,
                      force_pallas: bool = False):
-    """terms: (K, *shape); weights: (K,). Returns sum_k w_k * terms[k].
+    """terms: (K, *shape); weights: (K,) or (K, B). Returns sum_k w_k * terms[k].
 
     shape may be anything; for batched states (B, ...) the kernel runs on a
     (B, N-tiles) grid over the (K, B, N) view — a reshape of contiguous
-    trailing dims, never a flat copy of the whole batch. `backend` pins one of
-    BACKENDS; `force_pallas` (kept for tests/benchmarks) means "run the kernel
-    even off-TPU", i.e. compiled on TPU, interpreted elsewhere.
+    trailing dims, never a flat copy of the whole batch. Per-slot (K, B)
+    weights give every batch row its own weight column (the continuous-batching
+    step, DESIGN.md §9) and require terms with a leading batch dim of B.
+    `backend` pins one of BACKENDS; `force_pallas` (kept for tests/benchmarks)
+    means "run the kernel even off-TPU", i.e. compiled on TPU, interpreted
+    elsewhere.
     """
     shape = terms.shape[1:]
     K = terms.shape[0]
+    per_slot = weights.ndim == 2
+    if per_slot and (len(shape) < 2 or shape[0] != weights.shape[1]):
+        raise ValueError(
+            f"per-slot weights (K, B)={weights.shape} need terms shaped "
+            f"(K, B, ...); got terms {terms.shape}")
     if backend is None:
         if force_pallas:
             backend = "pallas" if jax.default_backend() == "tpu" else "interpret"

@@ -4,7 +4,13 @@ import jax.numpy as jnp
 
 
 def weighted_combine(terms, weights):
-    """terms: (K, *shape); weights: (K,). Returns sum_k w_k * terms[k]."""
+    """terms: (K, *shape); weights: (K,) or per-slot (K, B). Returns the
+    weighted sum over K (per batch row for per-slot weights)."""
     wf = weights.astype(jnp.float32)
-    acc = jnp.tensordot(wf, terms.astype(jnp.float32), axes=1)
+    tf = terms.astype(jnp.float32)
+    if wf.ndim == 2:
+        wf = wf.reshape(wf.shape + (1,) * (tf.ndim - wf.ndim))
+        acc = jnp.sum(wf * tf, axis=0)
+    else:
+        acc = jnp.tensordot(wf, tf, axes=1)
     return acc.astype(terms.dtype)

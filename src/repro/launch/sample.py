@@ -33,11 +33,18 @@ NULL_CLASS_ID = 1000  # init_dit allocates num_classes + 1 embeddings; the
 
 
 def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
-                 want_cfg: bool = False) -> SamplerEngine:
+                 want_cfg: bool = False,
+                 per_request_cond: bool = False) -> SamplerEngine:
     """Wire the arch's eps-network into a SamplerEngine: the cond branch,
     and — for dit-family conditional sampling — the stacked 2B cond+uncond
     branch that fused CFG serves from, plus the uncond branch for the
-    sequential loop reference."""
+    sequential loop reference.
+
+    per_request_cond (dit only): instead of baking a per-batch-row class-id
+    array at build time (slot-positional — fine for a uniform batch, wrong
+    under continuous batching where a request's slot depends on arrival
+    order), the eps branches take `class_ids` as a per-call (B,) keyword
+    argument, which the serving scheduler scatters per request."""
     net = api.eps_network(cfg)
 
     def eps_with(extra):
@@ -51,14 +58,42 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
             raise ValueError("classifier-free guidance needs the dit family "
                              "(class-conditional eps-net)")
         return SamplerEngine(schedule, eps=eps_with({}))
-    ids = jnp.asarray(class_ids(batch, seed=seed))
     null = jnp.full((batch,), NULL_CLASS_ID, jnp.int32)
+    if per_request_cond:
+        def eps_cond(x, t, class_ids):
+            return net(params, x, jnp.asarray(t, jnp.float32),
+                       {"class_ids": class_ids})
+
+        def eps_stacked(xx, t, class_ids):
+            ids2 = jnp.concatenate([jnp.asarray(class_ids, jnp.int32),
+                                    jnp.full_like(class_ids, NULL_CLASS_ID,
+                                                  jnp.int32)])
+            return net(params, xx, jnp.asarray(t, jnp.float32),
+                       {"class_ids": ids2})
+
+        return SamplerEngine(schedule, eps=jax.jit(eps_cond),
+                             eps_stacked=jax.jit(eps_stacked),
+                             eps_uncond=eps_with({"class_ids": null}))
+    ids = jnp.asarray(class_ids(batch, seed=seed))
     return SamplerEngine(
         schedule,
         eps=eps_with({"class_ids": ids}),
         eps_stacked=eps_with({"class_ids": jnp.concatenate([ids, null])}),
         eps_uncond=eps_with({"class_ids": null}),
     )
+
+
+def require_dit_for_cfg(ap, arch: str, cfg_scale: float) -> str:
+    """Argparse-friendly guard shared by the sample/serve CLIs: guidance
+    needs the class-conditional dit family. Returns the arch's family."""
+    from ..configs.registry import get_config
+
+    family = get_config(arch).family
+    if cfg_scale and family != "dit":
+        ap.error(f"--cfg-scale needs a class-conditional eps-net; "
+                 f"--arch {arch} is family '{family}', not 'dit' "
+                 f"(try dit-cifar or dit-i256)")
+    return family
 
 
 def latent_shape(cfg, batch):
@@ -139,6 +174,7 @@ def main():
     scale.add_argument("--full", action="store_true")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+    require_dit_for_cfg(ap, args.arch, args.cfg_scale)
     params = None
     if args.ckpt:
         tree, _ = ckpt.restore(args.ckpt)

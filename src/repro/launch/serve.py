@@ -1,15 +1,18 @@
 """Batched serving loop. Token models: prefill a batch of prompts, then
 greedy/temperature decode with the per-family cache. Diffusion models (dit
-family): one request = one latent to generate, the whole batch rides a
-single jitted scan built by the engine — any registered solver, fused state
-update, and optionally fused classifier-free guidance (one 2B-batched
-cond+uncond eval per step; DESIGN.md §3-§4, §8). CPU-runnable at reduced
-scale.
+family): one request = one latent to generate, served with *continuous
+batching* (DESIGN.md §9) — a request-level scheduler over `--batch` slots
+drives the engine's per-slot step function, so requests admit the moment a
+slot frees, carry their own seed and guidance scale, and emit without waiting
+for a batch to drain. One batched (optionally 2B cond+uncond stacked) network
+eval per tick; any registered solver; CPU-runnable at reduced scale.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 4 --prompt-len 32 --gen 32
     PYTHONPATH=src python -m repro.launch.serve --arch dit-cifar --reduced \
         --batch 8 --nfe 10 --solver dpmpp --order 2 --cfg-scale 2.0
+    PYTHONPATH=src python -m repro.launch.serve --arch dit-cifar --reduced \
+        --batch 4 --nfe 10 --arrival-rate 0.4 --requests 16   # Poisson traffic
 """
 
 from __future__ import annotations
@@ -76,18 +79,29 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, gen=32,
 
 def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                     solver="unipc", fused_update=True, cfg_scale=0.0,
-                    cfg_schedule="constant", thresholding=False, seed=0):
-    """Diffusion batch-serving through the engine: sample `batch` latents in
-    one jitted scan — any registered solver, one eps-net eval per step for
-    the whole batch. `cfg_scale` turns on fused classifier-free guidance:
-    still ONE (2B-batched, cond+uncond stacked) network call per step, with
-    the guidance scale riding the schedule table; `thresholding` adds dynamic
-    thresholding of the x0 prediction. On TPU the fused-update dispatch
-    selects the single-pass Pallas combine, the hot path of the memory-bound
-    state update."""
+                    cfg_schedule="constant", thresholding=False, seed=0,
+                    arrival_rate=None, trace=None, requests=None):
+    """Continuous-batching diffusion serving through the engine's per-slot
+    step program (`SamplerEngine.build_step` + `serving.SlotScheduler`):
+    `batch` slots, requests admitted the tick a slot frees, per-request
+    seed/cfg-scale, one batched eps-net eval per tick. `cfg_scale` turns on
+    fused classifier-free guidance — ONE (2B-batched, cond+uncond stacked)
+    network call per tick, the per-slot guidance scale riding the step state;
+    `thresholding` adds dynamic thresholding of the x0 prediction. On TPU the
+    fused-update dispatch selects the single-pass Pallas combine, and the
+    slot batch shards over the data axis under SERVE_RULES.
+
+    Traffic: `trace` (a JSON arrival trace) or `arrival_rate` (Poisson,
+    requests per tick) serve asynchronous traffic; with neither, `batch`
+    requests all arrive at tick 0 (classic batch serving, now through the
+    same scheduler). The step program is compiled ahead of time
+    (`jit(...).lower(...).compile()`), so compile and steady-state serving
+    are reported separately. Returns the finished latents ordered by rid.
+    """
     from ..engine import EngineSpec
     from ..diffusion import VPLinear
-    from .sample import build_engine
+    from ..serving import Request, SlotScheduler, load_trace, poisson_requests, run_trace
+    from .sample import NULL_CLASS_ID, build_engine
 
     cfg = get_config(arch)
     if reduced:
@@ -95,24 +109,43 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     rng = jax.random.PRNGKey(seed)
     params = api.init_params(cfg, rng)
     engine = build_engine(cfg, params, VPLinear(), batch, seed,
-                          want_cfg=cfg_scale != 0.0)
+                          want_cfg=cfg_scale != 0.0, per_request_cond=True)
     spec = EngineSpec(solver=solver, nfe=nfe, order=order,
                       cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
                       thresholding=thresholding, fused_update=fused_update)
-    run = engine.build(spec)
-    x_T = jax.random.normal(rng, (batch, cfg.patch_tokens, cfg.latent_dim),
-                            jnp.float32)
-    t0 = time.time()
-    out = jax.block_until_ready(run(x_T))  # includes compile
-    compile_s = time.time() - t0
-    t0 = time.time()
-    out = jax.block_until_ready(run(x_T))
-    serve_s = time.time() - t0
-    print(f"diffusion batch={batch} solver={solver} nfe={nfe} order={order} "
+    program = engine.build_step(spec)
+    # idle slots are conditioned on the null class; every request carries its
+    # own class id (drawn from its seed), so conditioning is reproducible
+    # regardless of which slot the scheduler admits it into
+    sched = SlotScheduler(program, batch,
+                          (cfg.patch_tokens, cfg.latent_dim),
+                          extras_init={"class_ids": NULL_CLASS_ID})
+    compile_s = sched.aot_compile()
+    if trace is not None:
+        reqs = load_trace(trace)
+    elif arrival_rate is not None:
+        n_req = requests if requests is not None else 4 * batch
+        reqs = poisson_requests(n_req, arrival_rate, seed=seed,
+                                base_seed=seed)
+    else:
+        reqs = [Request(rid=i, seed=seed + i) for i in range(batch)]
+    for r in reqs:
+        if r.extras is None or "class_ids" not in r.extras:
+            r.extras = {**(r.extras or {}),
+                        "class_ids": int(class_ids(1, seed=r.seed)[0])}
+    m = run_trace(sched, reqs)
+    print(f"diffusion slots={batch} solver={solver} nfe={nfe} order={order} "
           f"cfg={cfg_scale} fused_update={fused_update}: "
-          f"compile {compile_s:.2f}s, serve {serve_s*1e3:.1f} ms "
-          f"({serve_s/batch*1e3:.2f} ms/latent)")
-    return np.asarray(out)
+          f"compile {compile_s:.2f}s (AOT), tick {m.tick_s*1e3:.1f} ms, "
+          f"{m.completed}/{m.requests} requests, "
+          f"throughput {m.throughput_rps:.2f} req/s, "
+          f"latency p50/p95 {m.latency_s_p50*1e3:.0f}/"
+          f"{m.latency_s_p95*1e3:.0f} ms, occupancy {m.occupancy:.2f}, "
+          f"evals/latent {m.evals_per_latent:.1f}")
+    order_by_rid = sorted(sched.completions, key=lambda c: c.rid)
+    if not order_by_rid:  # e.g. an empty trace
+        return np.zeros((0, cfg.patch_tokens, cfg.latent_dim), np.float32)
+    return np.stack([c.latent for c in order_by_rid], axis=0)
 
 
 def main():
@@ -139,18 +172,39 @@ def main():
     ap.add_argument("--thresholding", action="store_true",
                     help="diffusion serving: dynamic thresholding (off by "
                          "default)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="diffusion serving: Poisson request arrivals, in "
+                         "requests per tick (one tick = one batched eval); "
+                         "omit for all requests at tick 0")
+    ap.add_argument("--trace", default=None,
+                    help="diffusion serving: JSON arrival trace "
+                         "(list of {rid, seed, arrival, cfg_scale})")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="diffusion serving: request count for "
+                         "--arrival-rate traffic (default 4x batch)")
     scale = ap.add_mutually_exclusive_group()
     scale.add_argument("--reduced", action="store_true",
                        help="reduced CPU-scale config (the default)")
     scale.add_argument("--full", action="store_true")
     args = ap.parse_args()
-    if get_config(args.arch).family == "dit":
+    from .sample import require_dit_for_cfg
+    family = require_dit_for_cfg(ap, args.arch, args.cfg_scale)
+    if family != "dit" and (args.arrival_rate is not None or args.trace):
+        ap.error(f"--arrival-rate/--trace drive the diffusion request "
+                 f"scheduler; --arch {args.arch} is family '{family}' "
+                 f"(token serving decodes a fixed batch)")
+    if args.arrival_rate is not None and args.arrival_rate <= 0:
+        ap.error(f"--arrival-rate must be > 0 requests per tick, "
+                 f"got {args.arrival_rate}")
+    if family == "dit":
         serve_diffusion(args.arch, reduced=not args.full, batch=args.batch,
                         nfe=args.nfe, order=args.order, solver=args.solver,
                         fused_update=not args.no_fused_update,
                         cfg_scale=args.cfg_scale,
                         cfg_schedule=args.cfg_schedule,
-                        thresholding=args.thresholding)
+                        thresholding=args.thresholding,
+                        arrival_rate=args.arrival_rate, trace=args.trace,
+                        requests=args.requests)
         return
     serve(args.arch, reduced=not args.full, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,

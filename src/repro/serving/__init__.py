@@ -1,0 +1,19 @@
+"""Continuous-batching diffusion serving (DESIGN.md §9).
+
+`scheduler.SlotScheduler` drives a compiled `StepProgram` over a fixed set of
+batch slots: requests queue, admit on any free slot, step per-slot through the
+solver table, and emit their latent the tick they finish — no request ever
+waits for a whole batch to drain. `server` adds synthetic Poisson / trace
+request generators and the serving metrics (throughput, p50/p95 latency, slot
+occupancy, evals-per-latent).
+"""
+
+from .scheduler import Completion, Request, SlotScheduler
+from .server import (ServeMetrics, load_trace, poisson_requests, run_trace,
+                     save_trace)
+
+__all__ = [
+    "Request", "Completion", "SlotScheduler",
+    "ServeMetrics", "poisson_requests", "load_trace", "save_trace",
+    "run_trace",
+]

@@ -1,0 +1,241 @@
+"""Request-level slot scheduler for continuous-batching diffusion serving.
+
+The engine compiles a `StepProgram` (per-slot step function over the solver
+table, `SamplerEngine.build_step`); this module owns everything request-shaped
+around it: a fixed set of B slots, a FIFO admission queue, per-request
+seed / cfg-scale / NFE-budget bookkeeping, and finished-latent emission.
+
+One `tick()` = one batched model eval: admit queued requests into free slots
+(write the request's initial latent, zero the slot's eval ring, set its
+guidance scale), gather the per-slot row indices, call the step function once
+for the whole batch, then emit every slot that just executed its last row.
+Because admission resets the ring and the zero-padded warm-up rows null empty
+ring slots, a request admitted mid-flight reproduces the uniform `build()`
+scan for its own (solver, order, nfe, seed, cfg-scale) exactly — the parity
+property `tests/test_serving.py` pins across solvers.
+
+Idle slots park on row 0 (an identity update), so the batch shape — and the
+compiled program — never changes. `gang=True` degrades admission to
+sequential full-batch serving (admit only when *every* slot is free): the
+baseline the benchmarks compare continuous batching against.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..engine.engine import StepProgram
+
+
+@dataclass
+class Request:
+    """One sampling request: a latent to generate under per-request knobs.
+
+    seed draws the initial latent (or pass `x_T` explicitly); `cfg_scale`
+    overrides the program's nominal guidance scale for this request only
+    (cfg-enabled programs); `extras` are per-request model conditioning
+    scalars (e.g. {"class_ids": 7}) scattered into the scheduler's per-slot
+    extras state at admission — the scheduler must be constructed with a
+    matching `extras_init`; `arrival` is the request's arrival time in tick
+    units — the trace driver (`server.run_trace`) submits it once the clock
+    reaches it. The NFE budget is the compiled grid's (n_rows evals, one per
+    tick); per-request consumption is bookkept on the `Completion`.
+    """
+
+    rid: int
+    seed: int = 0
+    cfg_scale: Optional[float] = None
+    arrival: float = 0.0
+    x_T: Optional[object] = None
+    extras: Optional[dict] = None
+
+
+@dataclass
+class Completion:
+    """A finished request with its latent and bookkeeping."""
+
+    rid: int
+    latent: np.ndarray
+    arrival: float
+    admit_tick: int
+    finish_tick: int     # executed-step counter when this request finished
+    finish_clock: float  # simulated clock time (== finish_tick unless the
+                         # trace driver fast-forwarded over idle gaps)
+    evals: int           # rows executed = model evals this request consumed
+
+    @property
+    def latency_ticks(self) -> float:
+        """Queue wait + service, in tick units (one tick = one batched eval),
+        on the same clock `arrival` is on."""
+        return self.finish_clock - self.arrival
+
+
+class SlotScheduler:
+    """Fixed-B continuous batching over a compiled `StepProgram`."""
+
+    def __init__(self, program: StepProgram, slots: int,
+                 sample_shape: Tuple[int, ...], dtype=jnp.float32,
+                 gang: bool = False, step_override=None,
+                 extras_init: Optional[dict] = None):
+        self.program = program
+        self.slots = slots
+        self.sample_shape = tuple(sample_shape)
+        self.dtype = dtype
+        self.gang = gang
+        self.state = program.init_state(slots, self.sample_shape, dtype)
+        self.g = program.init_g(slots)
+        # per-slot model conditioning (e.g. class ids): one (slots,) array
+        # per key, seeded from extras_init and overwritten at admission from
+        # Request.extras — conditioning is per-REQUEST, never slot-positional.
+        # Explicit dtypes: AOT-compiled signatures must not drift weak->strong
+        def _col(v):
+            dt = (jnp.int32 if np.issubdtype(np.asarray(v).dtype, np.integer)
+                  else jnp.float32)
+            return jnp.full((slots,), v, dt)
+
+        self.extras = {k: _col(v) for k, v in (extras_init or {}).items()}
+        self._extras_init = dict(extras_init or {})
+        self.queue: Deque[Request] = deque()
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_row = np.zeros(slots, np.int64)    # next row to execute
+        self.slot_admit = np.zeros(slots, np.int64)
+        self.ticks = 0           # batched step calls = batched model evals
+        self.evals = 0           # always == ticks (the CI smoke invariant)
+        self.active_slot_ticks = 0
+        self.clock: Optional[float] = None  # trace driver's simulated time;
+                                            # None -> clock follows ticks
+        self.completions: List[Completion] = []
+        self._step = step_override if step_override is not None else program.step
+
+    # -- queue / slots -------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if (req.cfg_scale is not None and float(req.cfg_scale) != 0.0
+                and not self.program.uses_cfg):
+            raise ValueError(
+                f"request rid={req.rid} carries cfg_scale={req.cfg_scale} "
+                f"but the step program was compiled without guidance; "
+                f"build the engine spec with cfg_scale != 0")
+        unknown = set(req.extras or {}) - set(self.extras)
+        if unknown:
+            raise ValueError(
+                f"request rid={req.rid} carries extras {sorted(unknown)} the "
+                f"scheduler was not constructed for; pass extras_init with "
+                f"matching keys")
+        self.queue.append(req)
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per tick."""
+        return (self.active_slot_ticks / (self.ticks * self.slots)
+                if self.ticks else 0.0)
+
+    def _draw(self, req: Request):
+        if req.x_T is not None:
+            return jnp.asarray(req.x_T, self.dtype)
+        key = jax.random.PRNGKey(req.seed)
+        return jax.random.normal(key, self.sample_shape, self.dtype)
+
+    def _admit(self) -> None:
+        if self.gang and self.active:
+            return  # sequential full-batch baseline: drain before refilling
+        taken, draws, scales = [], [], []
+        extra_vals = {k: [] for k in self.extras}
+        for s in range(self.slots):
+            if not self.queue:
+                break
+            if self.slot_req[s] is not None:
+                continue
+            req = self.queue.popleft()
+            taken.append(s)
+            draws.append(self._draw(req))
+            scales.append(float(req.cfg_scale)
+                          if req.cfg_scale is not None
+                          else float(self.program.spec.cfg_scale or 0.0))
+            for k in extra_vals:
+                extra_vals[k].append((req.extras or {}).get(
+                    k, self._extras_init[k]))
+            self.slot_req[s] = req
+            self.slot_row[s] = 0
+            self.slot_admit[s] = self.ticks
+        if not taken:
+            return
+        # one scatter per tick, not one full-state copy per admitted request
+        x, E = self.state
+        sl = jnp.asarray(taken, jnp.int32)
+        x = x.at[sl].set(jnp.stack(draws))
+        E = E.at[:, sl].set(0.0)  # fresh rings -> warm-up from order 1
+        self.state = (x, E)
+        if self.program.uses_cfg:
+            self.g = self.g.at[sl].set(jnp.asarray(scales, jnp.float32))
+        for k, vals in extra_vals.items():
+            self.extras[k] = self.extras[k].at[sl].set(
+                jnp.asarray(vals, self.extras[k].dtype))
+
+    # -- the serving step ----------------------------------------------------
+    def tick(self) -> List[Completion]:
+        """Admit, run ONE batched step, emit finished latents."""
+        self._admit()
+        if self.active == 0:
+            return []
+        busy = np.array([r is not None for r in self.slot_req])
+        idx = jnp.asarray(np.where(busy, self.slot_row, 0), jnp.int32)
+        self.state = self._step(self.state, idx, *self._step_tail())
+        self.ticks += 1
+        self.evals += 1
+        self.active_slot_ticks += int(busy.sum())
+        done: List[Completion] = []
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            self.slot_row[s] += 1
+            if self.slot_row[s] >= self.program.n_rows:
+                done.append(Completion(
+                    rid=req.rid, latent=np.asarray(self.state[0][s]),
+                    arrival=req.arrival, admit_tick=int(self.slot_admit[s]),
+                    finish_tick=self.ticks,
+                    finish_clock=(float(self.ticks) if self.clock is None
+                                  else self.clock),
+                    evals=self.program.n_rows))
+                self.slot_req[s] = None
+                self.slot_row[s] = 0
+        self.completions.extend(done)
+        return done
+
+    def drain(self) -> List[Completion]:
+        """Tick until every queued and in-flight request has finished."""
+        out: List[Completion] = []
+        while self.queue or self.active:
+            out.extend(self.tick())
+        return out
+
+    def _step_tail(self):
+        """Trailing step args after (state, idx) — identical for every tick
+        and for the AOT lowering, so compiled signatures always match."""
+        return (self.g if self.program.uses_cfg else None,
+                self.extras if self.extras else None)
+
+    # -- AOT compile (DESIGN.md §9; the serve-timing fix) --------------------
+    def aot_compile(self) -> float:
+        """Lower + compile the step function ahead of time and swap the
+        compiled executable in; returns the compile seconds. Keeps the first
+        tick's timing honest — compile is no longer folded into execution."""
+        import time
+
+        idx = jnp.zeros((self.slots,), jnp.int32)
+        t0 = time.perf_counter()
+        compiled = self._step.lower(self.state, idx,
+                                    *self._step_tail()).compile()
+        dt = time.perf_counter() - t0
+        self._step = compiled
+        return dt

@@ -1,0 +1,220 @@
+"""Request generators, the trace driver, and serving metrics.
+
+Traffic is simulated in *tick time*: one tick = one batched model eval (the
+scheduler's unit of work), so a trace is deterministic and hardware-free —
+the same arrival stream replays identically on CPU and on the mesh. Wall-clock
+figures come from measuring the ticks that actually ran: `run_trace` times
+every step call and reports both tick-denominated metrics (latency in evals,
+evals-per-latent) and wall-denominated ones (throughput in requests/s, p50/p95
+latency seconds).
+
+    PYTHONPATH=src python -m repro.serving.server --smoke
+
+runs the CI smoke: a short Poisson trace against the reduced dit-cifar
+backbone, asserting every request completes and that the scheduler performed
+exactly one batched eval per tick.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import asdict, dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .scheduler import Completion, Request, SlotScheduler
+
+
+def poisson_requests(n: int, rate: float, seed: int = 0,
+                     cfg_scales: Optional[Sequence[float]] = None,
+                     base_seed: int = 0) -> List[Request]:
+    """n requests with Exp(1/rate) inter-arrival gaps (arrival in tick units).
+
+    `rate` is requests per tick. `cfg_scales`, if given, is cycled through the
+    requests — the per-request guidance knob (UniPC Table 9 settings vary it).
+    """
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0 requests per tick, "
+                         f"got {rate}")
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [Request(rid=i, seed=base_seed + i, arrival=float(arrivals[i]),
+                    cfg_scale=(None if cfg_scales is None
+                               else float(cfg_scales[i % len(cfg_scales)])))
+            for i in range(n)]
+
+
+def save_trace(path: str, requests: Sequence[Request]) -> None:
+    rows = [{"rid": r.rid, "seed": r.seed, "arrival": r.arrival,
+             "cfg_scale": r.cfg_scale, "extras": r.extras}
+            for r in requests]
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def load_trace(path: str) -> List[Request]:
+    """JSON trace: a list of {rid, seed, arrival, cfg_scale, extras}
+    objects; `extras` (optional) carries per-request model conditioning,
+    e.g. {"class_ids": 7}."""
+    with open(path) as f:
+        rows = json.load(f)
+    return [Request(rid=int(r["rid"]), seed=int(r.get("seed", 0)),
+                    arrival=float(r.get("arrival", 0.0)),
+                    cfg_scale=(None if r.get("cfg_scale") is None
+                               else float(r["cfg_scale"])),
+                    extras=r.get("extras"))
+            for r in rows]
+
+
+@dataclass
+class ServeMetrics:
+    """What one trace run measured. Tick-denominated fields are deterministic
+    (the simulation), *_s fields are measured wall-clock."""
+
+    mode: str                 # continuous | gang
+    requests: int
+    completed: int
+    slots: int
+    n_rows: int               # evals per request (the per-request NFE budget)
+    ticks: int                # batched step calls
+    evals: int                # always == ticks
+    makespan_ticks: float     # clock when the last request finished
+    throughput_per_tick: float
+    latency_ticks_p50: float
+    latency_ticks_p95: float
+    occupancy: float          # busy-slot fraction over ticks that ran
+    evals_per_latent: float   # slot-evals spent per finished latent
+    tick_s: float             # median measured wall seconds per tick
+    throughput_rps: float     # completed / (ticks * tick_s)
+    latency_s_p50: float
+    latency_s_p95: float
+
+    def row(self) -> dict:
+        return asdict(self)
+
+
+def run_trace(sched: SlotScheduler, requests: Sequence[Request],
+              mode: Optional[str] = None) -> ServeMetrics:
+    """Drive a scheduler through an arrival trace to completion.
+
+    The clock advances one tick per step call; when nothing is queued or
+    in-flight the clock fast-forwards to the next arrival without burning an
+    eval (so `evals == ticks` holds by construction).
+    """
+    pending = sorted(requests, key=lambda r: r.arrival)
+    # snapshot the counters so a reused scheduler reports THIS run's metrics
+    ticks0, evals0 = sched.ticks, sched.evals
+    done0, ast0 = len(sched.completions), sched.active_slot_ticks
+    i = 0
+    now = 0.0
+    tick_walls: List[float] = []
+    latencies = []
+    try:
+        while i < len(pending) or sched.queue or sched.active:
+            while i < len(pending) and pending[i].arrival <= now:
+                sched.submit(pending[i])
+                i += 1
+            if not sched.queue and not sched.active:
+                now = pending[i].arrival  # idle: jump to the next arrival
+                continue
+            sched.clock = now + 1.0  # this tick's completions land at now+1
+            t0 = time.perf_counter()
+            done = sched.tick()
+            # block per tick: JAX dispatch is async, and ticks without a
+            # completion fetch would otherwise clock only their dispatch cost
+            jax.block_until_ready(sched.state)
+            tick_walls.append(time.perf_counter() - t0)
+            now += 1.0
+            latencies.extend(c.latency_ticks for c in done)
+    finally:
+        sched.clock = None  # later direct tick()s fall back to the tick clock
+    lat = np.asarray(latencies) if latencies else np.zeros(1)
+    tick_s = float(np.median(tick_walls)) if tick_walls else 0.0
+    n_done = len(sched.completions) - done0
+    ticks = sched.ticks - ticks0
+    return ServeMetrics(
+        mode=mode or ("gang" if sched.gang else "continuous"),
+        requests=len(pending), completed=n_done, slots=sched.slots,
+        n_rows=sched.program.n_rows, ticks=ticks, evals=sched.evals - evals0,
+        makespan_ticks=now,
+        throughput_per_tick=n_done / max(now, 1.0),
+        latency_ticks_p50=float(np.percentile(lat, 50)),
+        latency_ticks_p95=float(np.percentile(lat, 95)),
+        occupancy=((sched.active_slot_ticks - ast0) / (ticks * sched.slots)
+                   if ticks else 0.0),
+        evals_per_latent=ticks * sched.slots / max(n_done, 1),
+        tick_s=tick_s,
+        throughput_rps=n_done / max(ticks * tick_s, 1e-12),
+        latency_s_p50=float(np.percentile(lat, 50)) * tick_s,
+        latency_s_p95=float(np.percentile(lat, 95)) * tick_s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: short Poisson trace on CPU against the reduced dit backbone
+# ---------------------------------------------------------------------------
+
+
+def smoke(arch: str = "dit-cifar", slots: int = 2, nfe: int = 4,
+          n_requests: int = 5, rate: float = 0.5, cfg_scale: float = 2.0,
+          seed: int = 0) -> ServeMetrics:
+    """Serve a short Poisson trace end to end and assert the scheduler
+    invariants: every request completes, one batched eval per tick, and
+    per-request eval bookkeeping adds up."""
+    import jax
+
+    from ..configs.registry import get_config
+    from ..diffusion import VPLinear
+    from ..engine import EngineSpec
+    from ..launch.sample import build_engine
+    from ..models import api
+
+    cfg = get_config(arch).reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(seed))
+    engine = build_engine(cfg, params, VPLinear(), slots, seed,
+                          want_cfg=cfg_scale != 0.0)
+    spec = EngineSpec(solver="unipc", nfe=nfe, cfg_scale=cfg_scale)
+    program = engine.build_step(spec)
+    sched = SlotScheduler(program, slots,
+                          (cfg.patch_tokens, cfg.latent_dim))
+    reqs = poisson_requests(n_requests, rate, seed=seed,
+                            cfg_scales=[1.5, cfg_scale, 4.0])
+    m = run_trace(sched, reqs)
+    assert m.completed == n_requests, (m.completed, n_requests)
+    assert m.evals == m.ticks, (m.evals, m.ticks)
+    assert all(c.evals == program.n_rows for c in sched.completions)
+    assert all(np.isfinite(c.latent).all() for c in sched.completions)
+    return m
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI scheduler smoke and exit nonzero on "
+                         "any invariant violation")
+    ap.add_argument("--arch", default="dit-cifar")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--nfe", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="requests per tick (one tick = one batched eval)")
+    ap.add_argument("--cfg-scale", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if not args.smoke:
+        ap.error("this entry point runs the CI scheduler smoke; pass "
+                 "--smoke (real serving lives in repro.launch.serve)")
+    m = smoke(args.arch, slots=args.slots, nfe=args.nfe,
+              n_requests=args.requests, rate=args.arrival_rate,
+              cfg_scale=args.cfg_scale, seed=args.seed)
+    print(json.dumps(m.row(), indent=1))
+    print(f"smoke ok: {m.completed}/{m.requests} requests, "
+          f"{m.evals} evals == {m.ticks} ticks")
+
+
+if __name__ == "__main__":
+    main()

@@ -213,7 +213,9 @@ def test_cfg_one_batched_eval_per_step(vp):
 
 def test_serve_diffusion_cfg_one_batched_eval_per_step(monkeypatch):
     """`serve_diffusion --cfg-scale 2.0` end to end: the dit eps-net is
-    entered once per eval point, always on the stacked 2B batch."""
+    entered once per scheduler tick, always on the stacked 2B batch — and
+    the AOT compile (`lower().compile()`, the serve-timing fix) performs no
+    eval at all, so the count is exactly the nfe+1 serving ticks."""
     from repro.launch.serve import serve_diffusion
     from repro.models import api
 
@@ -234,8 +236,9 @@ def test_serve_diffusion_cfg_one_batched_eval_per_step(monkeypatch):
     out = serve_diffusion("dit-cifar", reduced=True, batch=batch, nfe=nfe,
                           cfg_scale=2.0)
     assert out.shape[0] == batch and np.isfinite(out).all()
-    # serve runs the jitted scan twice (compile-timing + serve-timing pass)
-    assert len(calls) == 2 * (nfe + 1), calls
+    # batch requests all arrive at tick 0 -> one drain of nfe+1 ticks, each
+    # ONE batched eval on the 2B stacked batch; AOT compile adds none
+    assert len(calls) == nfe + 1, calls
     assert all(c == 2 * batch for c in calls), calls
 
 

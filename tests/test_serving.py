@@ -1,0 +1,319 @@
+"""Continuous-batching serving: per-slot step function + request scheduler.
+
+The acceptance property: a batch of requests started at *staggered* ticks
+through the scheduler produces, per request, latents matching the uniform
+`build()` scan for the same (solver, order, nfe, seed, cfg-scale) — across
+solvers and with per-request guidance scales. Plus scheduler invariants
+(eval count == ticks, occupancy, gang-mode degradation) and the 1-device
+mesh/SERVE_RULES bit-identity of both engine paths.
+"""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion import GaussianDPM
+from repro.engine import EngineSpec, SamplerEngine
+from repro.serving import Request, SlotScheduler, poisson_requests, run_trace
+
+
+def _eps_jx(dpm):
+    """Gaussian-DPM eps-net that accepts scalar or per-sample (B,) t."""
+    sched = dpm.schedule
+
+    def eps(x, t):
+        t = jnp.asarray(t)
+        a = jnp.exp(sched.log_alpha_jax(t))
+        sig = jnp.sqrt(1 - a * a)
+        if t.ndim == 1:
+            bshape = (-1,) + (1,) * (x.ndim - 1)
+            a, sig = a.reshape(bshape), sig.reshape(bshape)
+        return sig * (x - a * dpm.mu) / (a * a * dpm.s ** 2 + sig * sig)
+
+    return eps
+
+
+def _cfg_engine(vp):
+    cond = GaussianDPM(vp, mu=0.7, s=0.35)
+    uncond = GaussianDPM(vp, mu=-0.4, s=0.5)
+    eps_c, eps_u = _eps_jx(cond), _eps_jx(uncond)
+
+    def eps_stacked(xx, t):
+        x1, x2 = jnp.split(xx, 2, axis=0)
+        tt = jnp.asarray(t)
+        t1, t2 = (jnp.split(tt, 2, axis=0) if tt.ndim == 1 else (tt, tt))
+        return jnp.concatenate([eps_c(x1, t1), eps_u(x2, t2)], axis=0)
+
+    return SamplerEngine(vp, eps=eps_c, eps_stacked=eps_stacked,
+                         eps_uncond=eps_u)
+
+
+def _x_T(rid, d=8):
+    return np.random.default_rng(100 + rid).normal(size=(d,)).astype(np.float32)
+
+
+def _staggered_serve(engine, spec, rids, arrivals, slots, cfg_scales=None):
+    """Run rids through the scheduler with the given arrival ticks; returns
+    {rid: latent}."""
+    program = engine.build_step(spec)
+    sched = SlotScheduler(program, slots, (8,))
+    reqs = [Request(rid=r, arrival=float(a), x_T=_x_T(r),
+                    cfg_scale=None if cfg_scales is None else cfg_scales[i])
+            for i, (r, a) in enumerate(zip(rids, arrivals))]
+    run_trace(sched, reqs)
+    return {c.rid: c.latent for c in sched.completions}, sched
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-batch parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("solver,order", [
+    ("unipc", 3), ("dpmpp", 2), ("deis", 3), ("pndm", 4), ("ddim", 1),
+])
+def test_staggered_requests_match_uniform_scan(gaussian_dpm, solver, order):
+    """Six requests admitted at staggered ticks over three slots == the
+    uniform build() scan per request, <=1e-5 fp32."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    spec = EngineSpec(solver=solver, order=order, nfe=8)
+    rids = list(range(6))
+    got, sched = _staggered_serve(eng, spec, rids,
+                                  arrivals=[0, 0, 2, 5, 7, 11], slots=3)
+    xs = jnp.asarray(np.stack([_x_T(r) for r in rids]))
+    ref = np.asarray(eng.build(spec)(xs))
+    assert len(got) == len(rids)
+    for i, r in enumerate(rids):
+        np.testing.assert_allclose(got[r], ref[i], atol=1e-5, rtol=0)
+    # invariant: one batched eval per tick, every request on its full budget
+    assert sched.evals == sched.ticks
+    assert all(c.evals == sched.program.n_rows for c in sched.completions)
+
+
+def test_per_request_guidance_scales_match_uniform_scan(vp):
+    """Per-slot cfg: one compiled program serves requests at different
+    guidance scales; each matches a uniform scan built at that scale."""
+    eng = _cfg_engine(vp)
+    spec = EngineSpec(solver="unipc", order=3, nfe=8, cfg_scale=2.0)
+    scales = [1.0, 2.0, 3.5, 0.0, 2.0]
+    rids = list(range(5))
+    got, _ = _staggered_serve(eng, spec, rids, arrivals=[0, 0, 1, 4, 6],
+                              slots=2, cfg_scales=scales)
+    for r, s in zip(rids, scales):
+        ref_spec = replace(spec, cfg_scale=s)
+        ref = np.asarray(eng.build(ref_spec)(
+            jnp.asarray(_x_T(r))[None, :]))[0]
+        np.testing.assert_allclose(got[r], ref, atol=1e-5, rtol=0,
+                                   err_msg=f"rid={r} cfg_scale={s}")
+
+
+def test_per_request_cfg_with_schedule_and_thresholding(vp):
+    """Scheduled guidance + dynamic thresholding survive the per-slot path:
+    the table contributes the schedule *profile*, the slot its scale."""
+    eng = _cfg_engine(vp)
+    spec = EngineSpec(solver="unipc", order=2, nfe=8, cfg_scale=2.0,
+                      cfg_schedule="linear", cfg_scale_end=1.0,
+                      thresholding=True)
+    got, _ = _staggered_serve(eng, spec, [0, 1], arrivals=[0, 3], slots=2,
+                              cfg_scales=[2.0, 2.0])
+    ref = np.asarray(eng.build(spec)(
+        jnp.asarray(np.stack([_x_T(0), _x_T(1)]))))
+    np.testing.assert_allclose(got[0], ref[0], atol=1e-5, rtol=0)
+    np.testing.assert_allclose(got[1], ref[1], atol=1e-5, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_invariants_and_occupancy(gaussian_dpm):
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="dpmpp", order=2, nfe=6))
+    sched = SlotScheduler(program, slots=3, sample_shape=(8,))
+    reqs = poisson_requests(7, rate=0.6, seed=3)
+    m = run_trace(sched, reqs)
+    assert m.completed == 7 and m.evals == m.ticks
+    assert 0.0 < m.occupancy <= 1.0
+    assert m.evals_per_latent >= program.n_rows / sched.slots
+    # per-request NFE accounting: every completion consumed the full grid
+    assert all(c.evals == program.n_rows for c in sched.completions)
+    # latency can never undercut the service time
+    assert m.latency_ticks_p50 >= program.n_rows
+
+
+def test_gang_mode_admits_only_into_empty_batch(gaussian_dpm):
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="ddim", order=1, nfe=4))
+    sched = SlotScheduler(program, slots=2, sample_shape=(8,), gang=True)
+    for r in range(3):
+        sched.submit(Request(rid=r, x_T=_x_T(r)))
+    sched.tick()
+    assert sched.active == 2 and len(sched.queue) == 1
+    # mid-flight ticks must NOT admit the queued request
+    sched.tick()
+    assert sched.active == 2 and len(sched.queue) == 1
+    sched.drain()
+    assert len(sched.completions) == 3
+
+
+def test_continuous_beats_gang_at_2x_arrival_rate(gaussian_dpm):
+    """The serving win: at 2x the slot-capacity arrival rate, continuous
+    batching finishes the trace sooner (higher throughput) and wastes fewer
+    slot-evals per latent than sequential full-batch serving."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    spec = EngineSpec(solver="unipc", order=3, nfe=8)
+    slots = 4
+
+    def run(gang):
+        program = eng.build_step(spec)
+        sched = SlotScheduler(program, slots, (8,), gang=gang)
+        rate = 2.0 * slots / program.n_rows
+        return run_trace(sched, poisson_requests(16, rate, seed=7))
+
+    cont, gang = run(False), run(True)
+    assert cont.completed == gang.completed == 16
+    assert cont.throughput_per_tick > gang.throughput_per_tick
+    assert cont.evals_per_latent <= gang.evals_per_latent
+
+
+def test_cfg_request_on_uncond_program_is_rejected(gaussian_dpm):
+    """A request carrying a guidance scale must not be silently served
+    unguided by a program compiled without cfg."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=4))
+    sched = SlotScheduler(program, slots=2, sample_shape=(8,))
+    with pytest.raises(ValueError, match="without guidance"):
+        sched.submit(Request(rid=0, cfg_scale=3.0))
+    # an explicit 0.0 is the unguided path and stays accepted
+    sched.submit(Request(rid=1, cfg_scale=0.0, x_T=_x_T(1)))
+    sched.drain()
+    assert len(sched.completions) == 1
+
+
+def test_latency_uses_trace_clock_across_idle_gaps(gaussian_dpm):
+    """Completion latency is measured on the arrival clock: a request after
+    a long idle gap (which the trace driver fast-forwards over) still gets
+    latency >= its own service time, never a negative value."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=4))
+    sched = SlotScheduler(program, slots=2, sample_shape=(8,))
+    reqs = [Request(rid=0, x_T=_x_T(0), arrival=0.0),
+            Request(rid=1, x_T=_x_T(1), arrival=50.0)]
+    run_trace(sched, reqs)
+    lats = {c.rid: c.latency_ticks for c in sched.completions}
+    assert lats[0] == program.n_rows
+    assert lats[1] == program.n_rows  # admitted immediately after the gap
+
+
+def test_idle_slots_are_identity_and_poison_free(gaussian_dpm):
+    """Ticks with idle slots must not corrupt the active ones, and an idle
+    slot's state must stay fixed (the init row is an identity update)."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=3, nfe=6))
+    sched = SlotScheduler(program, slots=3, sample_shape=(8,))
+    sched.submit(Request(rid=0, x_T=_x_T(0)))
+    before = np.asarray(sched.state[0][1:])
+    for _ in range(program.n_rows):
+        sched.tick()
+    np.testing.assert_array_equal(np.asarray(sched.state[0][1:]), before)
+    ref = np.asarray(eng.build(EngineSpec(solver="unipc", order=3, nfe=6))(
+        jnp.asarray(_x_T(0))[None, :]))[0]
+    np.testing.assert_allclose(sched.completions[0].latent, ref,
+                               atol=1e-5, rtol=0)
+
+
+def test_per_request_class_conditioning_is_slot_independent():
+    """A dit request's class conditioning rides the request (scheduler
+    extras), not the slot: the same (seed, class_id, cfg_scale) request
+    produces the same latent no matter which slot admission lands it in."""
+    from repro.configs.registry import get_config
+    from repro.diffusion import VPLinear
+    from repro.launch.sample import NULL_CLASS_ID, build_engine
+    from repro.models import api
+
+    cfg = get_config("dit-cifar").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    engine = build_engine(cfg, params, VPLinear(), 2, 0, want_cfg=True,
+                          per_request_cond=True)
+    program = engine.build_step(
+        EngineSpec(solver="unipc", order=2, nfe=3, cfg_scale=2.0))
+
+    def serve(reqs):
+        sched = SlotScheduler(program, 2,
+                              (cfg.patch_tokens, cfg.latent_dim),
+                              extras_init={"class_ids": NULL_CLASS_ID})
+        run_trace(sched, reqs)
+        return {c.rid: c.latent for c in sched.completions}
+
+    probe = dict(seed=42, cfg_scale=3.0, extras={"class_ids": 7})
+    # alone -> slot 0
+    solo = serve([Request(rid=9, **probe)])
+    # behind an earlier request -> slot 1
+    staggered = serve([Request(rid=0, seed=1, arrival=0.0,
+                               extras={"class_ids": 3}),
+                       Request(rid=9, arrival=1.0, **probe)])
+    np.testing.assert_array_equal(solo[9], staggered[9])
+
+
+# ---------------------------------------------------------------------------
+# 1-device mesh under SERVE_RULES: bit-identical to no mesh context
+# ---------------------------------------------------------------------------
+
+
+def _dit_setup(batch=2, nfe=4):
+    from repro.configs.registry import get_config
+    from repro.diffusion import VPLinear
+    from repro.launch.sample import build_engine
+    from repro.models import api
+
+    cfg = get_config("dit-cifar").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    engine = build_engine(cfg, params, VPLinear(), batch, 0)
+    spec = EngineSpec(solver="unipc", order=3, nfe=nfe)
+    x_T = jax.random.normal(jax.random.PRNGKey(1),
+                            (batch, cfg.patch_tokens, cfg.latent_dim),
+                            jnp.float32)
+    return engine, spec, x_T
+
+
+def test_scan_path_bit_identical_under_serve_rules_mesh():
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.sharding import SERVE_RULES, sharding_rules
+
+    engine, spec, x_T = _dit_setup()
+    plain = np.asarray(engine.build(spec)(x_T))
+    with sharding_rules(make_host_mesh(), SERVE_RULES):
+        meshed = np.asarray(engine.build(spec)(x_T))
+    np.testing.assert_array_equal(plain, meshed)
+
+
+def test_step_path_bit_identical_under_serve_rules_mesh():
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.sharding import SERVE_RULES, sharding_rules
+
+    engine, spec, x_T = _dit_setup()
+
+    def serve(mesh_ctx):
+        program = engine.build_step(spec)
+        sched = SlotScheduler(program, 2,
+                              sample_shape=x_T.shape[1:])
+        reqs = [Request(rid=i, arrival=float(2 * i),
+                        x_T=np.asarray(x_T[i])) for i in range(2)]
+        if mesh_ctx:
+            with sharding_rules(make_host_mesh(), SERVE_RULES):
+                run_trace(sched, reqs)
+        else:
+            run_trace(sched, reqs)
+        return {c.rid: c.latent for c in sched.completions}
+
+    plain, meshed = serve(False), serve(True)
+    for r in plain:
+        np.testing.assert_array_equal(plain[r], meshed[r])
+    # and the staggered step path agrees with the uniform scan on the dit net
+    ref = np.asarray(engine.build(spec)(x_T))
+    for i in range(2):
+        np.testing.assert_allclose(plain[i], ref[i], atol=1e-5, rtol=0)
