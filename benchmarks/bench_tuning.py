@@ -1,0 +1,85 @@
+"""Solver-plan autotuner benchmark -> BENCH_tuning.json.
+
+Tuned vs default (hand-set UniPC-2) plans on the briefly trained reduced
+dit-cifar backbone at NFE in {5, 6, 8, 10}: reference-trajectory
+discrepancy for both tables, the relative improvement, search wall-clock,
+and the per-sample scan wall-clock of the tuned table (a searched plan must
+not change the serving cost — same rows, same fused scan).
+
+The derived CSV field carries the discrepancy pair; the acceptance gate
+(tuned <= baseline, strictly better at NFE <= 8) is asserted here so a
+regressing tuner fails the bench run loudly.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+ARCH = "dit-cifar"
+NFES = (5, 6, 8, 10)
+BUDGET = 40
+TRAIN_STEPS = 100
+
+
+def bench_tuning(out_path: str = "BENCH_tuning.json"):
+    """Tuned vs default plans across NFE budgets; writes BENCH_tuning.json."""
+    from repro.engine import EngineSpec
+    from repro.launch.tune import _setup, tune
+    from repro.tuning import reference_trajectory
+
+    engine, x_T = _setup(ARCH, reduced=True, batch=4, seed=0,
+                         train_steps=TRAIN_STEPS)
+    # one reference trajectory serves every NFE budget below
+    x_ref = reference_trajectory(engine, EngineSpec(solver="unipc"), x_T,
+                                 ref_nfe=48)
+    rows = []
+    for nfe in NFES:
+        plan, report = tune(ARCH, nfe=nfe, budget=BUDGET, ref_nfe=48,
+                            engine=engine, x_T=x_T, x_ref=x_ref)
+        # serving cost of the tuned table: same scan, same per-step cost
+        spec = EngineSpec(solver="unipc", nfe=nfe,
+                          order=max(plan.orders))
+        tab = engine.compile(spec, table=plan.compile(engine.schedule))
+        run = engine.build(spec, table=tab)
+        run(x_T).block_until_ready()          # compile outside the timing
+        t0 = time.perf_counter()
+        run(x_T).block_until_ready()
+        sample_s = time.perf_counter() - t0
+        row = dict(arch=ARCH, nfe=nfe, budget=BUDGET,
+                   baseline_discrepancy=report["baseline"],
+                   tuned_discrepancy=report["tuned"],
+                   improvement=report["improvement"],
+                   rel_improvement=(report["improvement"]
+                                    / max(report["baseline"], 1e-12)),
+                   search_wall_s=report["search_wall_s"],
+                   evals=report["evals"], sample_wall_s=sample_s,
+                   train_steps=TRAIN_STEPS)
+        rows.append(row)
+        emit(f"tuning/{ARCH}/nfe{nfe}", report["search_wall_s"] * 1e6,
+             f"baseline={report['baseline']:.5f};"
+             f"tuned={report['tuned']:.5f};"
+             f"rel_improvement={row['rel_improvement']:.3f};"
+             f"sample_ms={sample_s*1e3:.1f}")
+        assert report["tuned"] <= report["baseline"], (
+            f"tuner regressed at nfe={nfe}")
+        if nfe <= 8:
+            # the acceptance criterion: strictly beats UniPC-2 at few steps
+            assert report["tuned"] < report["baseline"], (
+                f"tuned plan failed to strictly beat the UniPC-2 baseline "
+                f"at nfe={nfe}")
+    with open(out_path, "w") as f:
+        json.dump({"arch": ARCH, "budget": BUDGET,
+                   "train_steps": TRAIN_STEPS, "runs": rows}, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    bench_tuning()

@@ -1,0 +1,113 @@
+"""Bench-regression guard over the committed BENCH_*.json artifacts.
+
+Stdlib-only (no jax import): CI runs it on every push before the heavy
+jobs, so a perf-regressing change to the serving stack fails fast even when
+the bench itself wasn't rerun.
+
+Checks:
+* BENCH_serve.json — for every (arch, cfg_scale) pair, continuous-over-gang
+  throughput ratio must stay >= --min-serve-ratio (default 1.1; the
+  committed trace sits at ~1.18, so the guard allows drift but not a
+  collapse of the continuous-batching win).
+* BENCH_tuning.json — must be present (the tuning acceptance trajectory is
+  committed alongside the serving one); every tuned plan must score <= its
+  baseline, and NFE <= 8 rows must improve strictly.
+
+    python benchmarks/guard.py [--min-serve-ratio 1.1]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"GUARD FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_serve(path: str = "BENCH_serve.json",
+                min_ratio: float = 1.1) -> int:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} is missing — the serving perf trajectory must stay "
+             f"committed (run `python -m benchmarks.run --only serve`)")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is corrupt: {e}")
+    by_key = {}
+    for run in data.get("runs", []):
+        key = (run.get("arch"), run.get("cfg_scale"))
+        by_key.setdefault(key, {})[run.get("mode")] = run
+    if not by_key:
+        fail(f"{path} carries no runs")
+    checked = 0
+    for (arch, cfg), modes in sorted(by_key.items()):
+        if "continuous" not in modes or "gang" not in modes:
+            fail(f"{path} {arch}/cfg{cfg}: needs both continuous and gang "
+                 f"runs, has {sorted(modes)}")
+        tputs = {m: modes[m].get("throughput_per_tick")
+                 for m in ("continuous", "gang")}
+        if any(not isinstance(v, (int, float)) or v <= 0
+               for v in tputs.values()):
+            fail(f"{path} {arch}/cfg{cfg}: throughput_per_tick missing or "
+                 f"non-positive ({tputs}) — artifact schema drift?")
+        ratio = tputs["continuous"] / tputs["gang"]
+        status = "ok" if ratio >= min_ratio else "FAIL"
+        print(f"serve {arch}/cfg{cfg}: continuous/gang throughput ratio "
+              f"{ratio:.3f} (floor {min_ratio}) {status}")
+        if ratio < min_ratio:
+            fail(f"continuous-batching throughput ratio dropped to "
+                 f"{ratio:.3f} < {min_ratio} for {arch}/cfg{cfg}")
+        checked += 1
+    return checked
+
+
+def check_tuning(path: str = "BENCH_tuning.json") -> int:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} is missing — the tuning acceptance trajectory must "
+             f"stay committed (run `python -m benchmarks.run --only "
+             f"tuning`)")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is corrupt: {e}")
+    checked = 0
+    for run in data.get("runs", []):
+        nfe = run.get("nfe")
+        base, tuned = (run.get("baseline_discrepancy"),
+                       run.get("tuned_discrepancy"))
+        if not all(isinstance(v, (int, float))
+                   for v in (nfe, base, tuned)):
+            fail(f"{path} run {run!r}: nfe/baseline_discrepancy/"
+                 f"tuned_discrepancy missing — artifact schema drift?")
+        ok = tuned <= base and (nfe > 8 or tuned < base)
+        print(f"tuning nfe={nfe}: {base:.5f} -> {tuned:.5f} "
+              f"{'ok' if ok else 'FAIL'}")
+        if tuned > base:
+            fail(f"tuned plan regressed the baseline at nfe={nfe}")
+        if nfe <= 8 and not tuned < base:
+            fail(f"tuned plan must strictly beat the UniPC-2 baseline at "
+                 f"nfe={nfe} (acceptance criterion)")
+        checked += 1
+    return checked
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--min-serve-ratio", type=float, default=1.1)
+    ap.add_argument("--root", default=".")
+    args = ap.parse_args()
+    os.chdir(args.root)
+    n = check_serve(min_ratio=args.min_serve_ratio)
+    n += check_tuning()
+    print(f"bench guard ok ({n} checks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,24 +1,113 @@
 """Benchmark harness entry point — one function per paper table/figure plus
-kernel and roofline benches. Prints ``name,us_per_call,derived`` CSV.
+kernel, roofline, serving, and tuning benches. Prints ``name,us_per_call,
+derived`` CSV while running, then aggregates every ``BENCH_*.json`` artifact
+at the repo root into one summary table.
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig3,...]
+    PYTHONPATH=src python -m benchmarks.run --summarize   # aggregate only
+
+A bench that is supposed to write a ``BENCH_*.json`` artifact but didn't —
+or an artifact that no longer parses — aborts the run with a nonzero exit
+instead of being silently skipped: the JSON artifacts are the tracked perf
+trajectory, so a hole in them is a failure, not a gap.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
 
 sys.path.insert(0, "src")
 
+# benches that persist a JSON artifact at the repo root; checked after a run
+BENCH_ARTIFACTS = {
+    "serve": "BENCH_serve.json",
+    "tuning": "BENCH_tuning.json",
+}
+
+
+def _load_bench_file(path: str) -> dict:
+    """Parse one BENCH_*.json; a corrupt or unreadable artifact is fatal."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        raise SystemExit(f"bench artifact {path} is missing — rerun "
+                         f"`python -m benchmarks.run --only "
+                         f"{_bench_for(path)}` to regenerate it")
+    except (json.JSONDecodeError, OSError) as e:
+        raise SystemExit(f"bench artifact {path} is corrupt ({e}); delete "
+                         f"it and rerun the bench")
+    if not isinstance(data, dict) or "runs" not in data:
+        raise SystemExit(f"bench artifact {path} has no 'runs' table — "
+                         f"not a bench artifact?")
+    return data
+
+
+def _bench_for(path: str) -> str:
+    base = os.path.basename(path)
+    for name, artifact in BENCH_ARTIFACTS.items():
+        if artifact == base:
+            return name
+    return "<unknown>"
+
+
+def summarize(root: str = ".") -> int:
+    """Aggregate every BENCH_*.json under `root` into one summary table.
+
+    Returns the number of artifacts summarized; zero artifacts is fatal
+    (the committed repo always carries at least BENCH_serve.json).
+    """
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        raise SystemExit(f"no BENCH_*.json artifacts under {root!r}; run "
+                         f"`python -m benchmarks.run` first")
+    print(f"\n=== bench summary ({len(paths)} artifacts) ===")
+    print(f"{'artifact':<22} {'run':<40} {'headline'}")
+    for path in paths:
+        data = _load_bench_file(path)
+        base = os.path.basename(path)
+        for run in data["runs"]:
+            print(f"{base:<22} {_run_tag(base, run):<40} "
+                  f"{_run_headline(base, run)}")
+    return len(paths)
+
+
+def _run_tag(base: str, run: dict) -> str:
+    if base == "BENCH_serve.json":
+        return (f"{run.get('arch')}/cfg{run.get('cfg_scale')}"
+                f"/{run.get('mode')}")
+    if base == "BENCH_tuning.json":
+        return f"{run.get('arch')}/nfe{run.get('nfe')}"
+    return ",".join(f"{k}={run[k]}" for k in list(run)[:3])
+
+
+def _run_headline(base: str, run: dict) -> str:
+    if base == "BENCH_serve.json":
+        return (f"rps={run.get('throughput_rps', 0):.2f} "
+                f"tput/tick={run.get('throughput_per_tick', 0):.3f} "
+                f"p95={run.get('latency_s_p95', 0)*1e3:.0f}ms "
+                f"occ={run.get('occupancy', 0):.2f}")
+    if base == "BENCH_tuning.json":
+        return (f"discrepancy {run.get('baseline_discrepancy', 0):.5f}"
+                f"->{run.get('tuned_discrepancy', 0):.5f} "
+                f"(-{run.get('rel_improvement', 0)*100:.1f}%) "
+                f"search={run.get('search_wall_s', 0):.1f}s")
+    keys = [k for k, v in run.items() if isinstance(v, (int, float))][:4]
+    return " ".join(f"{k}={run[k]:.4g}" for k in keys)
+
 
 def main() -> None:
     from . import (bench_engine, bench_figs, bench_kernels, bench_roofline,
-                   bench_serve, bench_tables)
+                   bench_serve, bench_tables, bench_tuning)
 
     benches = {
         "engine": bench_engine.bench_engine,
         "serve": bench_serve.bench_serve,
+        "tuning": bench_tuning.bench_tuning,
         "table1": bench_tables.table1_bh_ablation,
         "table2": bench_tables.table2_unic_any_solver,
         "table3": bench_tables.table3_oracle,
@@ -36,11 +125,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(benches))
+    ap.add_argument("--summarize", action="store_true",
+                    help="skip running benches; aggregate the existing "
+                         "BENCH_*.json artifacts and exit")
     args = ap.parse_args()
+    if args.summarize:
+        summarize()
+        return
     selected = (args.only.split(",") if args.only else list(benches))
+    unknown = [s for s in selected if s not in benches]
+    if unknown:
+        ap.error(f"unknown benches {unknown}; choose from "
+                 f"{','.join(benches)}")
     print("name,us_per_call,derived")
     for name in selected:
         benches[name]()
+        if name in BENCH_ARTIFACTS:
+            _load_bench_file(BENCH_ARTIFACTS[name])  # wrote + parses, or die
+    summarize()
 
 
 if __name__ == "__main__":

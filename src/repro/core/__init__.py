@@ -6,16 +6,18 @@ from .coeffs import (
     bh_value,
     build_unipc_schedule,
     default_order_schedule,
+    stack_step_rows,
     unipc_weights,
 )
 from .solver import CorrectorConfig, Grid, GridSolver, History, unified_step
 from .unipc import (UniPC, UniPCSinglestep, make_unipc_schedule,
-                    unipc_sample_scan, unipc_step_fn)
+                    step_fn_over_rows, unipc_sample_scan, unipc_step_fn)
 from .baselines import DDIM, DEIS, DPMSolverPP, DPMSolverSinglestep, PNDM
 
 __all__ = [
     "UniPC", "UniPCSinglestep", "UniPCSchedule", "unipc_sample_scan",
-    "unipc_step_fn", "augment_step_rows",
+    "unipc_step_fn", "step_fn_over_rows", "augment_step_rows",
+    "stack_step_rows",
     "make_unipc_schedule", "build_unipc_schedule", "default_order_schedule",
     "unipc_weights", "bh_value", "unified_step",
     "Grid", "GridSolver", "History", "CorrectorConfig",

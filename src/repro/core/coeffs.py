@@ -199,6 +199,53 @@ def augment_step_rows(sched: UniPCSchedule) -> dict:
     return rows
 
 
+def stack_step_rows(tables: dict) -> tuple:
+    """Concatenate several tables' augmented step rows into one plan bank.
+
+    tables: {tier_name: UniPCSchedule}, iterated in insertion order. Returns
+    (rows, tiers) where `rows` is one row-gatherable dict exactly like
+    `augment_step_rows` emits — every tier's init row + body rows stacked
+    along axis 0, difference-weight columns zero-padded to the widest tier —
+    and `tiers` maps tier name to its (row_offset, n_rows) span. A slot that
+    executes rows offset..offset+n_rows-1 runs that tier's trajectory; row 0
+    (the first tier's init row) stays the identity parking row for idle
+    slots.
+
+    Every table must share prediction type, sign, and model-column keys (the
+    step function closes over one sign and gathers one column set); mixed
+    banks of that kind fail loudly here rather than miscompute.
+    """
+    if not tables:
+        raise ValueError("plan bank needs at least one tier table")
+    items = list(tables.items())
+    _, first = items[0]
+    cols0 = sorted((first.model_cols or {}).keys())
+    for name, t in items[1:]:
+        if t.prediction != first.prediction or t.sign != first.sign:
+            raise ValueError(
+                f"plan-bank tiers must share prediction type; tier {name!r} "
+                f"is {t.prediction}-prediction, expected {first.prediction}")
+        if sorted((t.model_cols or {}).keys()) != cols0:
+            raise ValueError(
+                f"plan-bank tiers must share model columns; tier {name!r} "
+                f"has {sorted((t.model_cols or {}).keys())}, expected {cols0}")
+    K = max(t.w_pred.shape[1] for _, t in items)
+    tiers, stacked, offset = {}, [], 0
+    for name, t in items:
+        rows = augment_step_rows(t)
+        for key in ("w_pred", "w_corr_prev"):
+            pad = K - rows[key].shape[1]
+            if pad:
+                rows[key] = np.pad(rows[key], ((0, 0), (0, pad)))
+        n = len(rows["t"])
+        tiers[name] = (offset, n)
+        offset += n
+        stacked.append(rows)
+    keys = stacked[0].keys()
+    return ({k: np.concatenate([r[k] for r in stacked], axis=0) for k in keys},
+            tiers)
+
+
 def build_unipc_schedule(
     *,
     lambdas: np.ndarray,
@@ -212,6 +259,8 @@ def build_unipc_schedule(
     corrector_at_last: bool = False,
     order_schedule=None,
     lower_order_final: bool = True,
+    variant_schedule=None,
+    corrector_schedule=None,
 ) -> UniPCSchedule:
     """Precompute every scalar/vector the multistep UniPC scan needs.
 
@@ -219,6 +268,13 @@ def build_unipc_schedule(
     t_{i-1-k}; predictor differences at step i use r_m = (lam[i-1-m] - lam[i-1])/h
     for m = 1..p_i-1 and D_m = E[m] - E[0]; the corrector appends r = 1 with
     D = model(x_pred, t_i) - E[0]. (Alg. 5-8.)
+
+    The schedules generalize the paper's hand-set policy into a searchable
+    per-step decision vector (`repro.tuning`): `order_schedule` the UniP order
+    per step, `variant_schedule` the B(h) variant per step, and
+    `corrector_schedule` a per-step 0/1 UniC mask overriding the
+    `use_corrector`/`corrector_at_last` policy. All default to the paper's
+    fixed choices, under which the emitted table is unchanged.
     """
     assert prediction in PREDICTION_TYPES and variant in BH_VARIANTS
     lambdas = np.asarray(lambdas, dtype=np.float64)
@@ -226,6 +282,12 @@ def build_unipc_schedule(
     if order_schedule is None:
         order_schedule = default_order_schedule(M, order, lower_order_final)
     assert len(order_schedule) == M
+    if variant_schedule is None:
+        variant_schedule = [variant] * M
+    assert len(variant_schedule) == M
+    assert all(v in BH_VARIANTS for v in variant_schedule)
+    if corrector_schedule is not None:
+        assert len(corrector_schedule) == M
     max_prev = max(1, order - 1) if order > 1 else 1
     # allocate with at least one column so jnp shapes stay static even for order 1
     w_pred = np.zeros((M, max(1, order - 1)))
@@ -238,19 +300,23 @@ def build_unipc_schedule(
     for i in range(1, M + 1):
         h = float(lambdas[i] - lambdas[i - 1])
         p_i = min(order_schedule[i - 1], i)
+        v_i = variant_schedule[i - 1]
         # previous-point offsets r_m, m=1..p_i-1  (points t_{i-1-m})
         r_prev = np.array(
             [(lambdas[i - 1 - m] - lambdas[i - 1]) / h for m in range(1, p_i)],
             dtype=np.float64,
         )
-        wp = unipc_weights(r_prev, h, variant, prediction)
+        wp = unipc_weights(r_prev, h, v_i, prediction)
         w_pred[i - 1, : len(wp)] = wp
         # corrector: previous offsets + r=1 for the current point
         r_corr = np.concatenate([r_prev, [1.0]])
-        wc = unipc_weights(r_corr, h, variant, prediction)
+        wc = unipc_weights(r_corr, h, v_i, prediction)
         w_corr_prev[i - 1, : len(wc) - 1] = wc[:-1]
         w_corr_new[i - 1] = wc[-1]
-        corr_here = use_corrector and (corrector_at_last or i < M)
+        if corrector_schedule is not None:
+            corr_here = bool(corrector_schedule[i - 1])
+        else:
+            corr_here = use_corrector and (corrector_at_last or i < M)
         use_c[i - 1] = 1.0 if corr_here else 0.0
         base_x[i - 1], base_m0[i - 1] = semilinear_coeffs(
             h, alphas[i - 1], alphas[i], sigmas[i - 1], sigmas[i], prediction)

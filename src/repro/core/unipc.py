@@ -190,12 +190,36 @@ def unipc_step_fn(
     forwarded to the model on top of the gathered per-eval columns — the hook
     per-request guidance scales ride in on.
     """
-    K = sched.w_pred.shape[1]
-    cols = sched.model_cols or {}
     rows_np = augment_step_rows(sched)
     n_rows = len(rows_np["t"])
     tab = {k: jnp.asarray(v, dtype) for k, v in rows_np.items()}
-    sign = jnp.asarray(sched.sign, dtype)
+    step = step_fn_over_rows(model_fn, tab, sign=sched.sign,
+                             fused_update=fused_update, dtype=dtype)
+    return step, n_rows
+
+
+def step_fn_over_rows(
+    model_fn: Callable,
+    tab: dict,
+    *,
+    sign: float,
+    fused_update: bool = True,
+    dtype=jnp.float32,
+):
+    """Build the per-row step over an explicit row table.
+
+    `tab` is an augmented row dict (`coeffs.augment_step_rows`, or several
+    tables stacked by `coeffs.stack_step_rows` into a plan bank) whose arrays
+    may be *traced* values: the solver-plan tuner jits one runner with the
+    rows as an argument, so scoring a candidate plan re-executes the compiled
+    program with new weights instead of recompiling per candidate. `sign` is
+    the table's prediction sign (static). Semantics are exactly
+    `unipc_step_fn`'s — that function is now this one over the concrete rows.
+    """
+    K = tab["w_pred"].shape[-1]
+    col_keys = sorted(k for k in tab if k.startswith("mc_"))
+    n_rows = tab["t"].shape[0]
+    sign = jnp.asarray(sign, dtype)
 
     if fused_update:
         from ..kernels.unipc_update import ops as fused_ops
@@ -225,7 +249,7 @@ def unipc_step_fn(
 
         m0 = E[0]
         diffs = E[1:] - m0[None] if K > 0 else jnp.zeros((0,) + x.shape, x.dtype)
-        extras = {k: row[f"mc_{k}"] for k in cols}
+        extras = {k[3:]: row[k] for k in col_keys}
         if model_kwargs:
             extras = {**extras, **model_kwargs}
         # predictor
@@ -244,7 +268,7 @@ def unipc_step_fn(
         E_next = jnp.concatenate([e_new[None], E[:-1]], axis=0)
         return (x_next, E_next)
 
-    return step, n_rows
+    return step
 
 
 def unipc_sample_scan(

@@ -4,12 +4,14 @@ Importing this package populates the solver registry (`SOLVERS`) — each
 entry pairs a per-step weight-table compiler with its python-loop reference.
 """
 
-from .specs import SOLVERS, EngineSpec, SolverDef, solver_def
-from .compiler import build_loop, compile_table, step_guidance_profile
+from .specs import (SOLVERS, EngineSpec, SolverDef, default_tier_specs,
+                    solver_def)
+from .compiler import (apply_model_cols, build_loop, compile_table,
+                       step_guidance_profile)
 from .engine import SamplerEngine, StepProgram
 
 __all__ = [
-    "SOLVERS", "EngineSpec", "SolverDef", "solver_def",
+    "SOLVERS", "EngineSpec", "SolverDef", "solver_def", "default_tier_specs",
     "SamplerEngine", "StepProgram", "compile_table", "build_loop",
-    "step_guidance_profile",
+    "step_guidance_profile", "apply_model_cols",
 ]

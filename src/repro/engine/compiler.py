@@ -55,6 +55,31 @@ def build_loop(spec: EngineSpec, noise_schedule, model_fn):
     return solver_def(spec.solver).loop(spec, noise_schedule, model_fn)
 
 
+def apply_model_cols(tab: SolverTable, spec: EngineSpec) -> SolverTable:
+    """Return `tab` with the spec's per-eval model columns attached: the
+    guidance-scale schedule (`g`) and the dynamic-thresholding percentile
+    (`tq`). Shared by the registry path (`SamplerEngine.compile`) and
+    plan-compiled tables (`repro.tuning`), so a tuned plan serves with the
+    same conditioning knobs as a hand-set table. The input table is NOT
+    mutated — callers may compile one base table under several specs."""
+    from dataclasses import replace as dc_replace
+
+    from ..diffusion.guidance import guidance_schedule
+
+    spec = spec.resolve()
+    n_evals = len(tab.timesteps)
+    cols = dict(tab.model_cols or {})
+    if spec.cfg_scale:
+        cols["g"] = guidance_schedule(spec.cfg_scale, n_evals,
+                                      spec.cfg_schedule, spec.cfg_scale_end)
+    if spec.thresholding:
+        if tab.prediction != "data":
+            raise ValueError("dynamic thresholding clips the x0 "
+                             "prediction; use a data-prediction solver")
+        cols["tq"] = guidance_schedule(spec.threshold_percentile, n_evals)
+    return dc_replace(tab, model_cols=cols)
+
+
 def step_guidance_profile(tab: SolverTable, spec: EngineSpec) -> np.ndarray:
     """(M+1,) guidance profile for the per-slot step path, host-side float64.
 

@@ -30,19 +30,20 @@ paper's Table 9 setting) is fused into that same scan:
 from __future__ import annotations
 
 from dataclasses import dataclass, replace as dc_replace
-from typing import Callable, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.coeffs import SolverTable
-from ..core.unipc import unipc_sample_scan, unipc_step_fn
-from ..diffusion.guidance import (cfg_model, cfg_model_fused,
-                                  dynamic_threshold, guidance_schedule)
+from ..core.coeffs import SolverTable, stack_step_rows
+from ..core.unipc import step_fn_over_rows, unipc_sample_scan
+from ..diffusion.guidance import cfg_model, cfg_model_fused, dynamic_threshold
 from ..diffusion.process import eps_to_x0
 from ..diffusion.schedules import NoiseSchedule
 from ..parallel.sharding import shard
-from .compiler import build_loop, compile_table, step_guidance_profile
+from .compiler import (apply_model_cols, build_loop, compile_table,
+                       step_guidance_profile)
 from .specs import EngineSpec, SOLVERS
 
 
@@ -63,11 +64,32 @@ class StepProgram:
     """
 
     step: Callable
-    n_rows: int          # ticks (= model evals) a request needs, M + 1
-    table: SolverTable
+    n_rows: int          # total table rows (single plan: ticks per request)
+    table: SolverTable   # single-plan programs; first tier's table for banks
     spec: EngineSpec
     uses_cfg: bool
     ring: int            # eval-ring slots carried per sample, K + 1
+    # plan banks (`SamplerEngine.build_bank`): tier name -> (row_offset,
+    # n_rows) span in the stacked table. None for single-plan programs.
+    tiers: Optional[Dict[str, Tuple[int, int]]] = None
+
+    def resolve_tier(self, tier: Optional[str]) -> Tuple[int, int]:
+        """(row_offset, rows_to_run) for a request's tier tag. Single-plan
+        programs take untagged requests only; bank programs require a tag."""
+        if self.tiers is None:
+            if tier is not None:
+                raise ValueError(
+                    f"request tagged tier={tier!r} but the step program was "
+                    f"compiled from a single plan; build it with "
+                    f"SamplerEngine.build_bank")
+            return 0, self.n_rows
+        if tier is None:
+            raise ValueError(f"this program is a plan bank; tag requests "
+                             f"with tier= one of {sorted(self.tiers)}")
+        if tier not in self.tiers:
+            raise ValueError(f"unknown tier {tier!r}; this plan bank serves "
+                             f"{sorted(self.tiers)}")
+        return self.tiers[tier]
 
     def init_state(self, slots: int, sample_shape: Tuple[int, ...],
                    dtype=jnp.float32):
@@ -99,22 +121,15 @@ class SamplerEngine:
     eps_uncond: Optional[Callable] = None
 
     # -- table ---------------------------------------------------------------
-    def compile(self, spec: EngineSpec) -> SolverTable:
+    def compile(self, spec: EngineSpec,
+                table: Optional[SolverTable] = None) -> SolverTable:
+        """Compile the spec's weight table and attach its per-eval model
+        columns (guidance schedule, thresholding percentile). Pass `table`
+        to skip the registry compiler and use an externally lowered table —
+        a tuned `SolverPlan` — with the same conditioning knobs applied."""
         spec = spec.resolve()
-        tab = compile_table(spec, self.schedule)
-        n_evals = len(tab.timesteps)
-        cols = dict(tab.model_cols or {})
-        if spec.cfg_scale:
-            cols["g"] = guidance_schedule(spec.cfg_scale, n_evals,
-                                          spec.cfg_schedule,
-                                          spec.cfg_scale_end)
-        if spec.thresholding:
-            if tab.prediction != "data":
-                raise ValueError("dynamic thresholding clips the x0 "
-                                 "prediction; use a data-prediction solver")
-            cols["tq"] = guidance_schedule(spec.threshold_percentile, n_evals)
-        tab.model_cols = cols
-        return tab
+        tab = table if table is not None else compile_table(spec, self.schedule)
+        return apply_model_cols(tab, spec)
 
     # -- model ---------------------------------------------------------------
     def model_fn(self, spec: EngineSpec, tab: SolverTable) -> Callable:
@@ -165,19 +180,71 @@ class SamplerEngine:
         carry its own cfg scale through one compiled program."""
         spec = spec.resolve()
         tab = table if table is not None else self.compile(spec)
-        model = self.model_fn(spec, tab)
-        uses_cfg = bool(spec.cfg_scale)
-        step_tab = tab
-        prof = None
-        if uses_cfg:
-            # the scan's absolute g column is replaced by per-slot state x
-            # schedule profile; the core step must not gather it
-            prof = jnp.asarray(step_guidance_profile(tab, spec), jnp.float32)
-            cols = {k: v for k, v in (tab.model_cols or {}).items()
-                    if k != "g"}
-            step_tab = dc_replace(tab, model_cols=cols)
-        core_step, n_rows = unipc_step_fn(model, step_tab,
-                                          fused_update=spec.fused_update)
+        return self._step_program({"_": (spec, tab)}, tiers=None, jit=jit)
+
+    def build_bank(self, tier_specs: Dict[str, EngineSpec],
+                   tables: Optional[Dict[str, SolverTable]] = None,
+                   jit: bool = True) -> StepProgram:
+        """Compile several plans into ONE servable step program (§10).
+
+        tier_specs: {tier_name: EngineSpec} in serving-priority order; every
+        tier may differ in solver / order / NFE budget (and tuned `tables`
+        entries may replace the registry compile per tier), but all tiers
+        must share prediction type and guidance configuration — the bank is
+        one compiled program, one model wrapper, one eval ring. The stacked
+        row table (`core.stack_step_rows`) gives each tier a contiguous row
+        span; `StepProgram.tiers` maps tier -> (offset, n_rows) and the
+        scheduler admits `Request(tier=...)` onto per-slot row offsets, so
+        fast/balanced/quality requests coexist in one batch.
+        """
+        if not tier_specs:
+            raise ValueError("build_bank needs at least one tier spec")
+        stray = set(tables or {}) - set(tier_specs)
+        if stray:
+            raise ValueError(f"tables carry tiers {sorted(stray)} not in "
+                             f"tier_specs {sorted(tier_specs)}; a typo'd "
+                             f"key would silently serve the untuned "
+                             f"registry table")
+        items = {}
+        for name, tspec in tier_specs.items():
+            tspec = tspec.resolve()
+            tab = (tables or {}).get(name)
+            items[name] = (tspec, self.compile(tspec, table=tab))
+        return self._step_program(items, tiers=True, jit=jit)
+
+    def _step_program(self, items, tiers, jit) -> StepProgram:
+        """Shared lowering for build_step (single plan) and build_bank."""
+        names = list(items)
+        spec0, tab0 = items[names[0]]
+        uses_cfg = bool(spec0.cfg_scale)
+        for name, (s, t) in items.items():
+            if bool(s.cfg_scale) != uses_cfg or (
+                    uses_cfg and float(s.cfg_scale) != float(spec0.cfg_scale)):
+                raise ValueError(
+                    f"bank tiers must share the nominal guidance scale; tier "
+                    f"{name!r} has cfg_scale={s.cfg_scale}, expected "
+                    f"{spec0.cfg_scale} (per-request scales stay free)")
+            if s.fused_update != spec0.fused_update:
+                raise ValueError("bank tiers must agree on fused_update")
+        model = self.model_fn(spec0, tab0)
+        profs, step_tabs = [], {}
+        for name, (s, t) in items.items():
+            if uses_cfg:
+                # the scan's absolute g column is replaced by per-slot state
+                # x schedule profile; the core step must not gather it
+                profs.append(np.asarray(step_guidance_profile(t, s),
+                                        np.float64))
+                cols = {k: v for k, v in (t.model_cols or {}).items()
+                        if k != "g"}
+                t = dc_replace(t, model_cols=cols)
+            step_tabs[name] = t
+        rows_np, spans = stack_step_rows(step_tabs)
+        n_rows = len(rows_np["t"])
+        rows = {k: jnp.asarray(v, jnp.float32) for k, v in rows_np.items()}
+        core_step = step_fn_over_rows(model, rows, sign=tab0.sign,
+                                      fused_update=spec0.fused_update)
+        prof = (jnp.asarray(np.concatenate(profs), jnp.float32)
+                if uses_cfg else None)
 
         def _shard_state(x, E):
             x = shard(x, "batch", *([None] * (x.ndim - 1)))
@@ -188,15 +255,16 @@ class SamplerEngine:
             x, E = _shard_state(*state)
             kw = dict(extras) if extras else {}
             if uses_cfg:
-                gs = (jnp.full(idx.shape, float(spec.cfg_scale), jnp.float32)
+                gs = (jnp.full(idx.shape, float(spec0.cfg_scale), jnp.float32)
                       if g is None else jnp.asarray(g, jnp.float32))
                 kw["g"] = gs * prof[jnp.clip(idx, 0, n_rows - 1)]
             x, E = core_step((x, E), idx, model_kwargs=kw or None)
             return _shard_state(x, E)
 
         return StepProgram(step=jax.jit(step) if jit else step, n_rows=n_rows,
-                           table=tab, spec=spec, uses_cfg=uses_cfg,
-                           ring=tab.w_pred.shape[1] + 1)
+                           table=tab0, spec=spec0, uses_cfg=uses_cfg,
+                           ring=rows_np["w_pred"].shape[-1] + 1,
+                           tiers=dict(spans) if tiers else None)
 
     def build_loop(self, spec: EngineSpec) -> Callable:
         """The python-loop GridSolver reference for the same spec — identical

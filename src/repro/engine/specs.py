@@ -99,3 +99,16 @@ def solver_def(name: str) -> SolverDef:
         raise KeyError(f"unknown solver {name!r}; registered: "
                        f"{sorted(SOLVERS)}")
     return SOLVERS[name]
+
+
+def default_tier_specs(**common) -> Dict[str, EngineSpec]:
+    """Hand-set quality-tier specs for plan-bank serving: one deployment,
+    three NFE budgets. `common` overrides shared knobs (cfg_scale, ...) on
+    every tier. Tuned plans (`repro.tuning`) replace these tables tier by
+    tier; the specs still carry the conditioning/runtime configuration."""
+    tiers = {
+        "fast": EngineSpec(solver="unipc", nfe=5, order=2),
+        "balanced": EngineSpec(solver="unipc", nfe=8, order=3),
+        "quality": EngineSpec(solver="unipc", nfe=16, order=3),
+    }
+    return {k: replace(v, **common) for k, v in tiers.items()}

@@ -105,7 +105,7 @@ def latent_shape(cfg, batch):
 def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
            variant="bh2", prediction=None, batch=4, seed=0, params=None,
            loop=False, fused_update=True, cfg_scale=0.0,
-           cfg_schedule="constant", thresholding=False):
+           cfg_schedule="constant", thresholding=False, plan=None):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -113,6 +113,21 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
     if params is None:
         params = api.init_params(cfg, rng)
     schedule = VPLinear()
+    plan_tab = None
+    if plan is not None:
+        # a tuned SolverPlan (path or object) replaces the registry table:
+        # the spec keeps only the conditioning/runtime knobs
+        from ..tuning import SolverPlan
+
+        if loop:
+            raise ValueError("a tuned plan runs the scan-compiled table; "
+                             "there is no python-loop reference for "
+                             "searched plans")
+        if isinstance(plan, str):
+            plan = SolverPlan.load(plan)
+        solver, nfe, order = "unipc", plan.nfe, max(plan.orders)
+        prediction = plan.prediction
+        plan_tab = plan.compile(schedule)
     engine = build_engine(cfg, params, schedule, batch, seed,
                           want_cfg=cfg_scale != 0.0)
     spec = EngineSpec(solver=solver, nfe=nfe, order=order, variant=variant,
@@ -127,7 +142,7 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
         x0 = run(x_T)
         nfe_used = run.solver.model.nfe  # measured eval count
     else:
-        tab = engine.compile(spec)
+        tab = engine.compile(spec, table=plan_tab)
         x0 = engine.build(spec, table=tab)(x_T)
         # the scan evaluates the final step's eps too; fused CFG keeps one
         # (2B-batched) call per step
@@ -135,7 +150,8 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
     dt = time.time() - t0
     x0 = np.asarray(x0)
     path = "loop" if loop else "scan"
-    print(f"{solver}-{order} [{path}] nfe={nfe_used} cfg={cfg_scale} "
+    tag = f"{solver}-{order}" + (" [plan]" if plan_tab is not None else "")
+    print(f"{tag} [{path}] nfe={nfe_used} cfg={cfg_scale} "
           f"wall={dt:.2f}s out_shape={x0.shape} mean={x0.mean():+.4f} "
           f"std={x0.std():.4f} finite={np.isfinite(x0).all()}")
     return x0
@@ -168,6 +184,10 @@ def main():
     ap.add_argument("--thresholding", action="store_true",
                     help="Imagen-style dynamic thresholding of the x0 "
                          "prediction (data-prediction solvers)")
+    ap.add_argument("--plan", default=None,
+                    help="path to a tuned SolverPlan JSON (repro.launch.tune)"
+                         "; overrides --solver/--order/--nfe with the plan's "
+                         "searched per-step schedule")
     scale = ap.add_mutually_exclusive_group()
     scale.add_argument("--reduced", action="store_true",
                        help="reduced CPU-scale config (the default)")
@@ -175,6 +195,9 @@ def main():
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     require_dit_for_cfg(ap, args.arch, args.cfg_scale)
+    if args.plan and args.loop:
+        ap.error("--plan runs the scan-compiled table; --loop has no "
+                 "python-loop reference for searched plans")
     params = None
     if args.ckpt:
         tree, _ = ckpt.restore(args.ckpt)
@@ -184,7 +207,7 @@ def main():
            prediction=args.prediction, batch=args.batch, params=params,
            loop=args.loop, fused_update=not args.no_fused_update,
            cfg_scale=args.cfg_scale, cfg_schedule=args.cfg_schedule,
-           thresholding=args.thresholding)
+           thresholding=args.thresholding, plan=args.plan)
 
 
 if __name__ == "__main__":

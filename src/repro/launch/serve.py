@@ -13,6 +13,9 @@ eval per tick; any registered solver; CPU-runnable at reduced scale.
         --batch 8 --nfe 10 --solver dpmpp --order 2 --cfg-scale 2.0
     PYTHONPATH=src python -m repro.launch.serve --arch dit-cifar --reduced \
         --batch 4 --nfe 10 --arrival-rate 0.4 --requests 16   # Poisson traffic
+    PYTHONPATH=src python -m repro.launch.serve --arch dit-cifar --reduced \
+        --batch 8 --tiers fast,balanced,quality --arrival-rate 0.5
+        # quality tiers: one compiled plan-bank program (DESIGN.md §10)
 """
 
 from __future__ import annotations
@@ -80,7 +83,8 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, gen=32,
 def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                     solver="unipc", fused_update=True, cfg_scale=0.0,
                     cfg_schedule="constant", thresholding=False, seed=0,
-                    arrival_rate=None, trace=None, requests=None):
+                    arrival_rate=None, trace=None, requests=None,
+                    plan_bank=None, tiers=None):
     """Continuous-batching diffusion serving through the engine's per-slot
     step program (`SamplerEngine.build_step` + `serving.SlotScheduler`):
     `batch` slots, requests admitted the tick a slot frees, per-request
@@ -97,8 +101,15 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     same scheduler). The step program is compiled ahead of time
     (`jit(...).lower(...).compile()`), so compile and steady-state serving
     are reported separately. Returns the finished latents ordered by rid.
+
+    Quality tiers (DESIGN.md §10): `plan_bank` (a JSON bank of tuned
+    `SolverPlan`s from `repro.launch.tune --bank`) or `tiers` (a list of
+    hand-set tier names from `engine.default_tier_specs`) compiles ONE
+    `StepProgram` serving every tier — requests tagged fast/balanced/quality
+    coexist in the same batch with per-slot row offsets. Untagged generated
+    traffic cycles through the tiers.
     """
-    from ..engine import EngineSpec
+    from ..engine import EngineSpec, default_tier_specs
     from ..diffusion import VPLinear
     from ..serving import Request, SlotScheduler, load_trace, poisson_requests, run_trace
     from .sample import NULL_CLASS_ID, build_engine
@@ -113,7 +124,32 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     spec = EngineSpec(solver=solver, nfe=nfe, order=order,
                       cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
                       thresholding=thresholding, fused_update=fused_update)
-    program = engine.build_step(spec)
+    common = dict(cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
+                  thresholding=thresholding, fused_update=fused_update)
+    tier_names = None
+    if plan_bank is not None:
+        from ..tuning import load_bank
+
+        plans = load_bank(plan_bank)
+        schedule = engine.schedule
+        tier_specs = {
+            name: EngineSpec(solver="unipc", nfe=p.nfe,
+                             order=max(p.orders), prediction=p.prediction,
+                             **common)
+            for name, p in plans.items()}
+        tables = {name: p.compile(schedule) for name, p in plans.items()}
+        program = engine.build_bank(tier_specs, tables)
+        tier_names = list(plans)
+    elif tiers:
+        all_specs = default_tier_specs(**common)
+        unknown = [t for t in tiers if t not in all_specs]
+        if unknown:
+            raise ValueError(f"unknown tiers {unknown}; hand-set tiers are "
+                             f"{sorted(all_specs)}")
+        program = engine.build_bank({t: all_specs[t] for t in tiers})
+        tier_names = list(tiers)
+    else:
+        program = engine.build_step(spec)
     # idle slots are conditioned on the null class; every request carries its
     # own class id (drawn from its seed), so conditioning is reproducible
     # regardless of which slot the scheduler admits it into
@@ -126,15 +162,21 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     elif arrival_rate is not None:
         n_req = requests if requests is not None else 4 * batch
         reqs = poisson_requests(n_req, arrival_rate, seed=seed,
-                                base_seed=seed)
+                                base_seed=seed, tiers=tier_names)
     else:
         reqs = [Request(rid=i, seed=seed + i) for i in range(batch)]
     for r in reqs:
+        # single assignment point for untagged requests on a tiered program
+        # (trace requests may carry their own tags)
+        if tier_names is not None and r.tier is None:
+            r.tier = tier_names[r.rid % len(tier_names)]
         if r.extras is None or "class_ids" not in r.extras:
             r.extras = {**(r.extras or {}),
                         "class_ids": int(class_ids(1, seed=r.seed)[0])}
     m = run_trace(sched, reqs)
-    print(f"diffusion slots={batch} solver={solver} nfe={nfe} order={order} "
+    mode = (f"bank[{','.join(tier_names)}]" if tier_names
+            else f"{solver} nfe={nfe} order={order}")
+    print(f"diffusion slots={batch} {mode} "
           f"cfg={cfg_scale} fused_update={fused_update}: "
           f"compile {compile_s:.2f}s (AOT), tick {m.tick_s*1e3:.1f} ms, "
           f"{m.completed}/{m.requests} requests, "
@@ -142,6 +184,11 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
           f"latency p50/p95 {m.latency_s_p50*1e3:.0f}/"
           f"{m.latency_s_p95*1e3:.0f} ms, occupancy {m.occupancy:.2f}, "
           f"evals/latent {m.evals_per_latent:.1f}")
+    if m.per_tier:
+        for t, row in m.per_tier.items():
+            print(f"  tier {t}: {row['completed']} done, "
+                  f"{row['evals']} evals/request, "
+                  f"p50 latency {row['latency_ticks_p50']:.0f} ticks")
     order_by_rid = sorted(sched.completions, key=lambda c: c.rid)
     if not order_by_rid:  # e.g. an empty trace
         return np.zeros((0, cfg.patch_tokens, cfg.latent_dim), np.float32)
@@ -155,13 +202,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--nfe", type=int, default=10,
-                    help="diffusion serving: sampler steps")
-    ap.add_argument("--order", type=int, default=3,
-                    help="diffusion serving: solver order")
+    ap.add_argument("--nfe", type=int, default=None,
+                    help="diffusion serving: sampler steps (default 10; "
+                         "incompatible with --plan-bank/--tiers, which "
+                         "carry per-tier schedules)")
+    ap.add_argument("--order", type=int, default=None,
+                    help="diffusion serving: solver order (default 3; "
+                         "incompatible with --plan-bank/--tiers)")
     from ..engine import SOLVERS
-    ap.add_argument("--solver", default="unipc", choices=sorted(SOLVERS),
-                    help="diffusion serving: any engine-registered solver")
+    ap.add_argument("--solver", default=None, choices=sorted(SOLVERS),
+                    help="diffusion serving: any engine-registered solver "
+                         "(default unipc; incompatible with "
+                         "--plan-bank/--tiers)")
     ap.add_argument("--no-fused-update", action="store_true",
                     help="diffusion serving: pin the jnp op-chain combine")
     ap.add_argument("--cfg-scale", type=float, default=0.0,
@@ -182,6 +234,15 @@ def main():
     ap.add_argument("--requests", type=int, default=None,
                     help="diffusion serving: request count for "
                          "--arrival-rate traffic (default 4x batch)")
+    bank = ap.add_mutually_exclusive_group()
+    bank.add_argument("--plan-bank", default=None,
+                      help="diffusion serving: JSON bank of tuned SolverPlans"
+                           " (repro.launch.tune --bank); serves every tier "
+                           "from one compiled step program")
+    bank.add_argument("--tiers", default=None,
+                      help="diffusion serving: comma-separated hand-set "
+                           "quality tiers (fast,balanced,quality) served "
+                           "from one compiled step program")
     scale = ap.add_mutually_exclusive_group()
     scale.add_argument("--reduced", action="store_true",
                        help="reduced CPU-scale config (the default)")
@@ -193,18 +254,31 @@ def main():
         ap.error(f"--arrival-rate/--trace drive the diffusion request "
                  f"scheduler; --arch {args.arch} is family '{family}' "
                  f"(token serving decodes a fixed batch)")
+    if family != "dit" and (args.plan_bank or args.tiers):
+        ap.error(f"--plan-bank/--tiers serve diffusion quality tiers; "
+                 f"--arch {args.arch} is family '{family}'")
+    if ((args.plan_bank or args.tiers)
+            and (args.solver is not None or args.nfe is not None
+                 or args.order is not None)):
+        ap.error("--solver/--nfe/--order configure a single-plan program; "
+                 "a plan bank / tier program takes its per-tier schedules "
+                 "from the bank (drop those flags)")
+    solver = args.solver if args.solver is not None else "unipc"
+    nfe = args.nfe if args.nfe is not None else 10
+    order = args.order if args.order is not None else 3
     if args.arrival_rate is not None and args.arrival_rate <= 0:
         ap.error(f"--arrival-rate must be > 0 requests per tick, "
                  f"got {args.arrival_rate}")
     if family == "dit":
         serve_diffusion(args.arch, reduced=not args.full, batch=args.batch,
-                        nfe=args.nfe, order=args.order, solver=args.solver,
+                        nfe=nfe, order=order, solver=solver,
                         fused_update=not args.no_fused_update,
                         cfg_scale=args.cfg_scale,
                         cfg_schedule=args.cfg_schedule,
                         thresholding=args.thresholding,
                         arrival_rate=args.arrival_rate, trace=args.trace,
-                        requests=args.requests)
+                        requests=args.requests, plan_bank=args.plan_bank,
+                        tiers=(args.tiers.split(",") if args.tiers else None))
         return
     serve(args.arch, reduced=not args.full, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,

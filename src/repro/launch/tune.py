@@ -1,0 +1,206 @@
+"""Solver-plan autotuning launcher (DESIGN.md §10).
+
+Searches the per-step decision space (timestep knots, UniP order, UniC
+on/off, B(h) variant) for one NFE budget — or a whole tier bank — against a
+high-NFE reference trajectory on the arch's eps-network, and saves the
+winning plan(s) as JSON for `launch/sample.py --plan` and
+`launch/serve.py --plan-bank`.
+
+    PYTHONPATH=src python -m repro.launch.tune --arch dit-cifar --nfe 8 \
+        --budget 80 --out plan8.json
+    PYTHONPATH=src python -m repro.launch.tune --arch dit-cifar \
+        --bank fast=5,balanced=8,quality=16 --out bank.json
+    PYTHONPATH=src python -m repro.launch.tune --smoke   # the CI gate
+
+The smoke runs a tiny search and exits nonzero unless the tuned plan's
+discrepancy is no worse than the hand-set UniPC-2 baseline it starts from
+(the search never regresses, so a failure means the tuner itself broke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import get_config
+from ..diffusion import VPLinear
+from ..engine import EngineSpec
+from ..models import api
+from ..tuning import (SearchConfig, SolverPlan, make_objective,
+                      reference_trajectory, save_bank, tune_plan)
+from .sample import build_engine, latent_shape
+
+
+def _setup(arch: str, reduced: bool, batch: int, seed: int,
+           train_steps: int = 0):
+    """Engine + probe latents for the objective. `train_steps > 0` briefly
+    trains the eps-net first (diffusion objective): at random init the
+    reduced nets are nearly linear and every solver lands within fp32 noise
+    of the reference, so plan rankings are meaningless; ~100 steps makes the
+    trajectory curvature real (same reasoning as the tier-1 trained-model
+    solver-ordering test)."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    rng = jax.random.PRNGKey(seed)
+    if train_steps > 0:
+        from .train import train as _train
+
+        params, _ = _train(arch, reduced=reduced, objective="diffusion",
+                           steps=train_steps, batch=8, seq=32, lr=1e-3,
+                           log_every=max(1, train_steps), seed=seed)
+    else:
+        params = api.init_params(cfg, rng)
+    engine = build_engine(cfg, params, VPLinear(), batch, seed)
+    x_T = jax.random.normal(rng, latent_shape(cfg, batch), jnp.float32)
+    return engine, x_T
+
+
+def tune(arch: str = "dit-cifar", *, nfe: int = 8, budget: int = 80,
+         beam: int = 2, rounds: int = 3, baseline_order: int = 2,
+         ref_nfe: int = 48, batch: int = 4, seed: int = 0,
+         reduced: bool = True, train_steps: int = 100, engine=None,
+         x_T=None, x_ref=None, verbose: bool = False):
+    """Search one NFE budget; returns (plan, report). The search starts from
+    the hand-set UniPC-`baseline_order` plan, so the reported baseline IS the
+    paper's default table at this budget. Pass engine/x_T/x_ref (see
+    `reference_trajectory`) to share setup across several budgets."""
+    if engine is None:
+        engine, x_T = _setup(arch, reduced, batch, seed, train_steps)
+    spec = EngineSpec(solver="unipc", nfe=nfe, order=baseline_order)
+    objective = make_objective(engine, spec, x_T, ref_nfe=ref_nfe,
+                               x_ref=x_ref)
+    init = SolverPlan.from_spec(spec)
+    t0 = time.perf_counter()
+    res = tune_plan(objective, engine.schedule, init,
+                    SearchConfig(budget=budget, beam=beam, rounds=rounds),
+                    verbose=verbose)
+    wall = time.perf_counter() - t0
+    plan = res.plan.with_meta(arch=arch, nfe=nfe, ref_nfe=ref_nfe,
+                              baseline_order=baseline_order, seed=seed,
+                              search_wall_s=round(wall, 3))
+    report = {"arch": arch, "nfe": nfe, "baseline": res.baseline,
+              "tuned": res.score, "improvement": res.baseline - res.score,
+              "evals": res.evals, "search_wall_s": wall}
+    return plan, report
+
+
+def tune_bank(arch: str, tiers: dict, *, budget: int = 80, beam: int = 2,
+              rounds: int = 3, baseline_order: int = 2, seed: int = 0,
+              ref_nfe: int = 48, batch: int = 4, reduced: bool = True,
+              train_steps: int = 100, verbose: bool = False):
+    """Tune one plan per tier ({name: nfe}) over a shared engine, probe
+    batch, and reference trajectory; returns ({name: plan}, [report])."""
+    engine, x_T = _setup(arch, reduced, batch, seed, train_steps)
+    x_ref = reference_trajectory(
+        engine, EngineSpec(solver="unipc", nfe=ref_nfe), x_T,
+        ref_nfe=ref_nfe)
+    plans, reports = {}, []
+    for name, nfe in tiers.items():
+        plan, rep = tune(arch, nfe=int(nfe), budget=budget, beam=beam,
+                         rounds=rounds, baseline_order=baseline_order,
+                         ref_nfe=ref_nfe, seed=seed,
+                         engine=engine, x_T=x_T, x_ref=x_ref,
+                         verbose=verbose)
+        plans[name] = plan.with_meta(tier=name)
+        rep["tier"] = name
+        reports.append(rep)
+    return plans, reports
+
+
+def smoke(arch: str = "dit-cifar", nfe: int = 6, budget: int = 24,
+          train_steps: int = 100, seed: int = 0,
+          reduced: bool = True) -> dict:
+    """The CI gate: tiny search budget on a briefly trained net, assert the
+    tuned plan's discrepancy is <= the hand-set UniPC-2 baseline's.
+    rounds=1 / ref_nfe=24 / batch=2 are pinned — they define smoke scale."""
+    plan, report = tune(arch, nfe=nfe, budget=budget, rounds=1,
+                        ref_nfe=24, batch=2, seed=seed, reduced=reduced,
+                        train_steps=train_steps)
+    assert report["tuned"] <= report["baseline"], (
+        f"tuned plan regressed the baseline: {report['tuned']:.6f} > "
+        f"{report['baseline']:.6f}")
+    assert plan.nfe == nfe
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="dit-cifar")
+    ap.add_argument("--nfe", type=int, default=8)
+    ap.add_argument("--budget", type=int, default=80,
+                    help="max objective evaluations for the search")
+    ap.add_argument("--beam", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--baseline-order", type=int, default=2,
+                    help="order of the hand-set UniPC baseline the search "
+                         "starts from (and is scored against)")
+    ap.add_argument("--ref-nfe", type=int, default=48,
+                    help="NFE of the reference trajectory the objective "
+                         "measures discrepancy against")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="probe latent batch size")
+    ap.add_argument("--train-steps", type=int, default=100,
+                    help="brief diffusion-objective training of the eps-net "
+                         "before tuning (0 = tune the random init, where "
+                         "plan rankings drown in fp32 noise)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the tuned plan (or bank) JSON here")
+    ap.add_argument("--bank", default=None,
+                    help="tune a tier bank instead: name=nfe pairs, e.g. "
+                         "fast=5,balanced=8,quality=16")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: tiny search on dit-cifar, exit nonzero "
+                         "if the tuned plan is worse than the UniPC-2 "
+                         "baseline")
+    ap.add_argument("--verbose", action="store_true")
+    scale = ap.add_mutually_exclusive_group()
+    scale.add_argument("--reduced", action="store_true",
+                       help="reduced CPU-scale config (the default)")
+    scale.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        report = smoke(args.arch, nfe=args.nfe, budget=args.budget,
+                       train_steps=args.train_steps, seed=args.seed,
+                       reduced=not args.full)
+        print(json.dumps(report, indent=1))
+        print(f"tuning smoke ok: baseline {report['baseline']:.5f} -> "
+              f"tuned {report['tuned']:.5f} in {report['evals']} evals")
+        return
+    if args.bank:
+        tiers = dict(kv.split("=") for kv in args.bank.split(","))
+        plans, reports = tune_bank(
+            args.arch, tiers, budget=args.budget, beam=args.beam,
+            rounds=args.rounds, baseline_order=args.baseline_order,
+            seed=args.seed, ref_nfe=args.ref_nfe,
+            batch=args.batch, reduced=not args.full,
+            train_steps=args.train_steps, verbose=args.verbose)
+        for rep in reports:
+            print(f"tier {rep['tier']} (nfe={rep['nfe']}): baseline "
+                  f"{rep['baseline']:.5f} -> tuned {rep['tuned']:.5f} "
+                  f"({rep['evals']} evals, {rep['search_wall_s']:.1f}s)")
+        if args.out:
+            save_bank(args.out, plans)
+            print(f"wrote bank ({', '.join(plans)}) to {args.out}")
+        return
+    plan, report = tune(args.arch, nfe=args.nfe, budget=args.budget,
+                        beam=args.beam, rounds=args.rounds,
+                        baseline_order=args.baseline_order,
+                        ref_nfe=args.ref_nfe, batch=args.batch,
+                        seed=args.seed, reduced=not args.full,
+                        train_steps=args.train_steps, verbose=args.verbose)
+    print(f"{args.arch} nfe={args.nfe}: baseline {report['baseline']:.5f} "
+          f"-> tuned {report['tuned']:.5f} ({report['evals']} evals, "
+          f"{report['search_wall_s']:.1f}s)")
+    if args.out:
+        plan.save(args.out)
+        print(f"wrote plan to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,10 @@ class Request:
     arrival: float = 0.0
     x_T: Optional[object] = None
     extras: Optional[dict] = None
+    # quality tier for plan-bank programs (`SamplerEngine.build_bank`):
+    # selects which tuned plan's row span this request steps through. Must
+    # name a tier of the program's bank; None on single-plan programs.
+    tier: Optional[str] = None
 
 
 @dataclass
@@ -68,6 +72,7 @@ class Completion:
     finish_clock: float  # simulated clock time (== finish_tick unless the
                          # trace driver fast-forwarded over idle gaps)
     evals: int           # rows executed = model evals this request consumed
+    tier: Optional[str] = None  # the plan-bank tier served (None: single plan)
 
     @property
     def latency_ticks(self) -> float:
@@ -103,8 +108,12 @@ class SlotScheduler:
         self._extras_init = dict(extras_init or {})
         self.queue: Deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * slots
-        self.slot_row = np.zeros(slots, np.int64)    # next row to execute
+        self.slot_row = np.zeros(slots, np.int64)    # next row (tier-relative)
         self.slot_admit = np.zeros(slots, np.int64)
+        # plan-bank bookkeeping: each slot's row span in the stacked table.
+        # Single-plan programs keep offset 0 / budget n_rows for every slot.
+        self.slot_off = np.zeros(slots, np.int64)
+        self.slot_budget = np.full(slots, program.n_rows, np.int64)
         self.ticks = 0           # batched step calls = batched model evals
         self.evals = 0           # always == ticks (the CI smoke invariant)
         self.active_slot_ticks = 0
@@ -127,6 +136,7 @@ class SlotScheduler:
                 f"request rid={req.rid} carries extras {sorted(unknown)} the "
                 f"scheduler was not constructed for; pass extras_init with "
                 f"matching keys")
+        self.program.resolve_tier(req.tier)  # reject bad tier tags at submit
         self.queue.append(req)
 
     @property
@@ -166,6 +176,9 @@ class SlotScheduler:
                     k, self._extras_init[k]))
             self.slot_req[s] = req
             self.slot_row[s] = 0
+            off, budget = self.program.resolve_tier(req.tier)
+            self.slot_off[s] = off
+            self.slot_budget[s] = budget
             self.slot_admit[s] = self.ticks
         if not taken:
             return
@@ -188,7 +201,10 @@ class SlotScheduler:
         if self.active == 0:
             return []
         busy = np.array([r is not None for r in self.slot_req])
-        idx = jnp.asarray(np.where(busy, self.slot_row, 0), jnp.int32)
+        # idle slots park on row 0 — the (first tier's) init row, an identity
+        # update; busy slots gather their tier offset + trajectory position
+        idx = jnp.asarray(np.where(busy, self.slot_off + self.slot_row, 0),
+                          jnp.int32)
         self.state = self._step(self.state, idx, *self._step_tail())
         self.ticks += 1
         self.evals += 1
@@ -199,16 +215,17 @@ class SlotScheduler:
             if req is None:
                 continue
             self.slot_row[s] += 1
-            if self.slot_row[s] >= self.program.n_rows:
+            if self.slot_row[s] >= self.slot_budget[s]:
                 done.append(Completion(
                     rid=req.rid, latent=np.asarray(self.state[0][s]),
                     arrival=req.arrival, admit_tick=int(self.slot_admit[s]),
                     finish_tick=self.ticks,
                     finish_clock=(float(self.ticks) if self.clock is None
                                   else self.clock),
-                    evals=self.program.n_rows))
+                    evals=int(self.slot_budget[s]), tier=req.tier))
                 self.slot_req[s] = None
                 self.slot_row[s] = 0
+                self.slot_off[s] = 0
         self.completions.extend(done)
         return done
 

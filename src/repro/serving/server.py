@@ -31,11 +31,14 @@ from .scheduler import Completion, Request, SlotScheduler
 
 def poisson_requests(n: int, rate: float, seed: int = 0,
                      cfg_scales: Optional[Sequence[float]] = None,
-                     base_seed: int = 0) -> List[Request]:
+                     base_seed: int = 0,
+                     tiers: Optional[Sequence[str]] = None) -> List[Request]:
     """n requests with Exp(1/rate) inter-arrival gaps (arrival in tick units).
 
     `rate` is requests per tick. `cfg_scales`, if given, is cycled through the
     requests — the per-request guidance knob (UniPC Table 9 settings vary it).
+    `tiers`, if given, is likewise cycled — the quality-tier tag plan-bank
+    programs route on (`Request.tier`).
     """
     if rate <= 0:
         raise ValueError(f"arrival rate must be > 0 requests per tick, "
@@ -44,29 +47,34 @@ def poisson_requests(n: int, rate: float, seed: int = 0,
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
     return [Request(rid=i, seed=base_seed + i, arrival=float(arrivals[i]),
                     cfg_scale=(None if cfg_scales is None
-                               else float(cfg_scales[i % len(cfg_scales)])))
+                               else float(cfg_scales[i % len(cfg_scales)])),
+                    tier=(None if tiers is None
+                          else str(tiers[i % len(tiers)])))
             for i in range(n)]
 
 
 def save_trace(path: str, requests: Sequence[Request]) -> None:
     rows = [{"rid": r.rid, "seed": r.seed, "arrival": r.arrival,
-             "cfg_scale": r.cfg_scale, "extras": r.extras}
+             "cfg_scale": r.cfg_scale, "extras": r.extras, "tier": r.tier}
             for r in requests]
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
 
 
 def load_trace(path: str) -> List[Request]:
-    """JSON trace: a list of {rid, seed, arrival, cfg_scale, extras}
+    """JSON trace: a list of {rid, seed, arrival, cfg_scale, extras, tier}
     objects; `extras` (optional) carries per-request model conditioning,
-    e.g. {"class_ids": 7}."""
+    e.g. {"class_ids": 7}; `tier` (optional) tags the request's quality tier
+    for plan-bank serving."""
     with open(path) as f:
         rows = json.load(f)
     return [Request(rid=int(r["rid"]), seed=int(r.get("seed", 0)),
                     arrival=float(r.get("arrival", 0.0)),
                     cfg_scale=(None if r.get("cfg_scale") is None
                                else float(r["cfg_scale"])),
-                    extras=r.get("extras"))
+                    extras=r.get("extras"),
+                    tier=(None if r.get("tier") is None
+                          else str(r["tier"])))
             for r in rows]
 
 
@@ -79,7 +87,10 @@ class ServeMetrics:
     requests: int
     completed: int
     slots: int
-    n_rows: int               # evals per request (the per-request NFE budget)
+    n_rows: int               # evals per request (the per-request NFE
+                              # budget); for plan-bank programs, the MAX
+                              # across tiers — per_tier carries each tier's
+                              # exact budget
     ticks: int                # batched step calls
     evals: int                # always == ticks
     makespan_ticks: float     # clock when the last request finished
@@ -92,6 +103,9 @@ class ServeMetrics:
     throughput_rps: float     # completed / (ticks * tick_s)
     latency_s_p50: float
     latency_s_p95: float
+    # plan-bank runs: {tier: {completed, evals, latency_ticks_p50}} — how
+    # each quality tier fared inside the shared batch. None for single-plan.
+    per_tier: Optional[dict] = None
 
     def row(self) -> dict:
         return asdict(self)
@@ -136,10 +150,25 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
     tick_s = float(np.median(tick_walls)) if tick_walls else 0.0
     n_done = len(sched.completions) - done0
     ticks = sched.ticks - ticks0
+    run_done = sched.completions[done0:]
+    per_tier = None
+    if any(c.tier is not None for c in run_done):
+        per_tier = {}
+        for t in sorted({c.tier for c in run_done}):
+            cs = [c for c in run_done if c.tier == t]
+            per_tier[t] = {
+                "completed": len(cs),
+                "evals": int(cs[0].evals) if cs else 0,
+                "latency_ticks_p50": float(np.percentile(
+                    [c.latency_ticks for c in cs], 50)) if cs else 0.0,
+            }
+    prog = sched.program
+    budget = (max(n for _, n in prog.tiers.values()) if prog.tiers
+              else prog.n_rows)
     return ServeMetrics(
         mode=mode or ("gang" if sched.gang else "continuous"),
         requests=len(pending), completed=n_done, slots=sched.slots,
-        n_rows=sched.program.n_rows, ticks=ticks, evals=sched.evals - evals0,
+        n_rows=budget, ticks=ticks, evals=sched.evals - evals0,
         makespan_ticks=now,
         throughput_per_tick=n_done / max(now, 1.0),
         latency_ticks_p50=float(np.percentile(lat, 50)),
@@ -151,6 +180,7 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
         throughput_rps=n_done / max(ticks * tick_s, 1e-12),
         latency_s_p50=float(np.percentile(lat, 50)) * tick_s,
         latency_s_p95=float(np.percentile(lat, 95)) * tick_s,
+        per_tier=per_tier,
     )
 
 

@@ -1,0 +1,30 @@
+"""Solver-plan autotuner (DESIGN.md §10).
+
+UniPC's accuracy at extreme few-step budgets hinges on per-step choices the
+paper fixes by hand: timestep placement, UniP order, UniC on/off, B(h)
+variant. This package makes those choices *data*:
+
+* `plans`     — `SolverPlan`, the per-step decision vector; lowers through
+                the same `build_unipc_schedule` path as every hand-set
+                table; JSON (de)serialization; tier-keyed plan banks.
+* `objective` — scores a plan by trajectory discrepancy against a high-NFE
+                reference run (no FID model needed); one jitted runner with
+                the weight table as a traced argument, so candidate scoring
+                never recompiles.
+* `search`    — deterministic coordinate descent with a beam over the mixed
+                discrete/continuous space.
+
+Serving integration lives in `engine.SamplerEngine.build_bank`: tuned plans
+stack into one row-gatherable table (`core.stack_step_rows`) that a single
+compiled `StepProgram` serves as fast/balanced/quality tiers.
+"""
+
+from .objective import PlanObjective, make_objective, reference_trajectory
+from .plans import SolverPlan, load_bank, save_bank
+from .search import SearchConfig, SearchResult, tune_plan
+
+__all__ = [
+    "SolverPlan", "save_bank", "load_bank",
+    "PlanObjective", "make_objective", "reference_trajectory",
+    "SearchConfig", "SearchResult", "tune_plan",
+]

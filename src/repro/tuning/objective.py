@@ -1,0 +1,131 @@
+"""Plan scoring: trajectory discrepancy against a high-NFE reference run.
+
+No FID model fits in this container (and none is needed to *rank* plans):
+following the paper's own Fig. 4c protocol — and the solver-search line of
+work (Liu et al. 2023; DC-Solver) — a candidate plan is scored by how close
+its terminal state lands to a fine-grid reference trajectory started from
+the same probe latents, through the same network:
+
+    d(plan) = || x0_plan - x0_ref ||_2 / || x0_ref ||_2
+
+over a fixed probe batch. Lower is better; orderings track the paper's FID
+orderings at matched NFE.
+
+The scorer is built for search throughput: candidate tables share one shape
+signature (plans pad their weight columns to MAX_ORDER-1), so the whole
+trajectory run jits ONCE with the row table as a *traced argument*
+(`core.step_fn_over_rows`) — scoring a new candidate is a re-execution of
+the compiled program with new weights, never a recompile.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.coeffs import SolverTable, augment_step_rows
+from ..core.unipc import step_fn_over_rows
+from .plans import SolverPlan
+
+
+@dataclass
+class PlanObjective:
+    """Callable plan -> discrepancy, over one model and probe batch.
+
+    model_fn: the engine-wrapped model ((x, t, **cols) -> prediction of the
+        plan's type) — `SamplerEngine.model_fn(spec, tab)` or any (x, t)
+        callable for analytic DPMs.
+    x_T: (B, *sample) probe latents (fixed across candidates).
+    x_ref: (B, *sample) reference terminal states for the same latents.
+    sign/prediction: the plan family's table convention (data-pred unipc by
+        default).
+    """
+
+    model_fn: Callable
+    x_T: jnp.ndarray
+    x_ref: np.ndarray
+    sign: float = 1.0
+    prediction: str = "data"
+    fused_update: bool = True
+    # ONE jitted runner serves every candidate: the row table is a traced
+    # argument, so jit's own cache keys on row *shapes* (one entry per NFE,
+    # since plans pad their weight columns to a fixed width)
+    _runner: Optional[Callable] = None
+    evals: int = 0
+
+    def score_table(self, tab: SolverTable) -> float:
+        rows = {k: jnp.asarray(v, jnp.float32)
+                for k, v in augment_step_rows(tab).items()}
+        if self._runner is None:
+            self._runner = self._make_runner()
+        x0 = np.asarray(self._runner(self.x_T, rows))
+        self.evals += 1
+        return float(np.linalg.norm(x0 - self.x_ref)
+                     / max(np.linalg.norm(self.x_ref), 1e-12))
+
+    def __call__(self, plan: SolverPlan, noise_schedule) -> float:
+        if plan.prediction != self.prediction:
+            raise ValueError(
+                f"objective wraps a {self.prediction}-prediction model; "
+                f"plan is {plan.prediction}-prediction")
+        return self.score_table(plan.compile(noise_schedule))
+
+    def _make_runner(self) -> Callable:
+        model_fn, sign, fused = self.model_fn, self.sign, self.fused_update
+
+        def run(x_T, rows):
+            step = step_fn_over_rows(model_fn, rows, sign=sign,
+                                     fused_update=fused)
+            K = rows["w_pred"].shape[-1]
+            n_rows = rows["t"].shape[0]
+            E0 = jnp.zeros((K + 1,) + x_T.shape, x_T.dtype)
+            (x, _), _ = jax.lax.scan(lambda c, j: (step(c, j), None),
+                                     (x_T, E0), jnp.arange(n_rows))
+            return x
+
+        return jax.jit(run)
+
+
+def reference_trajectory(engine, spec, x_T, *, ref_nfe: int = 64,
+                         ref_order: int = 3) -> np.ndarray:
+    """Terminal states of the high-NFE UniPC-`ref_order` reference run from
+    `x_T` — the converged trajectory candidates are measured against. It
+    depends only on (engine, x_T, ref_nfe, ref_order), so callers tuning
+    several NFE budgets compute it once and pass it to `make_objective`."""
+    from dataclasses import replace
+
+    ref_spec = replace(spec.resolve(), solver="unipc", nfe=ref_nfe,
+                       order=ref_order, prediction=None).resolve()
+    return np.asarray(engine.build(ref_spec)(jnp.asarray(x_T, jnp.float32)))
+
+
+def make_objective(engine, spec, x_T, *, ref_nfe: int = 64,
+                   ref_order: int = 3,
+                   x_ref: Optional[np.ndarray] = None) -> PlanObjective:
+    """Build a PlanObjective over a `SamplerEngine`.
+
+    The reference is the engine's own scan path at `ref_nfe` UniPC-`ref_order`
+    steps (same network, same conditioning knobs as `spec`), computed here
+    unless a precomputed `x_ref` (see `reference_trajectory`) is supplied.
+    `spec` supplies the prediction type and model wrapping; its nfe/order are
+    irrelevant here.
+    """
+    spec = spec.resolve()
+    if spec.cfg_scale or spec.thresholding:
+        # candidate plan tables carry no per-eval model columns; guided /
+        # thresholded tuning would score a different program than it serves
+        raise ValueError("plan tuning scores unconditional trajectories; "
+                         "tune with cfg_scale=0 and thresholding off")
+    x_T = jnp.asarray(x_T, jnp.float32)
+    if x_ref is None:
+        x_ref = reference_trajectory(engine, spec, x_T, ref_nfe=ref_nfe,
+                                     ref_order=ref_order)
+    tab = engine.compile(spec)
+    model = engine.model_fn(spec, tab)
+    return PlanObjective(model_fn=model, x_T=x_T, x_ref=np.asarray(x_ref),
+                         sign=float(tab.sign), prediction=tab.prediction,
+                         fused_update=spec.fused_update)

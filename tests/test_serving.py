@@ -260,6 +260,142 @@ def test_per_request_class_conditioning_is_slot_independent():
 
 
 # ---------------------------------------------------------------------------
+# plan banks: mixed-tier batches (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def _tier_specs():
+    return {"fast": EngineSpec(solver="unipc", nfe=5, order=2),
+            "balanced": EngineSpec(solver="unipc", nfe=8, order=3),
+            "quality": EngineSpec(solver="unipc", nfe=12, order=3)}
+
+
+def test_mixed_tier_batch_matches_per_tier_uniform_scans(gaussian_dpm):
+    """The bank acceptance property: fast/balanced/quality requests served
+    out of ONE compiled StepProgram match each tier's own uniform build()
+    scan <= 1e-5 fp32."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    tiers = _tier_specs()
+    program = eng.build_bank(tiers)
+    assert set(program.tiers) == set(tiers)
+    sched = SlotScheduler(program, 3, (8,))
+    names = ["fast", "balanced", "quality", "quality", "fast", "balanced"]
+    reqs = [Request(rid=r, arrival=float(a), x_T=_x_T(r), tier=names[r])
+            for r, a in zip(range(6), [0, 0, 1, 3, 6, 9])]
+    run_trace(sched, reqs)
+    got = {c.rid: c for c in sched.completions}
+    assert len(got) == 6
+    for r, name in enumerate(names):
+        ref = np.asarray(eng.build(tiers[name])(
+            jnp.asarray(_x_T(r))[None, :]))[0]
+        np.testing.assert_allclose(got[r].latent, ref, atol=1e-5, rtol=0,
+                                   err_msg=f"rid={r} tier={name}")
+        # per-tier NFE accounting: evals == that tier's own row count
+        assert got[r].evals == tiers[name].nfe + 1
+        assert got[r].tier == name
+    assert sched.evals == sched.ticks
+
+
+def test_bank_with_per_request_guidance_scales(vp):
+    """Tiers and per-request cfg compose: a bank program serves requests at
+    different tiers AND different guidance scales, each matching the uniform
+    scan built at that (tier, scale)."""
+    eng = _cfg_engine(vp)
+    tiers = {"fast": EngineSpec(solver="unipc", nfe=4, order=2,
+                                cfg_scale=2.0),
+             "quality": EngineSpec(solver="unipc", nfe=9, order=3,
+                                   cfg_scale=2.0)}
+    program = eng.build_bank(tiers)
+    sched = SlotScheduler(program, 2, (8,))
+    cases = [(0, "fast", 1.0), (1, "quality", 3.0), (2, "fast", 2.0)]
+    reqs = [Request(rid=r, arrival=float(i), x_T=_x_T(r), tier=t,
+                    cfg_scale=s) for i, (r, t, s) in enumerate(cases)]
+    run_trace(sched, reqs)
+    got = {c.rid: c.latent for c in sched.completions}
+    for r, t, s in cases:
+        ref_spec = replace(tiers[t], cfg_scale=s)
+        ref = np.asarray(eng.build(ref_spec)(
+            jnp.asarray(_x_T(r))[None, :]))[0]
+        np.testing.assert_allclose(got[r], ref, atol=1e-5, rtol=0,
+                                   err_msg=f"rid={r} tier={t} scale={s}")
+
+
+def test_bank_from_tuned_plans_round_trips_through_serving(vp, tmp_path):
+    """save_bank -> load_bank -> build_bank(tables=plan tables) serves each
+    tier exactly as the plan's own uniform scan."""
+    from repro.tuning import SolverPlan, load_bank, save_bank
+
+    dpm = GaussianDPM(vp)
+    eng = SamplerEngine(vp, eps=_eps_jx(dpm))
+    plans = {"fast": SolverPlan.default(4, order=2),
+             "quality": SolverPlan.default(8, order=3)}
+    path = str(tmp_path / "bank.json")
+    save_bank(path, plans)
+    loaded = load_bank(path)
+    tier_specs = {k: EngineSpec(solver="unipc", nfe=p.nfe,
+                                order=max(p.orders))
+                  for k, p in loaded.items()}
+    tables = {k: p.compile(vp) for k, p in loaded.items()}
+    program = eng.build_bank(tier_specs, tables)
+    sched = SlotScheduler(program, 2, (8,))
+    reqs = [Request(rid=0, x_T=_x_T(0), tier="fast"),
+            Request(rid=1, x_T=_x_T(1), tier="quality", arrival=1.0)]
+    run_trace(sched, reqs)
+    got = {c.rid: c.latent for c in sched.completions}
+    for r, k in ((0, "fast"), (1, "quality")):
+        ref = np.asarray(eng.build(tier_specs[k],
+                                   table=tables[k])(
+            jnp.asarray(_x_T(r))[None, :]))[0]
+        np.testing.assert_allclose(got[r], ref, atol=1e-5, rtol=0)
+
+
+def test_tier_tags_are_validated(gaussian_dpm):
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    bank = eng.build_bank({"fast": EngineSpec(solver="unipc", nfe=4,
+                                              order=2)})
+    sched = SlotScheduler(bank, 2, (8,))
+    with pytest.raises(ValueError, match="unknown tier"):
+        sched.submit(Request(rid=0, tier="turbo"))
+    with pytest.raises(ValueError, match="tag requests"):
+        sched.submit(Request(rid=1))          # untagged on a bank
+    single = eng.build_step(EngineSpec(solver="unipc", nfe=4, order=2))
+    sched2 = SlotScheduler(single, 2, (8,))
+    with pytest.raises(ValueError, match="single plan"):
+        sched2.submit(Request(rid=2, tier="fast"))
+
+
+def test_bank_rejects_mixed_prediction_and_guidance(gaussian_dpm, vp):
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    with pytest.raises(ValueError, match="prediction"):
+        eng.build_bank({"a": EngineSpec(solver="unipc", nfe=4),
+                        "b": EngineSpec(solver="ddim", nfe=4,
+                                        prediction="noise")})
+    eng2 = _cfg_engine(vp)
+    with pytest.raises(ValueError, match="guidance scale"):
+        eng2.build_bank({"a": EngineSpec(solver="unipc", nfe=4,
+                                         cfg_scale=2.0),
+                         "b": EngineSpec(solver="unipc", nfe=6,
+                                         cfg_scale=3.0)})
+
+
+def test_per_tier_metrics_reported(gaussian_dpm):
+    from repro.serving import poisson_requests
+
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_bank(_tier_specs())
+    sched = SlotScheduler(program, 3, (8,))
+    reqs = poisson_requests(9, rate=0.5, seed=5,
+                            tiers=["fast", "balanced", "quality"])
+    m = run_trace(sched, reqs)
+    assert m.completed == 9
+    assert set(m.per_tier) == {"fast", "balanced", "quality"}
+    for name, spec in _tier_specs().items():
+        assert m.per_tier[name]["completed"] == 3
+        assert m.per_tier[name]["evals"] == spec.nfe + 1
+        assert m.per_tier[name]["latency_ticks_p50"] >= spec.nfe + 1
+
+
+# ---------------------------------------------------------------------------
 # 1-device mesh under SERVE_RULES: bit-identical to no mesh context
 # ---------------------------------------------------------------------------
 

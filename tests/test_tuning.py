@@ -1,0 +1,234 @@
+"""Solver-plan autotuner: plans, lowering, objective, search, plan banks.
+
+The two acceptance properties (ISSUE 4 / DESIGN.md §10):
+
+* plan round-trip — search -> JSON -> load -> compiled table BIT-identical;
+* a tuned plan strictly beats the hand-set UniPC-2 baseline on the
+  reference-trajectory discrepancy metric (analytic DPMs here; the dit-cifar
+  gate runs as the CI tuning smoke and the slow system test).
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coeffs import build_unipc_schedule
+from repro.diffusion import GaussianDPM
+from repro.engine import EngineSpec, SamplerEngine
+from repro.tuning import (SearchConfig, SolverPlan, load_bank,
+                          make_objective, save_bank, tune_plan)
+
+TABLE_COLS = ("base_x", "base_m0", "w_pred", "w_corr_prev", "w_corr_new",
+              "use_corrector", "out_scale", "lambdas", "alphas", "sigmas",
+              "timesteps")
+
+
+def _eps_jx(dpm):
+    sched = dpm.schedule
+
+    def eps(x, t):
+        t = jnp.asarray(t)
+        a = jnp.exp(sched.log_alpha_jax(t))
+        sig = jnp.sqrt(1 - a * a)
+        if t.ndim == 1:
+            bshape = (-1,) + (1,) * (x.ndim - 1)
+            a, sig = a.reshape(bshape), sig.reshape(bshape)
+        return sig * (x - a * dpm.mu) / (a * a * dpm.s ** 2 + sig * sig)
+
+    return eps
+
+
+def _engine(gaussian_dpm):
+    return SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+
+
+def _objective(gaussian_dpm, nfe=6, order=2, batch=4, ref_nfe=48):
+    eng = _engine(gaussian_dpm)
+    spec = EngineSpec(solver="unipc", nfe=nfe, order=order)
+    x_T = np.random.default_rng(0).normal(size=(batch, 8)).astype(np.float32)
+    return eng, spec, make_objective(eng, spec, x_T, ref_nfe=ref_nfe)
+
+
+# ---------------------------------------------------------------------------
+# plans + lowering
+# ---------------------------------------------------------------------------
+
+
+def test_default_plan_matches_hand_set_table(vp):
+    """The search starts AT the paper's baseline: the default plan's table
+    equals the registry-compiled unipc table (values; the plan pads its
+    difference columns to the fixed MAX_ORDER width)."""
+    spec = EngineSpec(solver="unipc", nfe=8, order=2).resolve()
+    eng = SamplerEngine(vp, eps=lambda x, t: x)
+    ref = eng.compile(spec)
+    tab = SolverPlan.from_spec(spec).compile(vp)
+    for col in TABLE_COLS:
+        a, b = getattr(ref, col), getattr(tab, col)
+        if a.ndim == 2:  # weight columns: plan pads to MAX_ORDER-1
+            b = b[:, : a.shape[1]]
+            assert not np.any(tab.w_pred[:, a.shape[1]:])
+        np.testing.assert_allclose(a, b, rtol=1e-12, atol=0, err_msg=col)
+    assert ref.sign == tab.sign and ref.prediction == tab.prediction
+
+
+def test_per_step_schedules_change_the_table(vp):
+    """variant_schedule / corrector_schedule actually steer row construction."""
+    from repro.diffusion.schedules import timestep_grid
+
+    t, lam, alpha, sigma = timestep_grid(vp, 6, "logsnr")
+    base = dict(lambdas=lam, alphas=alpha, sigmas=sigma, timesteps=t,
+                order=2, prediction="data")
+    t_bh2 = build_unipc_schedule(**base, variant="bh2")
+    t_mix = build_unipc_schedule(**base, variant="bh2",
+                                 variant_schedule=["bh1"] * 3 + ["bh2"] * 3)
+    assert not np.allclose(t_bh2.w_pred[1:3], t_mix.w_pred[1:3])
+    np.testing.assert_array_equal(t_bh2.w_pred[3:], t_mix.w_pred[3:])
+    t_corr = build_unipc_schedule(**base, corrector_schedule=[1, 0, 1, 0, 1, 0])
+    np.testing.assert_array_equal(t_corr.use_corrector,
+                                  [1, 0, 1, 0, 1, 0])
+
+
+def test_plan_validation_rejects_malformed():
+    good = SolverPlan.default(4)
+    with pytest.raises(ValueError, match="knots"):
+        SolverPlan(nfe=4, knots=[0.5], orders=good.orders,
+                   corrector=good.corrector, variants=good.variants)
+    with pytest.raises(ValueError, match="increasing"):
+        SolverPlan(nfe=4, knots=[0.6, 0.5, 0.7], orders=good.orders,
+                   corrector=good.corrector, variants=good.variants)
+    with pytest.raises(ValueError, match="orders"):
+        SolverPlan(nfe=4, knots=good.knots, orders=[1, 2, 9, 1],
+                   corrector=good.corrector, variants=good.variants)
+    with pytest.raises(ValueError, match="variants"):
+        SolverPlan(nfe=4, knots=good.knots, orders=good.orders,
+                   corrector=good.corrector, variants=["bh3"] * 4)
+
+
+# ---------------------------------------------------------------------------
+# search + round trip (the acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+def test_search_json_load_compile_bit_identical(gaussian_dpm, tmp_path, vp):
+    """search -> save -> load -> compile must be BIT-identical to compiling
+    the in-memory winner (floats survive JSON exactly)."""
+    _, _, obj = _objective(gaussian_dpm)
+    init = SolverPlan.default(6, order=2)
+    res = tune_plan(obj, vp, init, SearchConfig(budget=30, beam=2, rounds=1))
+    path = str(tmp_path / "plan.json")
+    res.plan.save(path)
+    loaded = SolverPlan.load(path)
+    assert loaded.to_dict() == res.plan.to_dict()
+    t1, t2 = res.plan.compile(vp), loaded.compile(vp)
+    for col in TABLE_COLS:
+        np.testing.assert_array_equal(getattr(t1, col), getattr(t2, col),
+                                      err_msg=col)
+
+
+def test_tuned_plan_strictly_beats_unipc2_baseline(gaussian_dpm, vp):
+    """The tuner's reason to exist: at a tight budget the searched plan's
+    discrepancy is strictly below the hand-set UniPC-2 table's."""
+    _, spec, obj = _objective(gaussian_dpm, nfe=6, order=2)
+    init = SolverPlan.from_spec(spec)
+    res = tune_plan(obj, vp, init, SearchConfig(budget=40, beam=2, rounds=2))
+    assert res.baseline == pytest.approx(obj(init, vp))
+    assert res.score < res.baseline
+    assert res.plan.meta["objective"] == res.score
+    assert res.evals <= 40 + 1
+
+
+def test_search_never_regresses_and_respects_budget(vp):
+    """Even when nearly nothing improves (a Gaussian at high NFE is already
+    at reference accuracy), the winner is never worse than the init and the
+    eval budget is honored."""
+    eng = SamplerEngine(vp, eps=_eps_jx(GaussianDPM(vp)))
+    spec = EngineSpec(solver="unipc", nfe=16, order=3)
+    x_T = np.random.default_rng(1).normal(size=(2, 8)).astype(np.float32)
+    obj = make_objective(eng, spec, x_T, ref_nfe=48)
+    res = tune_plan(obj, vp, SolverPlan.from_spec(spec),
+                    SearchConfig(budget=10, beam=1, rounds=1))
+    assert res.score <= res.baseline
+    assert res.evals <= 10
+
+
+def test_objective_rejects_mismatched_prediction(gaussian_dpm, vp):
+    _, _, obj = _objective(gaussian_dpm)
+    noise_plan = SolverPlan.default(6, prediction="noise")
+    with pytest.raises(ValueError, match="prediction"):
+        obj(noise_plan, vp)
+
+
+def test_objective_uses_one_runner_across_candidates(gaussian_dpm, vp):
+    """Candidate scoring must not recompile: ONE jitted runner takes the row
+    table as a traced argument, so same-NFE candidates share a compiled
+    executable (jit's cache keys on row shapes only)."""
+    _, _, obj = _objective(gaussian_dpm)
+    obj(SolverPlan.default(6, order=2), vp)
+    runner = obj._runner
+    obj(SolverPlan.default(6, order=3), vp)
+    obj(SolverPlan.default(6, order=1), vp)
+    obj(SolverPlan.default(7, order=2), vp)   # new NFE: new shapes, same fn
+    assert obj._runner is runner
+    if hasattr(runner, "_cache_size"):
+        # 4 candidates, 2 distinct row shapes (nfe 6 and 7) -> 2 compiles
+        assert runner._cache_size() == 2
+
+
+def test_compile_with_external_table_does_not_mutate_it(vp):
+    """One plan table compiled under two specs: the second compile must not
+    rewrite the first program's model columns (apply_model_cols aliasing)."""
+    from dataclasses import replace
+
+    eng = SamplerEngine(vp, eps=lambda x, t, **kw: x,
+                        eps_stacked=lambda xx, t, **kw: xx)
+    base = SolverPlan.default(4).compile(vp)
+    spec_a = EngineSpec(solver="unipc", nfe=4, cfg_scale=2.0)
+    spec_b = replace(spec_a, cfg_scale=3.0)
+    tab_a = eng.compile(spec_a, table=base)
+    tab_b = eng.compile(spec_b, table=base)
+    assert base.model_cols in (None, {})
+    assert float(tab_a.model_cols["g"][0]) == 2.0
+    assert float(tab_b.model_cols["g"][0]) == 3.0
+
+
+def test_search_memo_never_rescans_identical_tables(gaussian_dpm, vp):
+    """Re-proposed candidates (same lowered table) are memo hits: the
+    objective runs at most once per distinct table, so reported evals ==
+    unique candidates scored."""
+    _, spec, obj = _objective(gaussian_dpm, nfe=5)
+    res = tune_plan(obj, vp, SolverPlan.from_spec(spec),
+                    SearchConfig(budget=60, beam=2, rounds=3))
+    assert obj.evals == res.evals       # no duplicate objective calls
+    assert res.evals <= 60
+
+
+# ---------------------------------------------------------------------------
+# banks
+# ---------------------------------------------------------------------------
+
+
+def test_bank_save_load_round_trip(tmp_path):
+    plans = {"fast": SolverPlan.default(4, order=2).with_meta(tier="fast"),
+             "quality": SolverPlan.default(8, order=3)}
+    path = str(tmp_path / "bank.json")
+    save_bank(path, plans)
+    loaded = load_bank(path)
+    assert list(loaded) == ["fast", "quality"]
+    for k in plans:
+        assert loaded[k].to_dict() == plans[k].to_dict()
+    plans["fast"].save(path)      # overwrite with a bare (non-bank) plan
+    with pytest.raises(ValueError, match="plan bank"):
+        load_bank(path)
+
+
+def test_plan_json_is_versioned_and_typed(tmp_path):
+    p = SolverPlan.default(4)
+    path = str(tmp_path / "p.json")
+    p.save(path)
+    with open(path) as f:
+        d = json.load(f)
+    assert d["kind"] == "solver-plan" and d["version"] == 1
+    with pytest.raises(ValueError, match="not a solver plan"):
+        SolverPlan.from_dict({"kind": "something-else"})
