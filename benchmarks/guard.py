@@ -12,6 +12,10 @@ Checks:
 * BENCH_tuning.json — must be present (the tuning acceptance trajectory is
   committed alongside the serving one); every tuned plan must score <= its
   baseline, and NFE <= 8 rows must improve strictly.
+* BENCH_model.json — for every arch, the fast-eval denoiser path
+  (flash + fused adaLN) must beat the eager eval wall-clock at dit-i256
+  serving shapes (the acceptance criterion of the fast-eval PR); both rows
+  must be present and positive.
 
     python benchmarks/guard.py [--min-serve-ratio 1.1]
 """
@@ -98,6 +102,47 @@ def check_tuning(path: str = "BENCH_tuning.json") -> int:
     return checked
 
 
+def check_model(path: str = "BENCH_model.json") -> int:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} is missing — the denoiser fast-eval trajectory must "
+             f"stay committed (run `python -m benchmarks.run --only model`)")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is corrupt: {e}")
+    by_arch = {}
+    for run in data.get("runs", []):
+        by_arch.setdefault(run.get("arch"), {})[run.get("mode")] = run
+    if not by_arch:
+        fail(f"{path} carries no runs")
+    checked = 0
+    for arch, modes in sorted(by_arch.items()):
+        missing = {"eager", "flash_fused"} - set(modes)
+        if missing:
+            fail(f"{path} {arch}: missing eval modes {sorted(missing)} — "
+                 f"artifact schema drift?")
+        eager, fast = (modes["eager"].get("eval_us"),
+                       modes["flash_fused"].get("eval_us"))
+        if any(not isinstance(v, (int, float)) or v <= 0
+               for v in (eager, fast)):
+            fail(f"{path} {arch}: eval_us missing or non-positive "
+                 f"(eager={eager}, flash_fused={fast})")
+        # the acceptance bar: the fast-eval path must beat eager at the
+        # big serving shape; dit-cifar's eval is too small to separate from
+        # dispatch noise, so it only has to stay within 15%
+        bar = 1.0 if arch == "dit-i256" else 1.15
+        ratio = fast / eager
+        status = "ok" if ratio < bar else "FAIL"
+        print(f"model {arch}: flash_fused/eager eval wall ratio "
+              f"{ratio:.3f} (bar {bar}) {status}")
+        if ratio >= bar:
+            fail(f"fast-eval path no longer beats the eager eval at {arch} "
+                 f"({fast:.0f}us vs {eager:.0f}us)")
+        checked += 1
+    return checked
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--min-serve-ratio", type=float, default=1.1)
@@ -106,6 +151,7 @@ def main() -> None:
     os.chdir(args.root)
     n = check_serve(min_ratio=args.min_serve_ratio)
     n += check_tuning()
+    n += check_model()
     print(f"bench guard ok ({n} checks)")
 
 

@@ -26,6 +26,7 @@ sys.path.insert(0, "src")
 BENCH_ARTIFACTS = {
     "serve": "BENCH_serve.json",
     "tuning": "BENCH_tuning.json",
+    "model": "BENCH_model.json",
 }
 
 
@@ -82,6 +83,8 @@ def _run_tag(base: str, run: dict) -> str:
                 f"/{run.get('mode')}")
     if base == "BENCH_tuning.json":
         return f"{run.get('arch')}/nfe{run.get('nfe')}"
+    if base == "BENCH_model.json":
+        return f"{run.get('arch')}/{run.get('mode')}"
     return ",".join(f"{k}={run[k]}" for k in list(run)[:3])
 
 
@@ -96,18 +99,28 @@ def _run_headline(base: str, run: dict) -> str:
                 f"->{run.get('tuned_discrepancy', 0):.5f} "
                 f"(-{run.get('rel_improvement', 0)*100:.1f}%) "
                 f"search={run.get('search_wall_s', 0):.1f}s")
+    if base == "BENCH_model.json":
+        if run.get("mode") == "attn_traffic":
+            return (f"naive={run.get('naive_bytes', 0):.2e}B "
+                    f"flash_model={run.get('flash_model_bytes', 0):.2e}B")
+        return (f"eval={run.get('eval_us', 0)/1e3:.2f}ms "
+                f"hbm={run.get('hbm_bytes', 0):.2e}B "
+                f"x{run.get('speedup_vs_eager', 0):.2f} vs eager"
+                if "speedup_vs_eager" in run else
+                f"eval={run.get('eval_us', 0)/1e3:.2f}ms")
     keys = [k for k, v in run.items() if isinstance(v, (int, float))][:4]
     return " ".join(f"{k}={run[k]:.4g}" for k in keys)
 
 
 def main() -> None:
-    from . import (bench_engine, bench_figs, bench_kernels, bench_roofline,
-                   bench_serve, bench_tables, bench_tuning)
+    from . import (bench_engine, bench_figs, bench_kernels, bench_model,
+                   bench_roofline, bench_serve, bench_tables, bench_tuning)
 
     benches = {
         "engine": bench_engine.bench_engine,
         "serve": bench_serve.bench_serve,
         "tuning": bench_tuning.bench_tuning,
+        "model": bench_model.bench_model,
         "table1": bench_tables.table1_bh_ablation,
         "table2": bench_tables.table2_unic_any_solver,
         "table3": bench_tables.table3_oracle,

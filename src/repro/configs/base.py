@@ -73,8 +73,11 @@ class ModelConfig:
     #                                position-in-expert cumsum never crosses
     #                                shard boundaries
 
-    # kernels
-    use_pallas_attention: bool = False  # TPU only; dry-run/CPU uses the XLA path
+    # kernels (fast-eval path, DESIGN.md §11). None = platform policy
+    # (Pallas on TPU, jnp oracle elsewhere); pin "pallas" | "interpret" |
+    # "jnp" explicitly (CI runs the real kernels under "interpret").
+    attention_backend: Optional[str] = None  # kernels/flash_attention dispatch
+    adaln_backend: Optional[str] = None      # kernels/adaln_modulate dispatch
 
     def __post_init__(self):
         if self.num_kv_heads is None:

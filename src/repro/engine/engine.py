@@ -113,12 +113,18 @@ class SamplerEngine:
                  [cond; null] — required for cfg_scale != 0 (fused CFG).
     eps_uncond:  (x, t) -> eps-hat with null conditioning — only needed for
                  `build_loop`'s reference path (sequential, two evals/step).
+    eval_dtype:  the precision the wired eps-net actually computes in —
+                 `launch.sample.build_engine(eval_dtype=...)` sets it when
+                 it casts the net; `model_fn` rejects specs that disagree,
+                 so the net-side cast and the engine-side fp32 boundary
+                 (DESIGN.md §11.3) cannot silently desynchronize.
     """
 
     schedule: NoiseSchedule
     eps: Callable
     eps_stacked: Optional[Callable] = None
     eps_uncond: Optional[Callable] = None
+    eval_dtype: str = "float32"
 
     # -- table ---------------------------------------------------------------
     def compile(self, spec: EngineSpec,
@@ -136,8 +142,21 @@ class SamplerEngine:
         """Wrap the eps-net into the table's prediction type, consuming the
         per-eval model columns the table carries (g, tq). Any further keyword
         arguments (per-slot conditioning from a StepProgram's extras, e.g.
-        class ids) pass through to the eps-net."""
+        class ids) pass through to the eps-net.
+
+        `spec.eval_dtype` is the network-eval precision boundary (DESIGN.md
+        §11): the state is cast down on the way into the eps-net and the
+        prediction cast back up, so solver state, combine weights, and the
+        eps↔x0 conversion stay fp32 whatever the network runs in. (For the
+        network itself to *compute* in bf16 the model config's activation
+        dtype must match — `launch.sample.build_engine(eval_dtype=...)`
+        wires both ends.)"""
         spec = spec.resolve()
+        if spec.eval_dtype != self.eval_dtype:
+            raise ValueError(
+                f"spec.eval_dtype={spec.eval_dtype!r} but this engine's "
+                f"eps-net was wired for {self.eval_dtype!r}; pass the same "
+                f"eval_dtype to build_engine and the EngineSpec")
         if spec.cfg_scale:
             if self.eps_stacked is None:
                 raise ValueError("cfg_scale != 0 needs eps_stacked (a 2B "
@@ -147,6 +166,15 @@ class SamplerEngine:
             eps = lambda x, t, g=None, **extra: self.eps(x, t, **extra)
 
         schedule = self.schedule
+        if spec.eval_dtype != "float32":
+            # the precision boundary: state down-cast into the net, the
+            # prediction back up to fp32 — only wrapped for reduced-precision
+            # eval so the fp32 default (and the fp64 exactness tests) keep
+            # the eps-net's native dtypes end to end
+            eval_dtype = jnp.dtype(spec.eval_dtype)
+            inner = eps
+            eps = lambda x, t, g=None, **extra: inner(
+                x.astype(eval_dtype), t, g, **extra).astype(jnp.float32)
 
         def model(x, t, g=None, tq=None, **extra):
             e = eps(x, t, g, **extra)
@@ -172,19 +200,29 @@ class SamplerEngine:
         return jax.jit(run) if jit else run
 
     def build_step(self, spec: EngineSpec, jit: bool = True,
-                   table: Optional[SolverTable] = None) -> StepProgram:
+                   table: Optional[SolverTable] = None,
+                   donate: bool = True) -> StepProgram:
         """spec -> StepProgram: the per-slot step function for continuous
         batching (DESIGN.md §9). The same table rows `build` scans uniformly,
         gathered per slot; the guidance scale becomes per-slot state
         (multiplied by the table's schedule profile) so every request can
-        carry its own cfg scale through one compiled program."""
+        carry its own cfg scale through one compiled program.
+
+        `donate` (default on) donates the slot-state buffers (x, E) to the
+        jitted step, so each tick's state update reuses the previous tick's
+        HBM allocation instead of round-tripping a fresh one — the state is
+        the whole slot batch plus the eval ring, the largest serving-resident
+        tensors after the params. Callers must treat the passed-in state as
+        consumed (the scheduler always does); `donate=False` keeps the
+        allocating behavior for aliasing callers and the parity test."""
         spec = spec.resolve()
         tab = table if table is not None else self.compile(spec)
-        return self._step_program({"_": (spec, tab)}, tiers=None, jit=jit)
+        return self._step_program({"_": (spec, tab)}, tiers=None, jit=jit,
+                                  donate=donate)
 
     def build_bank(self, tier_specs: Dict[str, EngineSpec],
                    tables: Optional[Dict[str, SolverTable]] = None,
-                   jit: bool = True) -> StepProgram:
+                   jit: bool = True, donate: bool = True) -> StepProgram:
         """Compile several plans into ONE servable step program (§10).
 
         tier_specs: {tier_name: EngineSpec} in serving-priority order; every
@@ -210,9 +248,9 @@ class SamplerEngine:
             tspec = tspec.resolve()
             tab = (tables or {}).get(name)
             items[name] = (tspec, self.compile(tspec, table=tab))
-        return self._step_program(items, tiers=True, jit=jit)
+        return self._step_program(items, tiers=True, jit=jit, donate=donate)
 
-    def _step_program(self, items, tiers, jit) -> StepProgram:
+    def _step_program(self, items, tiers, jit, donate=True) -> StepProgram:
         """Shared lowering for build_step (single plan) and build_bank."""
         names = list(items)
         spec0, tab0 = items[names[0]]
@@ -226,6 +264,9 @@ class SamplerEngine:
                     f"{spec0.cfg_scale} (per-request scales stay free)")
             if s.fused_update != spec0.fused_update:
                 raise ValueError("bank tiers must agree on fused_update")
+            if s.eval_dtype != spec0.eval_dtype:
+                raise ValueError("bank tiers must agree on eval_dtype (one "
+                                 "compiled program, one model wrapper)")
         model = self.model_fn(spec0, tab0)
         profs, step_tabs = [], {}
         for name, (s, t) in items.items():
@@ -261,7 +302,14 @@ class SamplerEngine:
             x, E = core_step((x, E), idx, model_kwargs=kw or None)
             return _shard_state(x, E)
 
-        return StepProgram(step=jax.jit(step) if jit else step, n_rows=n_rows,
+        if jit:
+            # donate the slot state (arg 0): the tick's (x, E) update writes
+            # into the previous tick's buffers instead of fresh HBM — safe
+            # because every caller replaces its state reference with the
+            # step's return value (bit-identity pinned in tests/test_serving)
+            step = (jax.jit(step, donate_argnums=(0,)) if donate
+                    else jax.jit(step))
+        return StepProgram(step=step, n_rows=n_rows,
                            table=tab0, spec=spec0, uses_cfg=uses_cfg,
                            ring=rows_np["w_pred"].shape[-1] + 1,
                            tiers=dict(spans) if tiers else None)

@@ -43,11 +43,19 @@ class EngineSpec:
     threshold_percentile: float = 0.995
     # execution
     fused_update: bool = True
+    # serving eval precision (DESIGN.md §11): the eps-network evaluates in
+    # this dtype; solver state, combine weights, and the x0/eps conversion
+    # stay fp32 regardless. "bfloat16" is the opt-in fast serving mode —
+    # parity bounds documented in DESIGN.md §11 and pinned by tests.
+    eval_dtype: str = "float32"
 
     def resolve(self) -> "EngineSpec":
         """Fill solver-dependent defaults; validate against the registry."""
         sd = solver_def(self.solver)
         out = self
+        if out.eval_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"eval_dtype must be 'float32' or 'bfloat16', "
+                             f"got {out.eval_dtype!r}")
         if out.prediction is None:
             out = replace(out, prediction=sd.prediction)
         elif sd.fixed_prediction and out.prediction != sd.prediction:

@@ -1,11 +1,20 @@
 """Pallas TPU kernels for the perf-critical compute layers, each a package
 of kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (jit'd public
-wrapper with backend dispatch + padding) and ref.py (pure-jnp oracle):
+wrapper with the explicit pallas|interpret|jnp backend dispatch + padding)
+and ref.py (pure-jnp oracle):
 
-* unipc_update    — fused multi-term solver state update (one HBM pass)
-* flash_attention — blockwise online-softmax causal GQA attention
-                    (sliding-window capable), (128, 128) MXU-aligned tiles
+* unipc_update    — fused multi-term solver state update (one HBM pass);
+                    the scan sampler's default combine (DESIGN.md §4-§5)
+* flash_attention — blockwise online-softmax GQA attention (causal,
+                    non-causal, sliding-window), (128, 128) MXU-aligned
+                    tiles; the model-side attention in
+                    `models.layers.attention_apply` routes through its ops
+                    wrapper (the fast-eval path, DESIGN.md §11)
+* adaln_modulate  — fused layernorm + adaLN-zero scale/shift and the gated
+                    residual re-entry; `models.dit` runs every block's
+                    modulation through it (DESIGN.md §11)
 
-Validated against the oracles in interpret mode (tests/test_kernels.py);
-selected on TPU backends by the ops wrappers.
+Validated against the oracles in interpret mode (tests/test_kernels.py,
+tests/test_fast_eval.py); selected on TPU backends by the ops wrappers, with
+the jnp oracles as the compiled-XLA path everywhere else.
 """

@@ -1,0 +1,66 @@
+"""Public wrapper for the fused adaLN modulation: backend dispatch + padding.
+
+The same explicit three-backend policy as ``kernels/unipc_update/ops.py``
+and ``kernels/flash_attention/ops.py`` (DESIGN.md §5):
+
+* ``"pallas"``    — the compiled Pallas kernels; the production path on TPU.
+* ``"interpret"`` — the same kernels under the Pallas interpreter (CI).
+* ``"jnp"``       — the fp32 oracle in `ref.py`; the right default off-TPU —
+  under jit XLA fuses it to the same elementwise schedule the kernel pins,
+  so CPU serving loses nothing while TPU serving drops the multi-pass HBM
+  round trips (DESIGN.md §11).
+
+`modulate` is `LN(x) * (1 + scale) + shift`; `gate_residual` is
+`resid + gate * y`. The kernel backends pad D up to the 128-lane boundary
+(masked inside the LN reduction) and T up to the token-tile boundary, then
+slice both off.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from ..dispatch import (BACKENDS, resolve_backend,  # noqa: F401 (re-export)
+                        platform_select as select_backend)
+from .kernel import (DEFAULT_BLOCK_T, adaln_modulate,  # noqa: F401
+                     gate_residual as _gate_residual_kernel)
+
+
+def _pad(x, pt, pd):
+    if pt or pd:
+        x = jnp.pad(x, ((0, 0), (0, pt), (0, pd)))
+    return x
+
+
+def modulate(x, shift, scale, *, eps=1e-5, backend=None, force_pallas=False,
+             blk_t=DEFAULT_BLOCK_T):
+    """LN(x) * (1 + scale) + shift in one pass. x: (B, T, D); shift/scale:
+    (B, D). `backend` pins one of BACKENDS; `force_pallas` means "run the
+    kernel even off-TPU" (compiled on TPU, interpreted elsewhere)."""
+    backend = resolve_backend(backend, force_pallas, select_backend)
+    if backend == "jnp":
+        return ref.modulate(x, shift, scale, eps=eps)
+    B, T, D = x.shape
+    bt = min(blk_t, max(8, T))      # don't tile past tiny T
+    pt, pd = (-T) % bt, (-D) % 128
+    pad1 = ((0, 0), (0, pd))
+    out = adaln_modulate(
+        _pad(x, pt, pd), jnp.pad(shift, pad1), jnp.pad(scale, pad1),
+        d_true=D, eps=eps, blk_t=bt, interpret=backend == "interpret")
+    return out[:, :T, :D]
+
+
+def gate_residual(resid, gate, y, *, backend=None, force_pallas=False,
+                  blk_t=DEFAULT_BLOCK_T):
+    """resid + gate * y in one pass. resid/y: (B, T, D); gate: (B, D)."""
+    backend = resolve_backend(backend, force_pallas, select_backend)
+    if backend == "jnp":
+        return ref.gate_residual(resid, gate, y)
+    B, T, D = resid.shape
+    bt = min(blk_t, max(8, T))
+    pt, pd = (-T) % bt, (-D) % 128
+    out = _gate_residual_kernel(
+        _pad(resid, pt, pd), jnp.pad(gate, ((0, 0), (0, pd))),
+        _pad(y, pt, pd), blk_t=bt, interpret=backend == "interpret")
+    return out[:, :T, :D]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused adaLN-zero modulation (fp32 math)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def modulate(x, shift, scale, eps=1e-5):
+    """LN(x) * (1 + scale) + shift. x: (B, T, D); shift/scale: (B, D).
+
+    Layernorm without learnable affine (the DiT convention — the affine is
+    the conditioning itself), computed in fp32 like `models.layers.layernorm`
+    and cast back to x.dtype at the end."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = (y * (1.0 + scale.astype(jnp.float32))[:, None]
+           + shift.astype(jnp.float32)[:, None])
+    return out.astype(x.dtype)
+
+
+def gate_residual(resid, gate, y):
+    """resid + gate * y — the adaLN-zero gated residual re-entry.
+    resid/y: (B, T, D); gate: (B, D)."""
+    out = (resid.astype(jnp.float32)
+           + gate.astype(jnp.float32)[:, None] * y.astype(jnp.float32))
+    return out.astype(resid.dtype)

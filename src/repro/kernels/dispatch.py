@@ -1,0 +1,49 @@
+"""Shared backend-dispatch policy for the kernel ops wrappers (DESIGN.md §5).
+
+Every kernel package exposes the same three backends:
+
+* ``"pallas"``    — the compiled Pallas kernel; the production path on TPU.
+* ``"interpret"`` — the same kernel under the Pallas interpreter; correct on
+  any platform, slow; what CI pins to exercise the real kernel code on CPU.
+* ``"jnp"``       — the package's pure-jnp oracle; the right default
+  off-TPU, where there is no Mosaic to compile against.
+
+`resolve_backend` is the one implementation of the pin/force/auto
+resolution all ops wrappers share; each package keeps its own `auto` choice
+(platform-only for attention/adaLN, size-aware for the solver update).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+BACKENDS = ("pallas", "interpret", "jnp")
+
+
+def platform_select(platform: str | None = None) -> str:
+    """The platform-only auto policy: TPU gets the compiled kernel;
+    everything else the jnp oracle — without Mosaic there is no compiled
+    Pallas, and the interpreter is strictly for testing. Packages with a
+    shape-aware policy (unipc_update's sub-tile cutoff) wrap this."""
+    platform = platform or jax.default_backend()
+    return "pallas" if platform == "tpu" else "jnp"
+
+
+def resolve_backend(backend: str | None, force_pallas: bool,
+                    auto: Callable[[], str]) -> str:
+    """Resolve the backend for one ops call.
+
+    `backend` pins one of BACKENDS (unknown values rejected); `force_pallas`
+    (kept for tests and benchmarks) means "run the kernel even off-TPU",
+    i.e. compiled on TPU, interpreted elsewhere; with neither, `auto()`
+    supplies the package's platform/shape policy.
+    """
+    if backend is None:
+        if force_pallas:
+            return "pallas" if jax.default_backend() == "tpu" else "interpret"
+        return auto()
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    return backend

@@ -1,23 +1,45 @@
-"""Public wrapper: padding to block multiples + backend dispatch."""
+"""Public wrapper for blockwise attention: backend dispatch + padding.
+
+Three backends, the same explicit policy as ``kernels/unipc_update/ops.py``
+(DESIGN.md §5):
+
+* ``"pallas"``    — the compiled Pallas kernel; the production path on TPU.
+* ``"interpret"`` — the same kernel under the Pallas interpreter; correct on
+  any platform, slow; what CI exercises so the real kernel code runs on CPU.
+* ``"jnp"``       — the pure-jnp head-major oracle (`ref.attention`); the
+  right default off-TPU. (Head-major (B, H, S, D) batched matmuls make the
+  attention-dominated DiT eval ~1.5x faster on CPU than the model's
+  seq-major einsum at dit-i256 serving shapes — BENCH_model.json, DESIGN.md
+  §11 — so the fallback is a real path, not just a test oracle.)
+
+`select_backend` encodes the policy; `attention` applies it. Callers can pin
+a backend explicitly (tests, CI, the `cfg.attention_backend` model knob) or
+let the dispatcher choose by platform. Sequence lengths are padded up to
+block multiples for the kernel backends: key padding is masked inside the
+kernel via kv_len, query padding is sliced off.
+"""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from . import ref
+from ..dispatch import (BACKENDS, resolve_backend,  # noqa: F401 (re-export)
+                        platform_select as select_backend)
 from .kernel import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention
 
 
-def attention(q, k, v, *, causal=True, window=None, force_pallas=False,
-              blk_q=DEFAULT_BLOCK_Q, blk_k=DEFAULT_BLOCK_K):
+def attention(q, k, v, *, causal=True, window=None, backend=None,
+              force_pallas=False, blk_q=DEFAULT_BLOCK_Q, blk_k=DEFAULT_BLOCK_K):
     """(B, Hq, Sq, D) x (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
 
-    Pallas on TPU (or interpret when forced); jnp oracle elsewhere. Pads
-    sequence lengths up to block multiples; key padding is masked inside the
-    kernel via kv_len, query padding is sliced off."""
-    on_tpu = jax.default_backend() == "tpu"
-    if not (on_tpu or force_pallas):
+    `backend` pins one of BACKENDS; `force_pallas` (kept for tests and
+    benchmarks) means "run the kernel even off-TPU", i.e. compiled on TPU,
+    interpreted elsewhere. With neither, `select_backend` chooses by
+    platform.
+    """
+    backend = resolve_backend(backend, force_pallas, select_backend)
+    if backend == "jnp":
         return ref.attention(q, k, v, causal=causal, window=window)
     B, Hq, Sq, D = q.shape
     Skv = k.shape[2]
@@ -29,6 +51,6 @@ def attention(q, k, v, *, causal=True, window=None, force_pallas=False,
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
     out = flash_attention(q, k, v, causal=causal, window=window,
-                          blk_q=blk_q, blk_k=blk_k, interpret=not on_tpu,
-                          kv_len=Skv)
+                          blk_q=blk_q, blk_k=blk_k,
+                          interpret=backend == "interpret", kv_len=Skv)
     return out[:, :, :Sq]

@@ -21,9 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from ..dispatch import BACKENDS, resolve_backend  # noqa: F401 (re-export)
 from .kernel import TILE, fused_combine_batched, fused_combine_flat  # noqa: F401
-
-BACKENDS = ("pallas", "interpret", "jnp")
 
 
 def _jnp_combine(terms, weights):
@@ -75,16 +74,13 @@ def weighted_combine(terms, weights, backend: str | None = None,
         raise ValueError(
             f"per-slot weights (K, B)={weights.shape} need terms shaped "
             f"(K, B, ...); got terms {terms.shape}")
-    if backend is None:
-        if force_pallas:
-            backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
-        else:
-            n = 1
-            for s in (shape[1:] if len(shape) >= 2 else shape):
-                n *= s
-            backend = select_backend(n)
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    def auto():
+        n = 1
+        for s in (shape[1:] if len(shape) >= 2 else shape):
+            n *= s
+        return select_backend(n)
+
+    backend = resolve_backend(backend, force_pallas, auto)
     if backend == "jnp":
         return _jnp_combine(terms, weights)
     interpret = backend == "interpret"

@@ -33,8 +33,8 @@ NULL_CLASS_ID = 1000  # init_dit allocates num_classes + 1 embeddings; the
 
 
 def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
-                 want_cfg: bool = False,
-                 per_request_cond: bool = False) -> SamplerEngine:
+                 want_cfg: bool = False, per_request_cond: bool = False,
+                 eval_dtype: str = "float32") -> SamplerEngine:
     """Wire the arch's eps-network into a SamplerEngine: the cond branch,
     and — for dit-family conditional sampling — the stacked 2B cond+uncond
     branch that fused CFG serves from, plus the uncond branch for the
@@ -44,7 +44,21 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
     array at build time (slot-positional — fine for a uniform batch, wrong
     under continuous batching where a request's slot depends on arrival
     order), the eps branches take `class_ids` as a per-call (B,) keyword
-    argument, which the serving scheduler scatters per request."""
+    argument, which the serving scheduler scatters per request.
+
+    eval_dtype="bfloat16" is the fast serving eval (DESIGN.md §11): the
+    network's params-at-use and activations run in bf16 (params are pre-cast
+    once, so serving HBM reads are halved; the conditioning MLP keeps its
+    fp32 compute). The engine side of the boundary — solver state, combine
+    weights, eps↔x0 — stays fp32 via the matching `EngineSpec.eval_dtype`."""
+    import dataclasses
+
+    if eval_dtype not in ("float32", "bfloat16"):
+        raise ValueError(f"eval_dtype must be 'float32' or 'bfloat16', "
+                         f"got {eval_dtype!r}")
+    if eval_dtype == "bfloat16":
+        cfg = dataclasses.replace(cfg, dtype=eval_dtype)
+        params = api.cast_params_for_eval(params, eval_dtype)
     net = api.eps_network(cfg)
 
     def eps_with(extra):
@@ -57,7 +71,8 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
         if want_cfg:
             raise ValueError("classifier-free guidance needs the dit family "
                              "(class-conditional eps-net)")
-        return SamplerEngine(schedule, eps=eps_with({}))
+        return SamplerEngine(schedule, eps=eps_with({}),
+                             eval_dtype=eval_dtype)
     null = jnp.full((batch,), NULL_CLASS_ID, jnp.int32)
     if per_request_cond:
         def eps_cond(x, t, class_ids):
@@ -73,13 +88,15 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
 
         return SamplerEngine(schedule, eps=jax.jit(eps_cond),
                              eps_stacked=jax.jit(eps_stacked),
-                             eps_uncond=eps_with({"class_ids": null}))
+                             eps_uncond=eps_with({"class_ids": null}),
+                             eval_dtype=eval_dtype)
     ids = jnp.asarray(class_ids(batch, seed=seed))
     return SamplerEngine(
         schedule,
         eps=eps_with({"class_ids": ids}),
         eps_stacked=eps_with({"class_ids": jnp.concatenate([ids, null])}),
         eps_uncond=eps_with({"class_ids": null}),
+        eval_dtype=eval_dtype,
     )
 
 
@@ -105,7 +122,8 @@ def latent_shape(cfg, batch):
 def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
            variant="bh2", prediction=None, batch=4, seed=0, params=None,
            loop=False, fused_update=True, cfg_scale=0.0,
-           cfg_schedule="constant", thresholding=False, plan=None):
+           cfg_schedule="constant", thresholding=False, plan=None,
+           eval_dtype="float32"):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -128,12 +146,15 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
         solver, nfe, order = "unipc", plan.nfe, max(plan.orders)
         prediction = plan.prediction
         plan_tab = plan.compile(schedule)
+    if loop and eval_dtype != "float32":
+        raise ValueError("the python-loop reference is fp32-only; "
+                         "eval_dtype rides the engine paths")
     engine = build_engine(cfg, params, schedule, batch, seed,
-                          want_cfg=cfg_scale != 0.0)
+                          want_cfg=cfg_scale != 0.0, eval_dtype=eval_dtype)
     spec = EngineSpec(solver=solver, nfe=nfe, order=order, variant=variant,
                       prediction=prediction, cfg_scale=cfg_scale,
                       cfg_schedule=cfg_schedule, thresholding=thresholding,
-                      fused_update=fused_update)
+                      fused_update=fused_update, eval_dtype=eval_dtype)
     x_T = jax.random.normal(rng, latent_shape(cfg, batch), jnp.float32)
 
     t0 = time.time()
@@ -184,6 +205,11 @@ def main():
     ap.add_argument("--thresholding", action="store_true",
                     help="Imagen-style dynamic thresholding of the x0 "
                          "prediction (data-prediction solvers)")
+    ap.add_argument("--eval-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="eps-network eval precision (default fp32); "
+                         "bfloat16 is the fast serving eval — solver state "
+                         "and combine weights stay fp32 (DESIGN.md §11)")
     ap.add_argument("--plan", default=None,
                     help="path to a tuned SolverPlan JSON (repro.launch.tune)"
                          "; overrides --solver/--order/--nfe with the plan's "
@@ -198,6 +224,9 @@ def main():
     if args.plan and args.loop:
         ap.error("--plan runs the scan-compiled table; --loop has no "
                  "python-loop reference for searched plans")
+    if args.loop and args.eval_dtype != "float32":
+        ap.error("--eval-dtype rides the engine paths; the python-loop "
+                 "reference is fp32-only")
     params = None
     if args.ckpt:
         tree, _ = ckpt.restore(args.ckpt)
@@ -207,7 +236,8 @@ def main():
            prediction=args.prediction, batch=args.batch, params=params,
            loop=args.loop, fused_update=not args.no_fused_update,
            cfg_scale=args.cfg_scale, cfg_schedule=args.cfg_schedule,
-           thresholding=args.thresholding, plan=args.plan)
+           thresholding=args.thresholding, plan=args.plan,
+           eval_dtype=args.eval_dtype)
 
 
 if __name__ == "__main__":

@@ -84,7 +84,7 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                     solver="unipc", fused_update=True, cfg_scale=0.0,
                     cfg_schedule="constant", thresholding=False, seed=0,
                     arrival_rate=None, trace=None, requests=None,
-                    plan_bank=None, tiers=None):
+                    plan_bank=None, tiers=None, eval_dtype="float32"):
     """Continuous-batching diffusion serving through the engine's per-slot
     step program (`SamplerEngine.build_step` + `serving.SlotScheduler`):
     `batch` slots, requests admitted the tick a slot frees, per-request
@@ -120,12 +120,15 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     rng = jax.random.PRNGKey(seed)
     params = api.init_params(cfg, rng)
     engine = build_engine(cfg, params, VPLinear(), batch, seed,
-                          want_cfg=cfg_scale != 0.0, per_request_cond=True)
+                          want_cfg=cfg_scale != 0.0, per_request_cond=True,
+                          eval_dtype=eval_dtype)
     spec = EngineSpec(solver=solver, nfe=nfe, order=order,
                       cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
-                      thresholding=thresholding, fused_update=fused_update)
+                      thresholding=thresholding, fused_update=fused_update,
+                      eval_dtype=eval_dtype)
     common = dict(cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
-                  thresholding=thresholding, fused_update=fused_update)
+                  thresholding=thresholding, fused_update=fused_update,
+                  eval_dtype=eval_dtype)
     tier_names = None
     if plan_bank is not None:
         from ..tuning import load_bank
@@ -177,7 +180,7 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     mode = (f"bank[{','.join(tier_names)}]" if tier_names
             else f"{solver} nfe={nfe} order={order}")
     print(f"diffusion slots={batch} {mode} "
-          f"cfg={cfg_scale} fused_update={fused_update}: "
+          f"cfg={cfg_scale} fused_update={fused_update} eval={eval_dtype}: "
           f"compile {compile_s:.2f}s (AOT), tick {m.tick_s*1e3:.1f} ms, "
           f"{m.completed}/{m.requests} requests, "
           f"throughput {m.throughput_rps:.2f} req/s, "
@@ -224,6 +227,12 @@ def main():
     ap.add_argument("--thresholding", action="store_true",
                     help="diffusion serving: dynamic thresholding (off by "
                          "default)")
+    ap.add_argument("--eval-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="diffusion serving: eps-network eval precision "
+                         "(default fp32); bfloat16 halves the network's "
+                         "serving HBM traffic — solver state and combine "
+                         "weights stay fp32 (DESIGN.md §11)")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="diffusion serving: Poisson request arrivals, in "
                          "requests per tick (one tick = one batched eval); "
@@ -257,6 +266,9 @@ def main():
     if family != "dit" and (args.plan_bank or args.tiers):
         ap.error(f"--plan-bank/--tiers serve diffusion quality tiers; "
                  f"--arch {args.arch} is family '{family}'")
+    if family != "dit" and args.eval_dtype != "float32":
+        ap.error(f"--eval-dtype configures the diffusion engine's network "
+                 f"eval; --arch {args.arch} is family '{family}'")
     if ((args.plan_bank or args.tiers)
             and (args.solver is not None or args.nfe is not None
                  or args.order is not None)):
@@ -278,7 +290,8 @@ def main():
                         thresholding=args.thresholding,
                         arrival_rate=args.arrival_rate, trace=args.trace,
                         requests=args.requests, plan_bank=args.plan_bank,
-                        tiers=(args.tiers.split(",") if args.tiers else None))
+                        tiers=(args.tiers.split(",") if args.tiers else None),
+                        eval_dtype=args.eval_dtype)
         return
     serve(args.arch, reduced=not args.full, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,

@@ -112,6 +112,20 @@ def ar_loss(cfg: ModelConfig) -> Callable:
     return loss
 
 
+def cast_params_for_eval(params, eval_dtype: str):
+    """Pre-cast every float param leaf to the serving eval dtype (DESIGN.md
+    §11.3) — once, so reduced-precision serving halves the params' HBM reads
+    instead of casting at use. Non-float leaves (e.g. int tables) pass
+    through. The single definition serves both `launch.sample.build_engine`
+    and the model benchmarks, so the benchmarked bf16 mode is exactly the
+    shipped one."""
+    dt = jnp.dtype(eval_dtype)
+    return jax.tree.map(
+        lambda a: (a.astype(dt)
+                   if jnp.issubdtype(a.dtype, jnp.floating) else a),
+        params)
+
+
 def eps_network(cfg: ModelConfig) -> Callable:
     """(params, x_t (B,S,L), t, batch) -> eps-hat — what UniPC samples from."""
     if cfg.family == "dit":

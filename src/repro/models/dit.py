@@ -13,8 +13,9 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ..kernels.adaln_modulate import ops as adaln_ops
 from ..parallel.sharding import shard
-from .layers import NORMS, attention_apply, attention_init, dense_init, layernorm
+from .layers import attention_apply, attention_init, dense_init
 
 
 def timestep_embedding(t, dim: int, max_period=10000.0):
@@ -73,21 +74,26 @@ def dit_apply(params, cfg, x_t, t, class_ids=None):
         c = c + params["class_embed"].astype(jnp.float32)[class_ids]
     c = jax.nn.silu(c).astype(x.dtype)
 
+    # fused adaLN (DESIGN.md §11): LN + scale/shift in one pass, gated
+    # residual re-entry in one pass — the Pallas kernels on TPU, the fp32
+    # jnp oracle elsewhere (identical math, XLA-fused)
+    adaln = getattr(cfg, "adaln_backend", None)
+
     def body(h, bp):
         mod = (jnp.einsum("bd,de->be", c, bp["ada"].astype(h.dtype))
                + bp["ada_b"].astype(h.dtype))
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
-        hn = layernorm({}, h) * (1 + sc1[:, None]) + sh1[:, None]
+        hn = adaln_ops.modulate(h, sh1, sc1, backend=adaln)
         a = attention_apply(bp["attn"], hn, cfg, causal=False, rope=False)
-        h = h + g1[:, None] * a
-        hn = layernorm({}, h) * (1 + sc2[:, None]) + sh2[:, None]
+        h = adaln_ops.gate_residual(h, g1, a, backend=adaln)
+        hn = adaln_ops.modulate(h, sh2, sc2, backend=adaln)
         y = jnp.einsum("btd,df->btf", hn, bp["w1"].astype(h.dtype))
         y = jnp.einsum("btf,fd->btd", jax.nn.gelu(y), bp["w2"].astype(h.dtype))
-        return h + g2[:, None] * y, None
+        return adaln_ops.gate_residual(h, g2, y, backend=adaln), None
 
     x, _ = jax.lax.scan(body, x, params["blocks"])
     mod = (jnp.einsum("bd,de->be", c, params["final_ada"].astype(x.dtype))
            + params["final_ada_b"].astype(x.dtype))
     sh, sc = jnp.split(mod, 2, axis=-1)
-    x = layernorm({}, x) * (1 + sc[:, None]) + sh[:, None]
+    x = adaln_ops.modulate(x, sh, sc, backend=adaln)
     return jnp.einsum("btd,dl->btl", x, params["out_proj"].astype(x.dtype))

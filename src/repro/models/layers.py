@@ -195,11 +195,18 @@ def chunked_sdpa(q, k, v, *, causal, sliding_window=None, chunk=1024):
     the logits footprint is O(chunk * Skv) instead of O(Sq * Skv). Exact (same
     softmax), blockwise — the §Perf memory-bound hillclimb for long prefill
     (EXPERIMENTS.md H3). The Pallas kernel (kernels/flash_attention) is the
-    TPU-native version; this path is what the XLA dry-run lowers."""
+    TPU-native version; this path is what the XLA dry-run lowers.
+
+    Arbitrary Sq: a non-multiple tail is handled by padding the queries up to
+    the chunk boundary — query rows are independent, the padded rows carry
+    real past-the-end positions (a causal pad row attends to everything, its
+    softmax stays finite) and their outputs are sliced off."""
     B, Sq, Hq, D = q.shape
     Skv = k.shape[1]
-    nq = Sq // chunk
-    assert Sq % chunk == 0, (Sq, chunk)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = (Sq + pad) // chunk
     qc = jnp.moveaxis(q.reshape(B, nq, chunk, Hq, D), 1, 0)
     kp = jnp.arange(Skv)
 
@@ -211,7 +218,7 @@ def chunked_sdpa(q, k, v, *, causal, sliding_window=None, chunk=1024):
         return None, out
 
     _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nq)))
-    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, D)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq + pad, Hq, D)[:, :Sq]
 
 
 def attention_apply(params, x, cfg, *, kv_src=None, causal=True, positions=None,
@@ -230,11 +237,23 @@ def attention_apply(params, x, cfg, *, kv_src=None, causal=True, positions=None,
     q = shard(q, "batch", "seq", "heads", None)
     k = shard(k, "batch", "seq", "kv_heads", None)
     chunk = getattr(cfg, "attention_chunk", 0)
-    if chunk and q.shape[1] > chunk and q.shape[1] % chunk == 0:
+    if chunk and q.shape[1] > chunk:
+        # the XLA long-prefill hillclimb; remainder chunks handled by padding
         out = chunked_sdpa(q, k, v, causal=causal,
                            sliding_window=sliding_window, chunk=chunk)
     else:
-        out = sdpa(q, k, v, causal=causal, sliding_window=sliding_window)
+        # the fast-eval path (DESIGN.md §11): kernels/flash_attention with
+        # the explicit pallas|interpret|jnp policy — the Pallas kernel on
+        # TPU, the head-major jnp oracle elsewhere (measured faster on CPU
+        # than the seq-major sdpa einsum at DiT serving shapes). sdpa stays
+        # the decode-path / positions-aware reference.
+        from ..kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=sliding_window,
+            backend=getattr(cfg, "attention_backend", None),
+        ).transpose(0, 2, 1, 3)
     B, S = x.shape[:2]
     out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
     return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
