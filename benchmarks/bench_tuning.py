@@ -9,6 +9,14 @@ not change the serving cost — same rows, same fused scan).
 The derived CSV field carries the discrepancy pair; the acceptance gate
 (tuned <= baseline, strictly better at NFE <= 8) is asserted here so a
 regressing tuner fails the bench run loudly.
+
+A second section benches the joint solver + feature-reuse search
+(DESIGN.md §12) on a cache-wired engine at the same NFE budgets: shallow
+steps recompute only the first `cache_block` DiT blocks and reuse the cached
+deep features, so the tuned plan's evals-per-latent drops strictly below the
+NFE floor while the discrepancy stays within `CACHE_SLACK` of the no-cache
+tuned anchor — both asserted here and re-checked from the committed artifact
+by `benchmarks/guard.py`.
 """
 
 from __future__ import annotations
@@ -26,6 +34,11 @@ ARCH = "dit-cifar"
 NFES = (5, 6, 8, 10)
 BUDGET = 40
 TRAIN_STEPS = 100
+# joint solver + cache-schedule runs: the reduced dit-cifar has 2 blocks, so
+# boundary 1 halves a shallow step's eval cost
+CACHE_NFES = (5, 8)
+CACHE_BLOCK = 1
+CACHE_SLACK = 1.1
 
 
 def bench_tuning(out_path: str = "BENCH_tuning.json"):
@@ -74,9 +87,44 @@ def bench_tuning(out_path: str = "BENCH_tuning.json"):
             assert report["tuned"] < report["baseline"], (
                 f"tuned plan failed to strictly beat the UniPC-2 baseline "
                 f"at nfe={nfe}")
+    # -- cached runs: joint solver + feature-reuse schedules ----------------
+    # same seed/train_steps -> bit-identical backbone params, so cached
+    # discrepancies are comparable with the uncached rows above
+    cengine, cx_T = _setup(ARCH, reduced=True, batch=4, seed=0,
+                           train_steps=TRAIN_STEPS, cache_block=CACHE_BLOCK)
+    cx_ref = reference_trajectory(
+        cengine, EngineSpec(solver="unipc", cache_block=CACHE_BLOCK), cx_T,
+        ref_nfe=48)
+    cached_rows = []
+    for nfe in CACHE_NFES:
+        plan, rep = tune(ARCH, nfe=nfe, budget=BUDGET, ref_nfe=48,
+                         engine=cengine, x_T=cx_T, x_ref=cx_ref,
+                         cache_block=CACHE_BLOCK, cache_slack=CACHE_SLACK)
+        row = dict(arch=ARCH, nfe=nfe, cache_block=CACHE_BLOCK,
+                   cache_slack=CACHE_SLACK, nfe_evals=rep["nfe_evals"],
+                   evals_per_latent=rep["evals_per_latent"],
+                   cached_discrepancy=rep["tuned"],
+                   uncached_discrepancy=rep["uncached_tuned"],
+                   cached_ratio=rep["cached_ratio"],
+                   search_wall_s=rep["search_wall_s"], evals=rep["evals"],
+                   shallow_steps=sum(1 for d in (plan.cache_depth or [])
+                                     if d))
+        cached_rows.append(row)
+        emit(f"tuning-cached/{ARCH}/nfe{nfe}", rep["search_wall_s"] * 1e6,
+             f"evals_per_latent={row['evals_per_latent']:.2f};"
+             f"nfe_evals={row['nfe_evals']};"
+             f"cached_ratio={row['cached_ratio']:.3f};"
+             f"shallow={row['shallow_steps']}")
+        assert rep["cached_ratio"] <= CACHE_SLACK, (
+            f"cached plan at nfe={nfe} overspent the discrepancy slack: "
+            f"ratio {rep['cached_ratio']:.3f} > {CACHE_SLACK}")
+    assert any(r["evals_per_latent"] < r["nfe_evals"] for r in cached_rows), (
+        f"no cached plan landed evals-per-latent below its NFE floor "
+        f"(acceptance criterion): {cached_rows}")
     with open(out_path, "w") as f:
         json.dump({"arch": ARCH, "budget": BUDGET,
-                   "train_steps": TRAIN_STEPS, "runs": rows}, f, indent=1)
+                   "train_steps": TRAIN_STEPS, "runs": rows,
+                   "cached_runs": cached_rows}, f, indent=1)
     return rows
 
 

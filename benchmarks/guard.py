@@ -99,6 +99,40 @@ def check_tuning(path: str = "BENCH_tuning.json") -> int:
             fail(f"tuned plan must strictly beat the UniPC-2 baseline at "
                  f"nfe={nfe} (acceptance criterion)")
         checked += 1
+    # feature-reuse acceptance (DESIGN.md §12): at least one jointly tuned
+    # plan must spend strictly fewer full-eval units than its NFE floor,
+    # and every cached run must hold discrepancy within its slack of the
+    # no-cache tuned anchor
+    cached = data.get("cached_runs", [])
+    if not cached:
+        fail(f"{path} carries no cached_runs — the feature-reuse acceptance "
+             f"trajectory must stay committed (run `python -m benchmarks."
+             f"run --only tuning`)")
+    below_floor = 0
+    for run in cached:
+        nfe = run.get("nfe")
+        nfe_evals, epl, ratio = (run.get("nfe_evals"),
+                                 run.get("evals_per_latent"),
+                                 run.get("cached_ratio"))
+        slack = run.get("cache_slack", 1.1)
+        if not all(isinstance(v, (int, float))
+                   for v in (nfe, nfe_evals, epl, ratio)):
+            fail(f"{path} cached run {run!r}: nfe/nfe_evals/"
+                 f"evals_per_latent/cached_ratio missing — artifact schema "
+                 f"drift?")
+        if ratio > slack:
+            fail(f"cached plan at nfe={nfe} overspent the discrepancy "
+                 f"slack: ratio {ratio:.3f} > {slack}")
+        below = epl < nfe_evals
+        below_floor += below
+        print(f"tuning cached nfe={nfe}: {epl:.2f} evals/latent vs "
+              f"{nfe_evals} uncached (ratio {ratio:.3f} <= {slack}) "
+              f"{'ok' if below else '(at floor)'}")
+        checked += 1
+    if not below_floor:
+        fail(f"no cached run holds evals-per-latent strictly below its NFE "
+             f"floor (acceptance criterion) — the feature-reuse schedule "
+             f"stopped paying for itself")
     return checked
 
 

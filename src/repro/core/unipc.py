@@ -166,6 +166,7 @@ def unipc_step_fn(
     *,
     fused_update: bool = True,
     dtype=jnp.float32,
+    cached: bool = False,
 ):
     """The per-row step function: (step, n_rows) over the augmented table.
 
@@ -194,7 +195,8 @@ def unipc_step_fn(
     n_rows = len(rows_np["t"])
     tab = {k: jnp.asarray(v, dtype) for k, v in rows_np.items()}
     step = step_fn_over_rows(model_fn, tab, sign=sched.sign,
-                             fused_update=fused_update, dtype=dtype)
+                             fused_update=fused_update, dtype=dtype,
+                             cached=cached)
     return step, n_rows
 
 
@@ -205,6 +207,7 @@ def step_fn_over_rows(
     sign: float,
     fused_update: bool = True,
     dtype=jnp.float32,
+    cached: bool = False,
 ):
     """Build the per-row step over an explicit row table.
 
@@ -215,6 +218,13 @@ def step_fn_over_rows(
     program with new weights instead of recompiling per candidate. `sign` is
     the table's prediction sign (static). Semantics are exactly
     `unipc_step_fn`'s — that function is now this one over the concrete rows.
+
+    `cached=True` switches to the feature-reuse contract (DESIGN.md §12):
+    the carry grows a third element C (the per-slot deep-feature cache) and
+    `model_fn(x, t, cache=C, **extras) -> (pred, C')`. The table's
+    `mc_cache_reuse` column (gathered per row like every model column)
+    reaches the model as the `cache_reuse` kwarg, so *which* rows reuse the
+    cache is data while the cache boundary stays static in the model.
     """
     K = tab["w_pred"].shape[-1]
     col_keys = sorted(k for k in tab if k.startswith("mc_"))
@@ -233,7 +243,10 @@ def step_fn_over_rows(
             return jnp.tensordot(weights, terms, axes=1)
 
     def step(carry, idx, model_kwargs=None):
-        x, E = carry
+        if cached:
+            x, E, C = carry
+        else:
+            x, E = carry
         idx = jnp.clip(jnp.asarray(idx), 0, n_rows - 1)
         per_slot = idx.ndim == 1
         row = {k: v[idx] for k, v in tab.items()}
@@ -256,7 +269,10 @@ def step_fn_over_rows(
         terms = jnp.concatenate([x[None], m0[None], diffs], axis=0)
         x_pred = combine(terms, wstack(row["base_x"], row["base_m0"],
                                        row["w_pred"]))
-        e_new = model_fn(x_pred, row["t"], **extras)
+        if cached:
+            e_new, C = model_fn(x_pred, row["t"], cache=C, **extras)
+        else:
+            e_new = model_fn(x_pred, row["t"], **extras)
         # corrector (re-uses e_new; no extra NFE)
         d_new = e_new - m0
         terms_c = jnp.concatenate([terms, d_new[None]], axis=0)
@@ -266,6 +282,8 @@ def step_fn_over_rows(
                  if per_slot else row["use_c"])
         x_next = x_pred + use_c * (x_corr - x_pred)
         E_next = jnp.concatenate([e_new[None], E[:-1]], axis=0)
+        if cached:
+            return (x_next, E_next, C)
         return (x_next, E_next)
 
     return step
@@ -278,6 +296,7 @@ def unipc_sample_scan(
     *,
     fused_update: bool = True,
     dtype=jnp.float32,
+    cache0=None,
 ):
     """Multistep UniPC as a single lax.scan over the step function: rows
     0..M of the augmented table with a uniform index (row 0 is the init eval
@@ -300,15 +319,23 @@ def unipc_sample_scan(
     DPM-Solver++, PLMS, DEIS, expanded-grid singlestep) runs through this one
     function. `sched.model_cols` entries ((M+1,) per-eval arrays, e.g. a
     guidance-scale schedule) are passed to `model_fn` as keyword arguments.
+
+    `cache0` opts into the feature-reuse contract (DESIGN.md §12): pass the
+    zeroed (B, *cache_shape) deep-feature cache and a cached `model_fn`
+    ((x, t, cache=..., **cols) -> (pred, cache)); the cache rides the scan
+    carry alongside (x, E). Zero-init is safe because the table's init row
+    is always a full eval.
     """
+    cached = cache0 is not None
     step, n_rows = unipc_step_fn(model_fn, sched, fused_update=fused_update,
-                                 dtype=dtype)
+                                 dtype=dtype, cached=cached)
     K = sched.w_pred.shape[1]
     x0 = x_T.astype(dtype)
     E0 = jnp.zeros((K + 1,) + x_T.shape, dtype)
-    (x, _), _ = jax.lax.scan(lambda c, j: (step(c, j), None), (x0, E0),
-                             jnp.arange(n_rows))
-    return x
+    carry0 = (x0, E0, cache0) if cached else (x0, E0)
+    carry, _ = jax.lax.scan(lambda c, j: (step(c, j), None), carry0,
+                            jnp.arange(n_rows))
+    return carry[0]
 
 
 def sample_step_fn(sched: UniPCSchedule, fused_update: bool = True):

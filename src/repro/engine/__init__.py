@@ -8,10 +8,10 @@ from .specs import (SOLVERS, EngineSpec, SolverDef, default_tier_specs,
                     solver_def)
 from .compiler import (apply_model_cols, build_loop, compile_table,
                        step_guidance_profile)
-from .engine import SamplerEngine, StepProgram
+from .engine import CacheSpec, SamplerEngine, StepProgram
 
 __all__ = [
     "SOLVERS", "EngineSpec", "SolverDef", "solver_def", "default_tier_specs",
-    "SamplerEngine", "StepProgram", "compile_table", "build_loop",
-    "step_guidance_profile", "apply_model_cols",
+    "SamplerEngine", "StepProgram", "CacheSpec", "compile_table",
+    "build_loop", "step_guidance_profile", "apply_model_cols",
 ]

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.coeffs import SolverTable, stack_step_rows
+from ..core.coeffs import SolverTable, eval_cost_rows, stack_step_rows
 from ..core.unipc import step_fn_over_rows, unipc_sample_scan
 from ..diffusion.guidance import cfg_model, cfg_model_fused, dynamic_threshold
 from ..diffusion.process import eps_to_x0
@@ -47,20 +47,44 @@ from .compiler import (apply_model_cols, build_loop, compile_table,
 from .specs import EngineSpec, SOLVERS
 
 
+@dataclass(frozen=True)
+class CacheSpec:
+    """Shape contract for the feature-reuse cache (DESIGN.md §12).
+
+    `shape` is the per-sample cache layout ((patch_tokens, d_model) for the
+    DiT's deep-feature delta), `block` the static boundary the wired cached
+    eps-net was built with (first `block` of `n_blocks` blocks recompute on
+    shallow evals). The engine validates every spec's `cache_block` against
+    `block` the same way `eval_dtype` is handshaken — the net-side closure
+    and the engine-side state cannot silently disagree.
+    """
+
+    shape: Tuple[int, ...]
+    block: int
+    n_blocks: int
+    dtype: str = "float32"
+
+    def zeros(self, slots: int):
+        return jnp.zeros((slots,) + tuple(self.shape), jnp.dtype(self.dtype))
+
+
 @dataclass
 class StepProgram:
     """A compiled per-slot step program — what the serving scheduler drives.
 
     step(state, idx[, g]) -> state advances every slot by one table row:
     `state = (x, E)` with x (B, *sample) and E the (K+1, B, *sample) eval
-    ring, `idx` (B,) int32 the per-slot row index (0 = init row; idle slots
-    park there), and `g` (B,) float32 the per-slot guidance scale (only for
-    cfg-enabled programs). Slot batches are sharded over the data axis via
-    the active `parallel.sharding` rules (SERVE_RULES on the mesh; a no-op
-    single-device), so the same tick loop runs everywhere. One batched model
-    eval per call — a request admitted at tick tau and stepped through rows
-    0..n_rows-1 reproduces the uniform `build()` scan for its own
-    (solver, order, nfe, seed, cfg-scale) exactly.
+    ring — or `(x, E, C)` for feature-reuse programs, C the (B, *cache)
+    deep-feature cache that must live (and be donated) with the rest of the
+    slot state (DESIGN.md §12) — `idx` (B,) int32 the per-slot row index
+    (0 = init row; idle slots park there), and `g` (B,) float32 the per-slot
+    guidance scale (only for cfg-enabled programs). Slot batches are sharded
+    over the data axis via the active `parallel.sharding` rules (SERVE_RULES
+    on the mesh; a no-op single-device), so the same tick loop runs
+    everywhere. One batched model eval per call — a request admitted at tick
+    tau and stepped through rows 0..n_rows-1 reproduces the uniform
+    `build()` scan for its own (solver, order, nfe, seed, cfg-scale)
+    exactly.
     """
 
     step: Callable
@@ -72,6 +96,11 @@ class StepProgram:
     # plan banks (`SamplerEngine.build_bank`): tier name -> (row_offset,
     # n_rows) span in the stacked table. None for single-plan programs.
     tiers: Optional[Dict[str, Tuple[int, int]]] = None
+    # feature reuse: the cache contract (None for uncached programs) and the
+    # per-row eval cost (n_rows,) in fractions of a full denoiser eval —
+    # 1.0 everywhere without caching, cache_block/n_blocks on reuse rows.
+    cache: Optional[CacheSpec] = None
+    row_cost: Optional[np.ndarray] = None
 
     def resolve_tier(self, tier: Optional[str]) -> Tuple[int, int]:
         """(row_offset, rows_to_run) for a request's tier tag. Single-plan
@@ -93,10 +122,25 @@ class StepProgram:
 
     def init_state(self, slots: int, sample_shape: Tuple[int, ...],
                    dtype=jnp.float32):
-        """Zeroed slot state: every slot idle on the init row."""
+        """Zeroed slot state: every slot idle on the init row. Cached
+        programs carry the feature cache as a third state array."""
         shape = tuple(sample_shape)
-        return (jnp.zeros((slots,) + shape, dtype),
-                jnp.zeros((self.ring, slots) + shape, dtype))
+        state = (jnp.zeros((slots,) + shape, dtype),
+                 jnp.zeros((self.ring, slots) + shape, dtype))
+        if self.cache is not None:
+            state = state + (self.cache.zeros(slots),)
+        return state
+
+    def span_cost(self, offset: int, n: int) -> float:
+        """Total eval cost (full-eval units) of rows offset..offset+n-1 —
+        a request's evals-per-latent when (offset, n) is its tier span."""
+        if self.row_cost is None:
+            return float(n)
+        return float(np.sum(self.row_cost[offset:offset + n]))
+
+    def tier_eval_cost(self, tier: Optional[str]) -> float:
+        """Evals-per-latent for a tier tag (or the whole single-plan span)."""
+        return self.span_cost(*self.resolve_tier(tier))
 
     def init_g(self, slots: int):
         """Per-slot guidance scales, seeded with the spec's nominal scale."""
@@ -113,11 +157,18 @@ class SamplerEngine:
                  [cond; null] — required for cfg_scale != 0 (fused CFG).
     eps_uncond:  (x, t) -> eps-hat with null conditioning — only needed for
                  `build_loop`'s reference path (sequential, two evals/step).
+    eps_cached:  (x, t, cache, reuse) -> (eps-hat, cache') — the feature-reuse
+                 eval (DESIGN.md §12), wired by
+                 `launch.sample.build_engine(cache_block=...)` together with
+                 `cache_spec`; only dit-family models support it.
     eval_dtype:  the precision the wired eps-net actually computes in —
                  `launch.sample.build_engine(eval_dtype=...)` sets it when
                  it casts the net; `model_fn` rejects specs that disagree,
                  so the net-side cast and the engine-side fp32 boundary
                  (DESIGN.md §11.3) cannot silently desynchronize.
+    cache_spec:  the cache-state contract matching `eps_cached`; its `block`
+                 is handshaken against every spec's `cache_block` exactly
+                 like `eval_dtype`.
     """
 
     schedule: NoiseSchedule
@@ -125,6 +176,8 @@ class SamplerEngine:
     eps_stacked: Optional[Callable] = None
     eps_uncond: Optional[Callable] = None
     eval_dtype: str = "float32"
+    eps_cached: Optional[Callable] = None
+    cache_spec: Optional["CacheSpec"] = None
 
     # -- table ---------------------------------------------------------------
     def compile(self, spec: EngineSpec,
@@ -157,6 +210,14 @@ class SamplerEngine:
                 f"spec.eval_dtype={spec.eval_dtype!r} but this engine's "
                 f"eps-net was wired for {self.eval_dtype!r}; pass the same "
                 f"eval_dtype to build_engine and the EngineSpec")
+        if spec.cache_block:
+            return self._cached_model_fn(spec, tab)
+        if "cache_reuse" in (tab.model_cols or {}):
+            raise ValueError(
+                "this table carries a cache_reuse column (a cached plan) but "
+                "spec.cache_block=0; build the engine and spec with the "
+                "plan's cache_block so its shallow steps actually reuse the "
+                "feature cache instead of silently paying full evals")
         if spec.cfg_scale:
             if self.eps_stacked is None:
                 raise ValueError("cfg_scale != 0 needs eps_stacked (a 2B "
@@ -187,6 +248,47 @@ class SamplerEngine:
 
         return model
 
+    def _cached_model_fn(self, spec: EngineSpec, tab: SolverTable) -> Callable:
+        """The feature-reuse model wrapper: (x, t, cache=..., cache_reuse=...,
+        tq=..., **extra) -> (prediction, cache'). `cache_reuse` arrives from
+        the table's `cache_reuse` model column when the plan schedules
+        shallow steps; a plain registry table has no such column and every
+        eval runs full (reuse = 0) — the bit-identity parity path."""
+        if self.eps_cached is None or self.cache_spec is None:
+            raise ValueError(
+                f"spec.cache_block={spec.cache_block} but this engine has no "
+                f"cached eps-net; wire one with "
+                f"build_engine(cache_block={spec.cache_block})")
+        if spec.cache_block != self.cache_spec.block:
+            raise ValueError(
+                f"spec.cache_block={spec.cache_block} but the engine's "
+                f"cached eps-net was wired for cache boundary "
+                f"{self.cache_spec.block}; the boundary is baked into the "
+                f"compiled program — pass the same cache_block to "
+                f"build_engine and the EngineSpec")
+        eps_cached = self.eps_cached
+        schedule = self.schedule
+        if spec.eval_dtype != "float32":
+            eval_dtype = jnp.dtype(spec.eval_dtype)
+            inner = eps_cached
+
+            def eps_cached(x, t, cache, reuse, **extra):
+                e, c = inner(x.astype(eval_dtype), t, cache, reuse, **extra)
+                return e.astype(jnp.float32), c
+
+        def model(x, t, cache, cache_reuse=None, tq=None, **extra):
+            reuse = jnp.asarray(0.0 if cache_reuse is None else cache_reuse,
+                                jnp.float32)
+            e, cache = eps_cached(x, t, cache, reuse, **extra)
+            if tab.prediction == "noise":
+                return e, cache
+            x0 = eps_to_x0(schedule, x, t, e)
+            if tq is not None:
+                x0 = dynamic_threshold(x0, tq)
+            return x0, cache
+
+        return model
+
     # -- run functions -------------------------------------------------------
     def build(self, spec: EngineSpec, jit: bool = True,
               table: Optional[SolverTable] = None) -> Callable:
@@ -195,8 +297,16 @@ class SamplerEngine:
         spec = spec.resolve()
         tab = table if table is not None else self.compile(spec)
         model = self.model_fn(spec, tab)
-        run = lambda x_T: unipc_sample_scan(model, x_T, tab,
-                                            fused_update=spec.fused_update)
+        if spec.cache_block:
+            cache_spec = self.cache_spec
+
+            def run(x_T):
+                return unipc_sample_scan(
+                    model, x_T, tab, fused_update=spec.fused_update,
+                    cache0=cache_spec.zeros(x_T.shape[0]))
+        else:
+            run = lambda x_T: unipc_sample_scan(
+                model, x_T, tab, fused_update=spec.fused_update)
         return jax.jit(run) if jit else run
 
     def build_step(self, spec: EngineSpec, jit: bool = True,
@@ -255,6 +365,7 @@ class SamplerEngine:
         names = list(items)
         spec0, tab0 = items[names[0]]
         uses_cfg = bool(spec0.cfg_scale)
+        cached = bool(spec0.cache_block)
         for name, (s, t) in items.items():
             if bool(s.cfg_scale) != uses_cfg or (
                     uses_cfg and float(s.cfg_scale) != float(spec0.cfg_scale)):
@@ -267,6 +378,18 @@ class SamplerEngine:
             if s.eval_dtype != spec0.eval_dtype:
                 raise ValueError("bank tiers must agree on eval_dtype (one "
                                  "compiled program, one model wrapper)")
+            if s.cache_block != spec0.cache_block:
+                raise ValueError(
+                    f"bank tiers must agree on cache_block (the boundary is "
+                    f"static in the compiled eps-net); tier {name!r} has "
+                    f"cache_block={s.cache_block}, expected "
+                    f"{spec0.cache_block}")
+            if not cached and "cache_reuse" in (t.model_cols or {}):
+                raise ValueError(
+                    f"tier {name!r} carries a cached plan (cache_reuse "
+                    f"column) but the bank specs have cache_block=0; set "
+                    f"cache_block on every tier spec (and the engine) to "
+                    f"serve it")
         model = self.model_fn(spec0, tab0)
         profs, step_tabs = [], {}
         for name, (s, t) in items.items():
@@ -278,41 +401,61 @@ class SamplerEngine:
                 cols = {k: v for k, v in (t.model_cols or {}).items()
                         if k != "g"}
                 t = dc_replace(t, model_cols=cols)
+            if cached and "cache_reuse" not in (t.model_cols or {}):
+                # a bank may mix cached plans with plain tiers: a tier
+                # without a reuse schedule runs every eval full (all-zero
+                # column), keeping the stacked tables' column sets equal
+                cols = dict(t.model_cols or {})
+                cols["cache_reuse"] = np.zeros(len(t.timesteps))
+                t = dc_replace(t, model_cols=cols)
             step_tabs[name] = t
         rows_np, spans = stack_step_rows(step_tabs)
         n_rows = len(rows_np["t"])
         rows = {k: jnp.asarray(v, jnp.float32) for k, v in rows_np.items()}
         core_step = step_fn_over_rows(model, rows, sign=tab0.sign,
-                                      fused_update=spec0.fused_update)
+                                      fused_update=spec0.fused_update,
+                                      cached=cached)
         prof = (jnp.asarray(np.concatenate(profs), jnp.float32)
                 if uses_cfg else None)
+        row_cost = (eval_cost_rows(rows_np, cache_block=spec0.cache_block,
+                                   n_blocks=self.cache_spec.n_blocks)
+                    if cached else None)
 
-        def _shard_state(x, E):
+        def _shard_state(*state):
+            x, E = state[:2]
             x = shard(x, "batch", *([None] * (x.ndim - 1)))
             E = shard(E, None, "batch", *([None] * (E.ndim - 2)))
-            return x, E
+            if len(state) == 2:
+                return x, E
+            C = state[2]
+            return x, E, shard(C, "batch", *([None] * (C.ndim - 1)))
 
         def step(state, idx, g=None, extras=None):
-            x, E = _shard_state(*state)
+            state = _shard_state(*state)
             kw = dict(extras) if extras else {}
             if uses_cfg:
                 gs = (jnp.full(idx.shape, float(spec0.cfg_scale), jnp.float32)
                       if g is None else jnp.asarray(g, jnp.float32))
                 kw["g"] = gs * prof[jnp.clip(idx, 0, n_rows - 1)]
-            x, E = core_step((x, E), idx, model_kwargs=kw or None)
-            return _shard_state(x, E)
+            state = core_step(state, idx, model_kwargs=kw or None)
+            return _shard_state(*state)
 
         if jit:
             # donate the slot state (arg 0): the tick's (x, E) update writes
             # into the previous tick's buffers instead of fresh HBM — safe
             # because every caller replaces its state reference with the
-            # step's return value (bit-identity pinned in tests/test_serving)
+            # step's return value (bit-identity pinned in tests/test_serving).
+            # For cached programs the feature cache C rides in the same
+            # donated tuple: it is per-slot trajectory state exactly like the
+            # eval ring, so it must live (and be recycled) with it.
             step = (jax.jit(step, donate_argnums=(0,)) if donate
                     else jax.jit(step))
         return StepProgram(step=step, n_rows=n_rows,
                            table=tab0, spec=spec0, uses_cfg=uses_cfg,
                            ring=rows_np["w_pred"].shape[-1] + 1,
-                           tiers=dict(spans) if tiers else None)
+                           tiers=dict(spans) if tiers else None,
+                           cache=self.cache_spec if cached else None,
+                           row_cost=row_cost)
 
     def build_loop(self, spec: EngineSpec) -> Callable:
         """The python-loop GridSolver reference for the same spec — identical

@@ -43,6 +43,13 @@ class EngineSpec:
     threshold_percentile: float = 0.995
     # execution
     fused_update: bool = True
+    # feature reuse (DESIGN.md §12): static DiT cache boundary — shallow
+    # steps recompute only the first `cache_block` blocks and reuse the
+    # cached deep-feature delta. 0 = no caching. Which steps are shallow is
+    # per-step table data (a tuned plan's `cache_depth` column), not spec
+    # state; the engine must be wired with a matching cached eps-net
+    # (`build_engine(cache_block=...)`).
+    cache_block: int = 0
     # serving eval precision (DESIGN.md §11): the eps-network evaluates in
     # this dtype; solver state, combine weights, and the x0/eps conversion
     # stay fp32 regardless. "bfloat16" is the opt-in fast serving mode —
@@ -56,6 +63,15 @@ class EngineSpec:
         if out.eval_dtype not in ("float32", "bfloat16"):
             raise ValueError(f"eval_dtype must be 'float32' or 'bfloat16', "
                              f"got {out.eval_dtype!r}")
+        if out.cache_block < 0:
+            raise ValueError(f"cache_block must be >= 0, got "
+                             f"{out.cache_block}")
+        if out.cache_block and out.cfg_scale:
+            raise ValueError(
+                "feature reuse (cache_block > 0) serves unconditional "
+                "programs only: the fused-CFG eval stacks cond+uncond into "
+                "one 2B batch, which would need a 2B cache ring — tune and "
+                "serve cached plans with cfg_scale=0")
         if out.prediction is None:
             out = replace(out, prediction=sd.prediction)
         elif sd.fixed_prediction and out.prediction != sd.prediction:

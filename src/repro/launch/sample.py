@@ -34,7 +34,8 @@ NULL_CLASS_ID = 1000  # init_dit allocates num_classes + 1 embeddings; the
 
 def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
                  want_cfg: bool = False, per_request_cond: bool = False,
-                 eval_dtype: str = "float32") -> SamplerEngine:
+                 eval_dtype: str = "float32",
+                 cache_block: int = 0) -> SamplerEngine:
     """Wire the arch's eps-network into a SamplerEngine: the cond branch,
     and — for dit-family conditional sampling — the stacked 2B cond+uncond
     branch that fused CFG serves from, plus the uncond branch for the
@@ -50,12 +51,29 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
     network's params-at-use and activations run in bf16 (params are pre-cast
     once, so serving HBM reads are halved; the conditioning MLP keeps its
     fp32 compute). The engine side of the boundary — solver state, combine
-    weights, eps↔x0 — stays fp32 via the matching `EngineSpec.eval_dtype`."""
+    weights, eps↔x0 — stays fp32 via the matching `EngineSpec.eval_dtype`.
+
+    cache_block > 0 additionally wires the feature-reuse eval (DESIGN.md
+    §12, dit only): the engine gets `eps_cached` — the same network with a
+    deep-feature cache split at block `cache_block` — plus the matching
+    `CacheSpec`, and serves cached plans whose specs carry the same
+    `cache_block`. Incompatible with guidance (see `EngineSpec.resolve`)."""
     import dataclasses
 
     if eval_dtype not in ("float32", "bfloat16"):
         raise ValueError(f"eval_dtype must be 'float32' or 'bfloat16', "
                          f"got {eval_dtype!r}")
+    if cache_block:
+        if cfg.family != "dit":
+            raise ValueError(f"cache_block needs the dit family; "
+                             f"{cfg.arch_id!r} is family {cfg.family!r}")
+        if want_cfg:
+            raise ValueError("feature reuse serves unconditional programs "
+                             "only (EngineSpec.resolve rejects cache_block "
+                             "with cfg_scale)")
+        if not 1 <= cache_block < cfg.num_layers:
+            raise ValueError(f"cache_block must be in "
+                             f"1..{cfg.num_layers - 1}, got {cache_block}")
     if eval_dtype == "bfloat16":
         cfg = dataclasses.replace(cfg, dtype=eval_dtype)
         params = api.cast_params_for_eval(params, eval_dtype)
@@ -66,6 +84,27 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
         # scan path's outer jit simply inlines it
         return jax.jit(
             lambda x, t: net(params, x, jnp.asarray(t, jnp.float32), extra))
+
+    def cache_kw(baked=None):
+        """(eps_cached, cache_spec) for this wiring — None, None uncached.
+        `baked` fixes the batch dict at build time (the uniform-batch mode);
+        otherwise the per-call extras are the batch (per-request mode)."""
+        if not cache_block:
+            return {}
+        from ..engine import CacheSpec
+        from ..models.dit import dit_cache_shape
+
+        cnet = api.eps_network_cached(cfg, cache_block)
+
+        def eps_cached(x, t, cache, reuse, **extra):
+            return cnet(params, x, jnp.asarray(t, jnp.float32),
+                        baked if baked is not None else extra, cache, reuse)
+
+        return {"eps_cached": eps_cached,
+                "cache_spec": CacheSpec(shape=dit_cache_shape(cfg),
+                                        block=cache_block,
+                                        n_blocks=cfg.num_layers,
+                                        dtype=eval_dtype)}
 
     if cfg.family != "dit":
         if want_cfg:
@@ -89,14 +128,14 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
         return SamplerEngine(schedule, eps=jax.jit(eps_cond),
                              eps_stacked=jax.jit(eps_stacked),
                              eps_uncond=eps_with({"class_ids": null}),
-                             eval_dtype=eval_dtype)
+                             eval_dtype=eval_dtype, **cache_kw())
     ids = jnp.asarray(class_ids(batch, seed=seed))
     return SamplerEngine(
         schedule,
         eps=eps_with({"class_ids": ids}),
         eps_stacked=eps_with({"class_ids": jnp.concatenate([ids, null])}),
         eps_uncond=eps_with({"class_ids": null}),
-        eval_dtype=eval_dtype,
+        eval_dtype=eval_dtype, **cache_kw(baked={"class_ids": ids}),
     )
 
 
@@ -132,6 +171,7 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
         params = api.init_params(cfg, rng)
     schedule = VPLinear()
     plan_tab = None
+    cache_block = 0
     if plan is not None:
         # a tuned SolverPlan (path or object) replaces the registry table:
         # the spec keeps only the conditioning/runtime knobs
@@ -145,16 +185,21 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
             plan = SolverPlan.load(plan)
         solver, nfe, order = "unipc", plan.nfe, max(plan.orders)
         prediction = plan.prediction
+        # a cached plan (nonzero cache_depth) needs the cache-wired engine
+        # and a spec carrying the same static boundary
+        cache_block = plan.cache_block
         plan_tab = plan.compile(schedule)
     if loop and eval_dtype != "float32":
         raise ValueError("the python-loop reference is fp32-only; "
                          "eval_dtype rides the engine paths")
     engine = build_engine(cfg, params, schedule, batch, seed,
-                          want_cfg=cfg_scale != 0.0, eval_dtype=eval_dtype)
+                          want_cfg=cfg_scale != 0.0, eval_dtype=eval_dtype,
+                          cache_block=cache_block)
     spec = EngineSpec(solver=solver, nfe=nfe, order=order, variant=variant,
                       prediction=prediction, cfg_scale=cfg_scale,
                       cfg_schedule=cfg_schedule, thresholding=thresholding,
-                      fused_update=fused_update, eval_dtype=eval_dtype)
+                      fused_update=fused_update, eval_dtype=eval_dtype,
+                      cache_block=cache_block)
     x_T = jax.random.normal(rng, latent_shape(cfg, batch), jnp.float32)
 
     t0 = time.time()
@@ -172,7 +217,9 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
     x0 = np.asarray(x0)
     path = "loop" if loop else "scan"
     tag = f"{solver}-{order}" + (" [plan]" if plan_tab is not None else "")
-    print(f"{tag} [{path}] nfe={nfe_used} cfg={cfg_scale} "
+    cache_note = (f" evals/latent={plan.eval_cost(cfg.num_layers):.2f} "
+                  f"(cache_block={cache_block})" if cache_block else "")
+    print(f"{tag} [{path}] nfe={nfe_used}{cache_note} cfg={cfg_scale} "
           f"wall={dt:.2f}s out_shape={x0.shape} mean={x0.mean():+.4f} "
           f"std={x0.std():.4f} finite={np.isfinite(x0).all()}")
     return x0

@@ -119,21 +119,40 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
         cfg = cfg.reduced()
     rng = jax.random.PRNGKey(seed)
     params = api.init_params(cfg, rng)
+    # a cached plan bank (DESIGN.md §12) decides the engine's cache wiring,
+    # so load it before build_engine; every cached tier must agree on the one
+    # static block boundary the compiled program bakes in
+    plans = None
+    cache_block = 0
+    if plan_bank is not None:
+        from ..tuning import load_bank
+
+        plans = load_bank(plan_bank)
+        blocks = sorted({p.cache_block for p in plans.values()
+                         if p.cache_block})
+        if len(blocks) > 1:
+            raise ValueError(
+                f"plan bank {plan_bank} mixes cache boundaries {blocks}; one "
+                f"compiled program serves one static cache_block — retune "
+                f"the bank with a single --cache-block")
+        cache_block = blocks[0] if blocks else 0
+        if cache_block and cfg_scale != 0.0:
+            raise ValueError(
+                f"plan bank {plan_bank} schedules feature reuse "
+                f"(cache_block={cache_block}) but --cfg-scale={cfg_scale}; "
+                f"cached programs serve unconditional sampling only")
     engine = build_engine(cfg, params, VPLinear(), batch, seed,
                           want_cfg=cfg_scale != 0.0, per_request_cond=True,
-                          eval_dtype=eval_dtype)
+                          eval_dtype=eval_dtype, cache_block=cache_block)
     spec = EngineSpec(solver=solver, nfe=nfe, order=order,
                       cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
                       thresholding=thresholding, fused_update=fused_update,
                       eval_dtype=eval_dtype)
     common = dict(cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
                   thresholding=thresholding, fused_update=fused_update,
-                  eval_dtype=eval_dtype)
+                  eval_dtype=eval_dtype, cache_block=cache_block)
     tier_names = None
-    if plan_bank is not None:
-        from ..tuning import load_bank
-
-        plans = load_bank(plan_bank)
+    if plans is not None:
         schedule = engine.schedule
         tier_specs = {
             name: EngineSpec(solver="unipc", nfe=p.nfe,
@@ -189,8 +208,11 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
           f"evals/latent {m.evals_per_latent:.1f}")
     if m.per_tier:
         for t, row in m.per_tier.items():
+            cost = (f" ({row['eval_cost']:.2f} full-eval units)"
+                    if row["eval_cost"] and row["eval_cost"] != row["evals"]
+                    else "")
             print(f"  tier {t}: {row['completed']} done, "
-                  f"{row['evals']} evals/request, "
+                  f"{row['evals']} evals/request{cost}, "
                   f"p50 latency {row['latency_ticks_p50']:.0f} ticks")
     order_by_rid = sorted(sched.completions, key=lambda c: c.rid)
     if not order_by_rid:  # e.g. an empty trace

@@ -31,12 +31,13 @@ from ..diffusion import VPLinear
 from ..engine import EngineSpec
 from ..models import api
 from ..tuning import (SearchConfig, SolverPlan, make_objective,
-                      reference_trajectory, save_bank, tune_plan)
+                      reference_trajectory, save_bank, tune_cached_plan,
+                      tune_plan)
 from .sample import build_engine, latent_shape
 
 
 def _setup(arch: str, reduced: bool, batch: int, seed: int,
-           train_steps: int = 0):
+           train_steps: int = 0, cache_block: int = 0):
     """Engine + probe latents for the objective. `train_steps > 0` briefly
     trains the eps-net first (diffusion objective): at random init the
     reduced nets are nearly linear and every solver lands within fp32 noise
@@ -55,7 +56,8 @@ def _setup(arch: str, reduced: bool, batch: int, seed: int,
                            log_every=max(1, train_steps), seed=seed)
     else:
         params = api.init_params(cfg, rng)
-    engine = build_engine(cfg, params, VPLinear(), batch, seed)
+    engine = build_engine(cfg, params, VPLinear(), batch, seed,
+                          cache_block=cache_block)
     x_T = jax.random.normal(rng, latent_shape(cfg, batch), jnp.float32)
     return engine, x_T
 
@@ -64,20 +66,48 @@ def tune(arch: str = "dit-cifar", *, nfe: int = 8, budget: int = 80,
          beam: int = 2, rounds: int = 3, baseline_order: int = 2,
          ref_nfe: int = 48, batch: int = 4, seed: int = 0,
          reduced: bool = True, train_steps: int = 100, engine=None,
-         x_T=None, x_ref=None, verbose: bool = False):
+         x_T=None, x_ref=None, cache_block: int = 0,
+         cache_slack: float = 1.1, verbose: bool = False):
     """Search one NFE budget; returns (plan, report). The search starts from
     the hand-set UniPC-`baseline_order` plan, so the reported baseline IS the
     paper's default table at this budget. Pass engine/x_T/x_ref (see
-    `reference_trajectory`) to share setup across several budgets."""
+    `reference_trajectory`) to share setup across several budgets.
+
+    cache_block > 0 runs the joint solver + cache-schedule search
+    (`tune_cached_plan`, DESIGN.md §12): the engine must be cache-wired
+    (pass cache_block to `_setup`, or an `engine` built with it), and the
+    report gains the no-cache anchor, the discrepancy ratio against it
+    (constrained <= `cache_slack`), and the plan's evals-per-latent."""
     if engine is None:
-        engine, x_T = _setup(arch, reduced, batch, seed, train_steps)
-    spec = EngineSpec(solver="unipc", nfe=nfe, order=baseline_order)
+        engine, x_T = _setup(arch, reduced, batch, seed, train_steps,
+                             cache_block=cache_block)
+    spec = EngineSpec(solver="unipc", nfe=nfe, order=baseline_order,
+                      cache_block=cache_block)
     objective = make_objective(engine, spec, x_T, ref_nfe=ref_nfe,
                                x_ref=x_ref)
     init = SolverPlan.from_spec(spec)
+    cfg_search = SearchConfig(budget=budget, beam=beam, rounds=rounds)
     t0 = time.perf_counter()
-    res = tune_plan(objective, engine.schedule, init,
-                    SearchConfig(budget=budget, beam=beam, rounds=rounds),
+    if cache_block:
+        cres = tune_cached_plan(objective, engine.schedule, init, cfg_search,
+                                cache_block=cache_block, slack=cache_slack,
+                                verbose=verbose)
+        wall = time.perf_counter() - t0
+        n_blocks = engine.cache_spec.n_blocks
+        plan = cres.plan.with_meta(arch=arch, nfe=nfe, ref_nfe=ref_nfe,
+                                   baseline_order=baseline_order, seed=seed,
+                                   search_wall_s=round(wall, 3))
+        report = {"arch": arch, "nfe": nfe,
+                  "baseline": cres.history[0][0] if cres.history else None,
+                  "tuned": cres.score, "evals": cres.evals,
+                  "search_wall_s": wall, "cache_block": cache_block,
+                  "uncached_tuned": cres.uncached_score,
+                  "cached_ratio": cres.score / max(cres.uncached_score,
+                                                   1e-12),
+                  "nfe_evals": nfe + 1,
+                  "evals_per_latent": plan.eval_cost(n_blocks)}
+        return plan, report
+    res = tune_plan(objective, engine.schedule, init, cfg_search,
                     verbose=verbose)
     wall = time.perf_counter() - t0
     plan = res.plan.with_meta(arch=arch, nfe=nfe, ref_nfe=ref_nfe,
@@ -92,12 +122,17 @@ def tune(arch: str = "dit-cifar", *, nfe: int = 8, budget: int = 80,
 def tune_bank(arch: str, tiers: dict, *, budget: int = 80, beam: int = 2,
               rounds: int = 3, baseline_order: int = 2, seed: int = 0,
               ref_nfe: int = 48, batch: int = 4, reduced: bool = True,
-              train_steps: int = 100, verbose: bool = False):
+              train_steps: int = 100, cache_block: int = 0,
+              cache_slack: float = 1.1, verbose: bool = False):
     """Tune one plan per tier ({name: nfe}) over a shared engine, probe
-    batch, and reference trajectory; returns ({name: plan}, [report])."""
-    engine, x_T = _setup(arch, reduced, batch, seed, train_steps)
+    batch, and reference trajectory; returns ({name: plan}, [report]).
+    `cache_block > 0` tunes every tier jointly with a cache schedule at that
+    shared boundary (a bank serves through ONE compiled program)."""
+    engine, x_T = _setup(arch, reduced, batch, seed, train_steps,
+                         cache_block=cache_block)
     x_ref = reference_trajectory(
-        engine, EngineSpec(solver="unipc", nfe=ref_nfe), x_T,
+        engine, EngineSpec(solver="unipc", nfe=ref_nfe,
+                           cache_block=cache_block), x_T,
         ref_nfe=ref_nfe)
     plans, reports = {}, []
     for name, nfe in tiers.items():
@@ -105,6 +140,7 @@ def tune_bank(arch: str, tiers: dict, *, budget: int = 80, beam: int = 2,
                          rounds=rounds, baseline_order=baseline_order,
                          ref_nfe=ref_nfe, seed=seed,
                          engine=engine, x_T=x_T, x_ref=x_ref,
+                         cache_block=cache_block, cache_slack=cache_slack,
                          verbose=verbose)
         plans[name] = plan.with_meta(tier=name)
         rep["tier"] = name
@@ -148,6 +184,13 @@ def main() -> None:
                     help="brief diffusion-objective training of the eps-net "
                          "before tuning (0 = tune the random init, where "
                          "plan rankings drown in fp32 noise)")
+    ap.add_argument("--cache-block", type=int, default=0,
+                    help="jointly tune a DiT feature-reuse schedule at this "
+                         "block boundary (0 = no caching); shallow steps "
+                         "recompute only the first k blocks (DESIGN.md §12)")
+    ap.add_argument("--cache-slack", type=float, default=1.1,
+                    help="max tuned-discrepancy ratio vs the no-cache anchor "
+                         "the cached search may spend on reuse steps")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write the tuned plan (or bank) JSON here")
@@ -179,7 +222,8 @@ def main() -> None:
             rounds=args.rounds, baseline_order=args.baseline_order,
             seed=args.seed, ref_nfe=args.ref_nfe,
             batch=args.batch, reduced=not args.full,
-            train_steps=args.train_steps, verbose=args.verbose)
+            train_steps=args.train_steps, cache_block=args.cache_block,
+            cache_slack=args.cache_slack, verbose=args.verbose)
         for rep in reports:
             print(f"tier {rep['tier']} (nfe={rep['nfe']}): baseline "
                   f"{rep['baseline']:.5f} -> tuned {rep['tuned']:.5f} "
@@ -193,10 +237,17 @@ def main() -> None:
                         baseline_order=args.baseline_order,
                         ref_nfe=args.ref_nfe, batch=args.batch,
                         seed=args.seed, reduced=not args.full,
-                        train_steps=args.train_steps, verbose=args.verbose)
+                        train_steps=args.train_steps,
+                        cache_block=args.cache_block,
+                        cache_slack=args.cache_slack, verbose=args.verbose)
     print(f"{args.arch} nfe={args.nfe}: baseline {report['baseline']:.5f} "
           f"-> tuned {report['tuned']:.5f} ({report['evals']} evals, "
           f"{report['search_wall_s']:.1f}s)")
+    if args.cache_block:
+        print(f"  cached @ block {args.cache_block}: "
+              f"{report['evals_per_latent']:.2f} evals/latent vs "
+              f"{report['nfe_evals']} uncached, ratio "
+              f"{report['cached_ratio']:.3f} (slack {args.cache_slack})")
     if args.out:
         plan.save(args.out)
         print(f"wrote plan to {args.out}")

@@ -141,6 +141,30 @@ def eps_network(cfg: ModelConfig) -> Callable:
     return f
 
 
+def eps_network_cached(cfg: ModelConfig, cache_block: int) -> Callable:
+    """Feature-reuse eps-net (DESIGN.md §12), dit family only:
+
+        (params, x_t, t, batch, cache, reuse) -> (eps-hat, new_cache)
+
+    `cache` is the (B, T, d_model) deep-feature delta state (see
+    `dit.dit_apply_cached`); `reuse` the per-sample shallow-eval flag. The
+    `cache_block` boundary is static — it is baked into the compiled step
+    program, while *which* steps reuse the cache is data (a searched
+    per-step table column, `repro.tuning`)."""
+    if cfg.family != "dit":
+        raise ValueError(f"feature-reuse eval needs the dit family (residual "
+                         f"block stack); arch {cfg.arch_id!r} is family "
+                         f"{cfg.family!r}")
+    from .dit import dit_apply_cached
+
+    def f(params, x_t, t, batch, cache, reuse):
+        return dit_apply_cached(params["backbone"], cfg, x_t, t,
+                                batch.get("class_ids"), cache=cache,
+                                reuse=reuse, cache_block=cache_block)
+
+    return f
+
+
 def diffusion_loss_fn(cfg: ModelConfig, schedule=None) -> Callable:
     schedule = schedule or VPLinear()
     net = eps_network(cfg)

@@ -4,6 +4,14 @@ patch transformer with adaLN-zero time conditioning, Peebles & Xie 2023).
 
 Operates on pre-patchified latents (B, patch_tokens, latent_dim); class
 conditioning optional (classifier-free guidance drops the class embedding).
+
+Feature reuse (DESIGN.md §12): `dit_apply_cached` splits the block stack at a
+static boundary `cache_block` and carries the deep segment's *residual delta*
+as explicit cache state. On a full eval the deep blocks run and the delta is
+recorded; on a shallow eval only the first `cache_block` blocks (plus the
+final layer) recompute and the cached delta stands in for the deep segment —
+the DeepCache observation that deep features drift slowly across adjacent
+solver steps, applied to a residual transformer.
 """
 
 from __future__ import annotations
@@ -59,9 +67,9 @@ def init_dit(cfg, rng, num_classes: int = 0):
     return p
 
 
-def dit_apply(params, cfg, x_t, t, class_ids=None):
-    """x_t: (B, T, latent_dim); t: scalar or (B,). Returns eps-hat, same shape."""
-    B, T, _ = x_t.shape
+def _embed(params, cfg, x_t, t, class_ids):
+    """Shared front end: patch projection + adaLN conditioning vector."""
+    B = x_t.shape[0]
     t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (B,))
     x = jnp.einsum("btl,ld->btd", x_t.astype(cfg.activation_dtype),
                    params["in_proj"].astype(cfg.activation_dtype))
@@ -73,11 +81,11 @@ def dit_apply(params, cfg, x_t, t, class_ids=None):
     if class_ids is not None and "class_embed" in params:
         c = c + params["class_embed"].astype(jnp.float32)[class_ids]
     c = jax.nn.silu(c).astype(x.dtype)
+    return x, c
 
-    # fused adaLN (DESIGN.md §11): LN + scale/shift in one pass, gated
-    # residual re-entry in one pass — the Pallas kernels on TPU, the fp32
-    # jnp oracle elsewhere (identical math, XLA-fused)
-    adaln = getattr(cfg, "adaln_backend", None)
+
+def _block_body(cfg, c, adaln):
+    """Scan body over the stacked block params (fused adaLN, DESIGN.md §11)."""
 
     def body(h, bp):
         mod = (jnp.einsum("bd,de->be", c, bp["ada"].astype(h.dtype))
@@ -91,9 +99,78 @@ def dit_apply(params, cfg, x_t, t, class_ids=None):
         y = jnp.einsum("btf,fd->btd", jax.nn.gelu(y), bp["w2"].astype(h.dtype))
         return adaln_ops.gate_residual(h, g2, y, backend=adaln), None
 
-    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return body
+
+
+def _head(params, x, c, adaln):
+    """Final adaLN + output projection back to latent width."""
     mod = (jnp.einsum("bd,de->be", c, params["final_ada"].astype(x.dtype))
            + params["final_ada_b"].astype(x.dtype))
     sh, sc = jnp.split(mod, 2, axis=-1)
     x = adaln_ops.modulate(x, sh, sc, backend=adaln)
     return jnp.einsum("btd,dl->btl", x, params["out_proj"].astype(x.dtype))
+
+
+def dit_apply(params, cfg, x_t, t, class_ids=None):
+    """x_t: (B, T, latent_dim); t: scalar or (B,). Returns eps-hat, same shape."""
+    adaln = getattr(cfg, "adaln_backend", None)
+    x, c = _embed(params, cfg, x_t, t, class_ids)
+    x, _ = jax.lax.scan(_block_body(cfg, c, adaln), x, params["blocks"])
+    return _head(params, x, c, adaln)
+
+
+def dit_cache_shape(cfg):
+    """Per-sample shape of the deep-feature cache (the residual delta of the
+    blocks past the cache boundary): one (T, d_model) array per slot."""
+    return (cfg.patch_tokens, cfg.d_model)
+
+
+def dit_apply_cached(params, cfg, x_t, t, class_ids=None, *, cache,
+                     reuse=None, cache_block: int):
+    """DiT eval with a deep-feature cache at a static block boundary.
+
+    cache: (B, T, d_model) — the deep segment's residual delta
+        (x_after_all_blocks − x_after_cache_block) recorded at each sample's
+        last full eval. Zero-init is safe: the first eval of a trajectory
+        must be a full one (the table's init row always is).
+    reuse: scalar or (B,) flag, 1 = shallow eval (reuse the cached delta and
+        recompute only the first `cache_block` blocks + the final layer),
+        0 = full eval (recompute everything, refresh the cache). None = 0.
+    cache_block: static split index k, 1 <= k < num_layers.
+
+    Returns (eps_hat, new_cache). With reuse = 0 everywhere the deep scan
+    runs and the output is BIT-IDENTICAL to `dit_apply` at fp32 (the shallow
+    and deep block scans chain the same body over the same stacked params).
+    The deep segment only executes when some sample in the batch needs a
+    full eval (`lax.cond` on the batch-reduced flag), so an all-shallow tick
+    pays k blocks instead of num_layers.
+    """
+    L = int(cfg.num_layers)
+    k = int(cache_block)
+    if not 1 <= k < L:
+        raise ValueError(f"cache_block must be in 1..{L - 1} "
+                         f"(num_layers={L}), got {k}")
+    adaln = getattr(cfg, "adaln_backend", None)
+    x, c = _embed(params, cfg, x_t, t, class_ids)
+    body = _block_body(cfg, c, adaln)
+    shallow = jax.tree.map(lambda a: a[:k], params["blocks"])
+    deep = jax.tree.map(lambda a: a[k:], params["blocks"])
+    x_k, _ = jax.lax.scan(body, x, shallow)
+
+    B = x_t.shape[0]
+    reuse = (jnp.zeros((B,), jnp.float32) if reuse is None
+             else jnp.broadcast_to(jnp.asarray(reuse, jnp.float32), (B,)))
+    need_deep = jnp.any(reuse < 0.5)
+    x_deep = jax.lax.cond(
+        need_deep,
+        lambda xk: jax.lax.scan(body, xk, deep)[0],
+        lambda xk: xk,  # all-shallow tick: deep blocks skipped entirely
+        x_k)
+    cache = cache.astype(x_k.dtype)
+    r = (reuse > 0.5).reshape((B,) + (1,) * (x_k.ndim - 1))
+    # full slots take the freshly computed deep output (exact — never
+    # reconstructed through the delta) and refresh their cache; shallow
+    # slots approximate it as x_k + cached delta and keep their cache
+    x_out = jnp.where(r, x_k + cache, x_deep)
+    new_cache = jnp.where(r, cache, x_deep - x_k)
+    return _head(params, x_out, c, adaln), new_cache

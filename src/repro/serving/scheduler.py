@@ -73,6 +73,10 @@ class Completion:
                          # trace driver fast-forwarded over idle gaps)
     evals: int           # rows executed = model evals this request consumed
     tier: Optional[str] = None  # the plan-bank tier served (None: single plan)
+    # evals-per-latent in FULL-eval units: == evals for uncached programs;
+    # below it when the request's row span scheduled shallow feature-reuse
+    # evals (StepProgram.span_cost, DESIGN.md §12)
+    eval_cost: float = 0.0
 
     @property
     def latency_ticks(self) -> float:
@@ -183,11 +187,18 @@ class SlotScheduler:
         if not taken:
             return
         # one scatter per tick, not one full-state copy per admitted request
-        x, E = self.state
+        x, E = self.state[:2]
         sl = jnp.asarray(taken, jnp.int32)
         x = x.at[sl].set(jnp.stack(draws))
         E = E.at[:, sl].set(0.0)  # fresh rings -> warm-up from order 1
-        self.state = (x, E)
+        if self.program.cache is not None:
+            # a reused slot must not inherit the previous request's deep
+            # features; zeroed cache + the span's full init row reproduce the
+            # uniform cached scan exactly (DESIGN.md §12)
+            C = self.state[2].at[sl].set(0.0)
+            self.state = (x, E, C)
+        else:
+            self.state = (x, E)
         if self.program.uses_cfg:
             self.g = self.g.at[sl].set(jnp.asarray(scales, jnp.float32))
         for k, vals in extra_vals.items():
@@ -222,7 +233,9 @@ class SlotScheduler:
                     finish_tick=self.ticks,
                     finish_clock=(float(self.ticks) if self.clock is None
                                   else self.clock),
-                    evals=int(self.slot_budget[s]), tier=req.tier))
+                    evals=int(self.slot_budget[s]), tier=req.tier,
+                    eval_cost=self.program.span_cost(
+                        int(self.slot_off[s]), int(self.slot_budget[s]))))
                 self.slot_req[s] = None
                 self.slot_row[s] = 0
                 self.slot_off[s] = 0

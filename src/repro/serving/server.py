@@ -159,6 +159,9 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
             per_tier[t] = {
                 "completed": len(cs),
                 "evals": int(cs[0].evals) if cs else 0,
+                # full-eval units: < evals when the tier's plan schedules
+                # shallow feature-reuse steps (DESIGN.md §12)
+                "eval_cost": float(cs[0].eval_cost) if cs else 0.0,
                 "latency_ticks_p50": float(np.percentile(
                     [c.latency_ticks for c in cs], 50)) if cs else 0.0,
             }

@@ -21,10 +21,12 @@ compiled `StepProgram` serves as fast/balanced/quality tiers.
 
 from .objective import PlanObjective, make_objective, reference_trajectory
 from .plans import SolverPlan, load_bank, save_bank
-from .search import SearchConfig, SearchResult, tune_plan
+from .search import (CachedSearchResult, SearchConfig, SearchResult,
+                     tune_cached_plan, tune_plan)
 
 __all__ = [
     "SolverPlan", "save_bank", "load_bank",
     "PlanObjective", "make_objective", "reference_trajectory",
     "SearchConfig", "SearchResult", "tune_plan",
+    "CachedSearchResult", "tune_cached_plan",
 ]

@@ -51,6 +51,11 @@ class PlanObjective:
     sign: float = 1.0
     prediction: str = "data"
     fused_update: bool = True
+    # feature reuse: a cached engine's model_fn returns (pred, cache) and the
+    # runner's carry grows the (B, *cache_shape) cache state — candidate
+    # plans may then schedule shallow steps via their cache_reuse column
+    cached: bool = False
+    cache_shape: Optional[tuple] = None
     # ONE jitted runner serves every candidate: the row table is a traced
     # argument, so jit's own cache keys on row *shapes* (one entry per NFE,
     # since plans pad their weight columns to a fixed width)
@@ -76,16 +81,21 @@ class PlanObjective:
 
     def _make_runner(self) -> Callable:
         model_fn, sign, fused = self.model_fn, self.sign, self.fused_update
+        cached, cache_shape = self.cached, self.cache_shape
 
         def run(x_T, rows):
             step = step_fn_over_rows(model_fn, rows, sign=sign,
-                                     fused_update=fused)
+                                     fused_update=fused, cached=cached)
             K = rows["w_pred"].shape[-1]
             n_rows = rows["t"].shape[0]
             E0 = jnp.zeros((K + 1,) + x_T.shape, x_T.dtype)
-            (x, _), _ = jax.lax.scan(lambda c, j: (step(c, j), None),
-                                     (x_T, E0), jnp.arange(n_rows))
-            return x
+            carry0 = (x_T, E0)
+            if cached:
+                carry0 = carry0 + (jnp.zeros(
+                    (x_T.shape[0],) + tuple(cache_shape), x_T.dtype),)
+            carry, _ = jax.lax.scan(lambda c, j: (step(c, j), None),
+                                    carry0, jnp.arange(n_rows))
+            return carry[0]
 
         return jax.jit(run)
 
@@ -126,6 +136,9 @@ def make_objective(engine, spec, x_T, *, ref_nfe: int = 64,
                                      ref_order=ref_order)
     tab = engine.compile(spec)
     model = engine.model_fn(spec, tab)
+    cached = bool(spec.cache_block)
     return PlanObjective(model_fn=model, x_T=x_T, x_ref=np.asarray(x_ref),
                          sign=float(tab.sign), prediction=tab.prediction,
-                         fused_update=spec.fused_update)
+                         fused_update=spec.fused_update, cached=cached,
+                         cache_shape=(tuple(engine.cache_spec.shape)
+                                      if cached else None))

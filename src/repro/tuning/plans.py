@@ -48,6 +48,12 @@ class SolverPlan:
         lowering, as everywhere else).
     corrector: (M,) UniC on/off per step.
     variants: (M,) B(h) variant per step.
+    cache_depth: optional (M,) feature-reuse depth per step (DESIGN.md §12):
+        0 = full eval, k > 0 = shallow eval recomputing only the first k DiT
+        blocks and reusing the cached deep features. The cache boundary is
+        static in the compiled program, so every nonzero entry must be the
+        same k (`cache_block`). None = the plan has no cache axis at all and
+        serves on uncached engines unchanged.
     meta: provenance — search budget, objective values, arch, reference NFE.
     """
 
@@ -57,6 +63,7 @@ class SolverPlan:
     corrector: List[bool]
     variants: List[str]
     prediction: str = "data"
+    cache_depth: Optional[List[int]] = None
     meta: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -87,7 +94,27 @@ class SolverPlan:
         if not all(v in BH_VARIANTS for v in self.variants):
             raise ValueError(f"variants must be in {BH_VARIANTS}, "
                              f"got {self.variants}")
+        if self.cache_depth is not None:
+            if len(self.cache_depth) != M:
+                raise ValueError(f"plan nfe={M} needs {M} cache_depth "
+                                 f"entries, got {len(self.cache_depth)}")
+            if not all(int(d) >= 0 for d in self.cache_depth):
+                raise ValueError(f"cache_depth entries must be >= 0, "
+                                 f"got {self.cache_depth}")
+            ks = {int(d) for d in self.cache_depth if d}
+            if len(ks) > 1:
+                raise ValueError(
+                    f"the cache boundary is static in the compiled program: "
+                    f"all nonzero cache_depth entries must share one k, "
+                    f"got {sorted(ks)}")
         return self
+
+    @property
+    def cache_block(self) -> int:
+        """The plan's static cache boundary (0 = no shallow steps)."""
+        if not self.cache_depth:
+            return 0
+        return max(int(d) for d in self.cache_depth)
 
     # -- lowering ------------------------------------------------------------
     def grid(self, noise_schedule):
@@ -112,7 +139,7 @@ class SolverPlan:
         stacked plan banks need no per-tier padding.
         """
         t, lam, alpha, sigma = self.grid(noise_schedule)
-        return build_unipc_schedule(
+        tab = build_unipc_schedule(
             lambdas=lam, alphas=alpha, sigmas=sigma, timesteps=t,
             order=MAX_ORDER, prediction=self.prediction,
             variant=self.variants[0],
@@ -120,6 +147,26 @@ class SolverPlan:
             variant_schedule=list(self.variants),
             corrector_schedule=[bool(c) for c in self.corrector],
         )
+        if self.cache_depth is not None:
+            # the per-eval reuse flag as a model column: row 0 (the init
+            # eval) is always full — it seeds the cache — followed by one
+            # 0/1 per body step. Attached even when every step is full so a
+            # candidate's jit signature is stable across a cache search.
+            tab.model_cols = dict(tab.model_cols or {})
+            tab.model_cols["cache_reuse"] = np.asarray(
+                [0.0] + [1.0 if d else 0.0 for d in self.cache_depth],
+                np.float64)
+        return tab
+
+    def eval_cost(self, n_blocks: int) -> float:
+        """Evals-per-latent: total model-eval cost of the plan's M+1 evals in
+        full-eval units, counting each shallow step as cache_block/n_blocks
+        (`core.coeffs.eval_cost_rows` over the lowered table agrees)."""
+        full = self.nfe + 1
+        if not self.cache_depth or not n_blocks:
+            return float(full)
+        shallow = sum(1 for d in self.cache_depth if d)
+        return float(full - shallow * (1.0 - self.cache_block / n_blocks))
 
     # -- construction --------------------------------------------------------
     @staticmethod
@@ -154,22 +201,27 @@ class SolverPlan:
 
     # -- (de)serialization ---------------------------------------------------
     def to_dict(self) -> dict:
-        return {"kind": PLAN_KIND, "version": 1, "nfe": self.nfe,
-                "prediction": self.prediction,
-                "knots": [float(u) for u in self.knots],
-                "orders": [int(o) for o in self.orders],
-                "corrector": [bool(c) for c in self.corrector],
-                "variants": list(self.variants), "meta": dict(self.meta)}
+        d = {"kind": PLAN_KIND, "version": 1, "nfe": self.nfe,
+             "prediction": self.prediction,
+             "knots": [float(u) for u in self.knots],
+             "orders": [int(o) for o in self.orders],
+             "corrector": [bool(c) for c in self.corrector],
+             "variants": list(self.variants), "meta": dict(self.meta)}
+        if self.cache_depth is not None:
+            d["cache_depth"] = [int(c) for c in self.cache_depth]
+        return d
 
     @staticmethod
     def from_dict(d: dict) -> "SolverPlan":
         if d.get("kind") != PLAN_KIND:
             raise ValueError(f"not a solver plan: kind={d.get('kind')!r}")
+        cd = d.get("cache_depth")
         return SolverPlan(nfe=int(d["nfe"]), knots=list(d["knots"]),
                           orders=list(d["orders"]),
                           corrector=list(d["corrector"]),
                           variants=list(d["variants"]),
                           prediction=d.get("prediction", "data"),
+                          cache_depth=None if cd is None else list(cd),
                           meta=dict(d.get("meta", {})))
 
     def save(self, path: str) -> None:

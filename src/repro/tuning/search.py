@@ -193,3 +193,96 @@ def tune_plan(objective: PlanObjective, noise_schedule,
                           beam=cfg.beam, rounds=cfg.rounds)
     return SearchResult(plan=best, score=best_score, baseline=d0,
                         evals=cfg.budget - evals_left, history=history)
+
+
+@dataclass
+class CachedSearchResult:
+    """A jointly tuned (solver schedule, cache schedule) plan plus the
+    no-cache anchor it is constrained against."""
+
+    plan: SolverPlan            # the cached winner (cache_depth set)
+    score: float                # its trajectory discrepancy
+    uncached_plan: SolverPlan   # the phase-1 winner with every eval full
+    uncached_score: float       # the no-cache tuned discrepancy (the anchor)
+    evals: int
+    history: List[Tuple[float, str]] = field(default_factory=list)
+
+
+def tune_cached_plan(objective: PlanObjective, noise_schedule,
+                     init: SolverPlan, config: Optional[SearchConfig] = None,
+                     *, cache_block: int, slack: float = 1.1,
+                     verbose: bool = False) -> CachedSearchResult:
+    """Joint solver + cache-schedule search (DESIGN.md §12).
+
+    The cache axis cannot ride the plain score-descent acceptance rule:
+    a shallow eval never *improves* trajectory discrepancy, it buys eval
+    cost — so pure descent would keep (or revert to) the all-full schedule.
+    The search therefore runs the cache coordinate under a constrained
+    acceptance: flips to shallow are kept while the score stays within
+    `slack` x the no-cache tuned anchor, and each round keeps the flip that
+    degrades the score least (greedy coordinate descent on the cache mask).
+
+    Phases, all through the one jitted cached runner in `objective`:
+      1. `tune_plan` over the solver axes with an all-full cache column —
+         the no-cache anchor the acceptance constraint (and `guard.py`'s
+         1.1x gate) measures against.
+      2. Greedy shallow flips at boundary `cache_block` under the slack
+         constraint, until no step can be flipped without breaching it.
+      3. A final solver-axis sweep from the cached plan (`rounds=1`): the
+         solver schedule re-adapts to the cheaper eval trace. Scores never
+         regress in `tune_plan`, so the constraint survives phase 3.
+
+    `objective` must wrap a cache-wired engine (`make_objective` over a
+    `build_engine(cache_block=...)` engine); `init` is the usual hand-set
+    baseline plan.
+    """
+    if cache_block < 1:
+        raise ValueError(f"tune_cached_plan needs cache_block >= 1, "
+                         f"got {cache_block}")
+    if not objective.cached:
+        raise ValueError("objective is not cache-wired; build it from an "
+                         "engine constructed with build_engine(cache_block=...)")
+    cfg = config or SearchConfig()
+    M = init.nfe
+    # phase 1 — solver axes, all evals full. The zero cache column keeps
+    # every candidate on the cached runner's jit signature.
+    base = tune_plan(objective, noise_schedule,
+                     replace(init, cache_depth=[0] * M), cfg, verbose=verbose)
+    anchor_plan, anchor = base.plan, base.score
+    plan, score, evals = anchor_plan, anchor, base.evals
+    history = list(base.history)
+    # phase 2 — greedy constrained flips on the cache mask
+    while True:
+        best_flip = None
+        for i in range(M):
+            if plan.cache_depth[i]:
+                continue
+            cd = list(plan.cache_depth)
+            cd[i] = cache_block
+            d = objective(replace(plan, cache_depth=cd), noise_schedule)
+            evals += 1
+            if d <= slack * anchor and (best_flip is None
+                                        or d < best_flip[0]):
+                best_flip = (d, i, cd)
+        if best_flip is None:
+            break
+        score, i, cd = best_flip
+        plan = replace(plan, cache_depth=cd)
+        history.append((score, f"cache[{i}]={cache_block}"))
+        if verbose:
+            print(f"  cache[{i}]={cache_block}: {score:.5f} "
+                  f"(anchor {anchor:.5f}, slack {slack})")
+    # phase 3 — let the solver schedule re-adapt to the cache schedule
+    if any(plan.cache_depth):
+        polish = tune_plan(objective, noise_schedule, plan,
+                           replace(cfg, rounds=1), verbose=verbose)
+        plan, score = polish.plan, polish.score
+        evals += polish.evals
+        history += polish.history[1:]
+    plan = plan.with_meta(objective=score, cache_anchor=anchor,
+                          cache_block=cache_block, cache_slack=slack,
+                          evals=evals)
+    return CachedSearchResult(plan=plan, score=score,
+                              uncached_plan=anchor_plan,
+                              uncached_score=anchor, evals=evals,
+                              history=history)

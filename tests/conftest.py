@@ -1,8 +1,13 @@
 import os
+import random
 import sys
 
 # Tests run single-device (the dry-run owns the 512-device flag).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Determinism: any set-iteration-order dependence in subprocess helpers is a
+# bug we want CI to catch the same way every run (ci.yml pins this too; the
+# parent interpreter's own hashing is already fixed by the time we run).
+os.environ.setdefault("PYTHONHASHSEED", "0")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
@@ -10,6 +15,20 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 from repro.diffusion import GaussianDPM, VPLinear  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _seeded_global_rngs():
+    """Every test starts from the same global RNG state.
+
+    The suite's own randomness goes through explicit PRNGKeys / Generators,
+    but library helpers occasionally fall back to the global np/random state;
+    reseeding per-test keeps one test's draws from leaking into the next and
+    makes failure repros independent of `-k` selections and execution order.
+    """
+    np.random.seed(0)
+    random.seed(0)
+    yield
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,122 @@
+"""Regression tests: the bench harness fails LOUDLY on broken artifacts
+(ISSUE 6 satellite).
+
+`benchmarks/guard.py` and `benchmarks/run.py --summarize` are the committed
+perf trajectory's immune system — a missing or corrupt BENCH_*.json must be
+a non-zero exit that NAMES the artifact, never a silent skip. These tests
+drive both as subprocesses against a scratch copy of the real artifacts so
+the checks stay honest against schema drift.
+
+Stdlib-only under the hood (neither tool imports jax), so this module runs
+in well under a second despite spawning interpreters.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACTS = ("BENCH_serve.json", "BENCH_tuning.json", "BENCH_model.json")
+
+
+@pytest.fixture
+def bench_root(tmp_path):
+    """A scratch dir holding copies of the committed bench artifacts."""
+    for name in ARTIFACTS:
+        shutil.copy(os.path.join(REPO, name), tmp_path / name)
+    return tmp_path
+
+
+def _guard(root):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "guard.py"),
+         "--root", str(root)],
+        capture_output=True, text=True)
+
+
+def _summarize(root):
+    # run.py's own `sys.path.insert(0, "src")` is cwd-relative; running from
+    # the scratch root needs both the package and repro on PYTHONPATH
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join([REPO, os.path.join(REPO, "src")]),
+               JAX_PLATFORMS="cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--summarize"],
+        cwd=str(root), env=env, capture_output=True, text=True)
+
+
+def test_guard_passes_on_committed_artifacts(bench_root):
+    r = _guard(bench_root)
+    assert r.returncode == 0, r.stderr
+    assert "bench guard ok" in r.stdout
+
+
+@pytest.mark.parametrize("victim", ARTIFACTS)
+def test_guard_fails_and_names_missing_artifact(bench_root, victim):
+    os.remove(bench_root / victim)
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert victim in r.stderr and "missing" in r.stderr
+
+
+@pytest.mark.parametrize("victim", ARTIFACTS)
+def test_guard_fails_and_names_corrupt_artifact(bench_root, victim):
+    (bench_root / victim).write_text("{not json", encoding="utf-8")
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert victim in r.stderr and "corrupt" in r.stderr
+
+
+def test_guard_fails_when_cached_runs_are_dropped(bench_root):
+    """The feature-reuse acceptance trajectory (DESIGN.md §12) is load-
+    bearing: stripping cached_runs from an otherwise valid BENCH_tuning.json
+    must fail the guard by name."""
+    path = bench_root / "BENCH_tuning.json"
+    data = json.loads(path.read_text())
+    data.pop("cached_runs")
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "cached_runs" in r.stderr and "BENCH_tuning.json" in r.stderr
+
+
+def test_guard_fails_when_cache_stops_paying(bench_root):
+    """Every cached run pinned at the NFE floor (no eval saved) must trip
+    the below-floor acceptance check."""
+    path = bench_root / "BENCH_tuning.json"
+    data = json.loads(path.read_text())
+    for run in data["cached_runs"]:
+        run["evals_per_latent"] = run["nfe_evals"]
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "below its NFE floor" in r.stderr
+
+
+def test_summarize_ok_then_fatal_on_empty_root(bench_root, tmp_path):
+    r = _summarize(bench_root)
+    assert r.returncode == 0, r.stderr
+    assert "bench summary" in r.stdout
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    r = _summarize(empty)
+    assert r.returncode != 0
+    assert "no BENCH_*.json artifacts" in (r.stderr + r.stdout)
+
+
+def test_summarize_fatal_on_corrupt_artifact(bench_root):
+    (bench_root / "BENCH_model.json").write_text("[1,", encoding="utf-8")
+    r = _summarize(bench_root)
+    assert r.returncode != 0
+    assert "BENCH_model.json" in r.stderr and "corrupt" in r.stderr
+
+
+def test_summarize_fatal_on_schema_drift(bench_root):
+    (bench_root / "BENCH_serve.json").write_text(json.dumps({"rows": []}))
+    r = _summarize(bench_root)
+    assert r.returncode != 0
+    assert "BENCH_serve.json" in r.stderr and "'runs'" in r.stderr

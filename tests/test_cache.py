@@ -1,0 +1,377 @@
+"""Feature-reuse eval caching (DESIGN.md §12): the DiT cache boundary, the
+engine's cached model path, joint plan tuning, eval-cost accounting, and
+cached-bank serving.
+
+The two acceptance properties (ISSUE 6):
+
+* parity — with every step full (cache_depth all zero, or a plain registry
+  table on a cache-wired spec), the cached path reproduces the uncached eval
+  BIT-identically at fp32: full evals take the freshly computed deep
+  activations directly, never a cache reconstruction;
+* accounting — evals-per-latent of a plan with shallow steps is strictly
+  below its NFE floor and agrees across `SolverPlan.eval_cost`,
+  `core.coeffs.eval_cost_rows`, `StepProgram.span_cost`, and the scheduler's
+  per-request `Completion.eval_cost`.
+
+Every output-parity test perturbs the params: the adaLN-zero init makes a
+fresh DiT block an exact identity, so an unperturbed deep segment contributes
+nothing and shallow == full vacuously.
+"""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.coeffs import eval_cost_rows
+from repro.diffusion import VPLinear
+from repro.engine import EngineSpec, SamplerEngine
+from repro.launch.sample import build_engine
+from repro.models import api
+from repro.models.dit import dit_apply, dit_apply_cached, dit_cache_shape
+from repro.serving import Request, SlotScheduler, run_trace
+from repro.tuning import SolverPlan
+
+
+def _noisy(params, rng, scale=0.02):
+    """Perturb every float leaf (see module docstring: adaLN-zero identity)."""
+    leaves, treedef = jax.tree.flatten(params)
+    ks = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [
+        a + scale * jax.random.normal(k, a.shape, a.dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a
+        for a, k in zip(leaves, ks)])
+
+
+@pytest.fixture(scope="module")
+def dit_setup():
+    """(cfg, params) with perturbed weights; model-level tests index
+    params["backbone"], engine-level ones pass the full tree."""
+    cfg = get_config("dit-cifar").reduced()
+    params = _noisy(api.init_params(cfg, jax.random.PRNGKey(0)),
+                    jax.random.PRNGKey(1))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def dit_classless():
+    """Class-free DiT params: the baked per-slot class ids become no-ops, so
+    a batch-1 uniform reference scan is comparable with any slot count."""
+    from repro.models.dit import init_dit
+
+    cfg = get_config("dit-cifar").reduced()
+    params = {"backbone": _noisy(init_dit(cfg, jax.random.PRNGKey(0),
+                                          num_classes=0),
+                                 jax.random.PRNGKey(1))}
+    return cfg, params
+
+
+def _engine(cfg, params, batch=2, cache_block=1, seed=0):
+    return build_engine(cfg, params, VPLinear(), batch, seed,
+                        cache_block=cache_block)
+
+
+def _x(cfg, batch=2, seed=2):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (batch, cfg.patch_tokens, cfg.latent_dim),
+                             jnp.float32)
+
+
+def _cached_plan(nfe=4, order=2, k=1):
+    """Full init + first body step, shallow everywhere after."""
+    p = SolverPlan.default(nfe, order=order)
+    return replace(p, cache_depth=[0] + [k] * (nfe - 1))
+
+
+# ---------------------------------------------------------------------------
+# model level: the cache boundary itself
+# ---------------------------------------------------------------------------
+
+
+def test_full_eval_is_bit_identical_and_fills_cache(dit_setup):
+    """reuse=0 through the cached path == dit_apply bitwise (eager and jit),
+    and the returned cache is the deep residual delta, not zero."""
+    cfg, params = dit_setup
+    params = params["backbone"]
+    x, t = _x(cfg), jnp.full((2,), 0.4, jnp.float32)
+    C0 = jnp.zeros((2,) + dit_cache_shape(cfg), jnp.float32)
+    r0 = jnp.zeros((2,))
+    # compare eager-to-eager and jit-to-jit: XLA fusion reorders fp32 sums,
+    # so cross-mode comparisons are only ULP-close, not bitwise
+    cases = [
+        (dit_apply(params, cfg, x, t),
+         dit_apply_cached(params, cfg, x, t, cache=C0, reuse=r0,
+                          cache_block=1)),
+        (jax.jit(lambda p, xx, tt: dit_apply(p, cfg, xx, tt))(params, x, t),
+         jax.jit(lambda p, xx, tt, C, r: dit_apply_cached(
+             p, cfg, xx, tt, cache=C, reuse=r, cache_block=1))(
+             params, x, t, C0, r0)),
+    ]
+    for ref, (out, C1) in cases:
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        assert float(jnp.abs(C1).max()) > 0.0  # deep blocks did something
+
+
+def test_shallow_eval_reuses_cache_and_differs_from_full(dit_setup):
+    """A shallow eval at a *different* x: output differs from the full eval
+    (it is an approximation) but equals shallow-blocks + the stale delta; the
+    cache itself passes through unchanged."""
+    cfg, params = dit_setup
+    params = params["backbone"]
+    t = jnp.full((2,), 0.4, jnp.float32)
+    C0 = jnp.zeros((2,) + dit_cache_shape(cfg), jnp.float32)
+    x1, x2 = _x(cfg, seed=2), _x(cfg, seed=3)
+    _, C1 = dit_apply_cached(params, cfg, x1, t, cache=C0,
+                             reuse=jnp.zeros((2,)), cache_block=1)
+    full2 = dit_apply(params, cfg, x2, t)
+    shal2, C2 = dit_apply_cached(params, cfg, x2, t, cache=C1,
+                                 reuse=jnp.ones((2,)), cache_block=1)
+    assert not np.allclose(np.asarray(shal2), np.asarray(full2))
+    np.testing.assert_array_equal(np.asarray(C2), np.asarray(C1))
+
+
+def test_mixed_batch_reuse_is_per_sample(dit_setup):
+    """reuse is a per-sample flag: in one batched call, the full row matches
+    the all-full eval bitwise and keeps a refreshed cache; the shallow row
+    keeps its stale cache."""
+    cfg, params = dit_setup
+    params = params["backbone"]
+    t = jnp.full((2,), 0.3, jnp.float32)
+    x = _x(cfg, seed=4)
+    _, C1 = dit_apply_cached(
+        params, cfg, _x(cfg, seed=5), t,
+        cache=jnp.zeros((2,) + dit_cache_shape(cfg)),
+        reuse=jnp.zeros((2,)), cache_block=1)
+    ref, Cref = dit_apply_cached(params, cfg, x, t, cache=C1,
+                                 reuse=jnp.zeros((2,)), cache_block=1)
+    mix, Cmix = dit_apply_cached(params, cfg, x, t, cache=C1,
+                                 reuse=jnp.asarray([0.0, 1.0]), cache_block=1)
+    np.testing.assert_array_equal(np.asarray(mix[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(Cmix[0]), np.asarray(Cref[0]))
+    np.testing.assert_array_equal(np.asarray(Cmix[1]), np.asarray(C1[1]))
+
+
+def test_cache_block_bounds_are_validated(dit_setup):
+    cfg, params = dit_setup
+    params = params["backbone"]
+    x = _x(cfg)
+    C = jnp.zeros((2,) + dit_cache_shape(cfg))
+    for bad in (0, cfg.num_layers, 7):
+        with pytest.raises(ValueError, match="cache_block"):
+            dit_apply_cached(params, cfg, x, 0.5, cache=C, cache_block=bad)
+
+
+# ---------------------------------------------------------------------------
+# engine level: parity, handshakes, accounting
+# ---------------------------------------------------------------------------
+
+
+def test_cached_engine_all_full_matches_uncached_bitwise(dit_setup):
+    """The acceptance parity: a cache-wired engine running a plain registry
+    table (cache_block spec, no shallow rows) reproduces the uncached
+    engine's build() scan BIT-identically at fp32."""
+    cfg, params = dit_setup
+    x_T = _x(cfg)
+    plain = build_engine(cfg, params, VPLinear(), 2, 0)
+    cached = _engine(cfg, params)
+    spec = EngineSpec(solver="unipc", nfe=5, order=2)
+    ref = np.asarray(plain.build(spec)(x_T))
+    got = np.asarray(cached.build(replace(spec, cache_block=1))(x_T))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_cached_plan_all_full_matches_uncached_bitwise(dit_setup):
+    """Same parity through a tuned plan whose cache_depth is all zero (the
+    column exists, every row is full)."""
+    cfg, params = dit_setup
+    x_T = _x(cfg)
+    plain = build_engine(cfg, params, VPLinear(), 2, 0)
+    cached = _engine(cfg, params)
+    plan = SolverPlan.default(4, order=2)
+    plan0 = replace(plan, cache_depth=[0] * 4)
+    sched = VPLinear()
+    spec = EngineSpec(solver="unipc", nfe=4, order=2)
+    ref = np.asarray(plain.build(spec, table=plain.compile(
+        spec, table=plan.compile(sched)))(x_T))
+    cspec = replace(spec, cache_block=1)
+    got = np.asarray(cached.build(cspec, table=cached.compile(
+        cspec, table=plan0.compile(sched)))(x_T))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_shallow_plan_diverges_but_stays_finite(dit_setup):
+    """A plan with real shallow steps must actually change the trajectory
+    (caching is on) while staying finite (it is a sane approximation)."""
+    cfg, params = dit_setup
+    x_T = _x(cfg)
+    cached = _engine(cfg, params)
+    sched = VPLinear()
+    spec = EngineSpec(solver="unipc", nfe=4, order=2, cache_block=1)
+    full = np.asarray(cached.build(spec, table=cached.compile(
+        spec, table=_cached_plan(4).compile(sched)))(x_T))
+    ref_spec = EngineSpec(solver="unipc", nfe=4, order=2)
+    plain = build_engine(cfg, params, VPLinear(), 2, 0)
+    ref = np.asarray(plain.build(ref_spec)(x_T))
+    assert np.isfinite(full).all()
+    assert not np.array_equal(full, ref)
+
+
+def test_spec_and_engine_handshakes():
+    cfg = get_config("dit-cifar").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    # spec-level: guidance is incompatible with the single-batch cache
+    with pytest.raises(ValueError, match="unconditional"):
+        EngineSpec(solver="unipc", nfe=4, cache_block=1,
+                   cfg_scale=2.0).resolve()
+    with pytest.raises(ValueError, match=">= 0"):
+        EngineSpec(solver="unipc", nfe=4, cache_block=-1).resolve()
+    # wiring-level: family, guidance, and boundary bounds
+    with pytest.raises(ValueError, match="unconditional"):
+        build_engine(cfg, params, VPLinear(), 2, 0, want_cfg=True,
+                     cache_block=1)
+    with pytest.raises(ValueError, match="1..1"):
+        build_engine(cfg, params, VPLinear(), 2, 0,
+                     cache_block=cfg.num_layers)
+    # engine-level: cached spec on an unwired engine
+    plain = build_engine(cfg, params, VPLinear(), 2, 0)
+    with pytest.raises(ValueError, match="no .*cached eps-net"):
+        plain.build(EngineSpec(solver="unipc", nfe=4, cache_block=1))
+    # boundary mismatch between spec and wiring is caught, not served
+    cfg4 = replace(cfg, num_layers=4)
+    params4 = api.init_params(cfg4, jax.random.PRNGKey(0))
+    wired = build_engine(cfg4, params4, VPLinear(), 2, 0, cache_block=2)
+    with pytest.raises(ValueError, match="wired for cache boundary 2"):
+        wired.build(EngineSpec(solver="unipc", nfe=4, cache_block=1))
+
+
+def test_cached_plan_on_uncached_spec_is_rejected(dit_setup):
+    """A cached plan's table must not silently serve with caching off."""
+    cfg, params = dit_setup
+    cached = _engine(cfg, params)
+    spec = EngineSpec(solver="unipc", nfe=4, order=2)  # cache_block=0
+    tab = cached.compile(replace(spec, cache_block=1),
+                         table=_cached_plan(4).compile(VPLinear()))
+    with pytest.raises(ValueError, match="silently paying full evals"):
+        cached.build(spec, table=tab)
+
+
+def test_plan_cache_depth_validation_and_json_round_trip(tmp_path):
+    good = SolverPlan.default(4)
+    with pytest.raises(ValueError, match="cache_depth"):
+        replace(good, cache_depth=[1, 0])                 # wrong length
+    with pytest.raises(ValueError, match=">= 0"):
+        replace(good, cache_depth=[0, -1, 0, 0])
+    with pytest.raises(ValueError, match="share one k"):
+        replace(good, cache_depth=[1, 2, 0, 0])           # mixed boundaries
+    plan = replace(good, cache_depth=[0, 1, 1, 0])
+    assert plan.cache_block == 1
+    assert good.cache_block == 0
+    path = str(tmp_path / "p.json")
+    plan.save(path)
+    loaded = SolverPlan.load(path)
+    assert loaded.to_dict() == plan.to_dict()
+    assert loaded.cache_depth == [0, 1, 1, 0]
+    # the lowered reuse column: init row full, then the 0/1 schedule
+    tab = loaded.compile(VPLinear())
+    np.testing.assert_array_equal(tab.model_cols["cache_reuse"],
+                                  [0.0, 0.0, 1.0, 1.0, 0.0])
+
+
+def test_eval_cost_accounting_agrees_everywhere(dit_setup):
+    """plan.eval_cost == eval_cost_rows sum == program.span_cost, and a
+    shallow plan lands strictly below its NFE floor."""
+    cfg, params = dit_setup
+    plan = _cached_plan(4, k=1)                  # 3 shallow of 5 evals
+    n_blocks = cfg.num_layers                    # reduced dit-cifar: 2
+    want = 5 - 3 * (1 - 1 / n_blocks)            # 3.5 at k=1, L=2
+    assert plan.eval_cost(n_blocks) == pytest.approx(want)
+    assert plan.eval_cost(n_blocks) < plan.nfe + 1
+    rows = {"t": np.zeros(5),
+            "mc_cache_reuse": np.array([0.0, 0.0, 1.0, 1.0, 1.0])}
+    cost = eval_cost_rows(rows, cache_block=1, n_blocks=n_blocks)
+    assert cost.sum() == pytest.approx(want)
+    # uncached rows cost 1.0 each regardless of flags
+    np.testing.assert_array_equal(
+        eval_cost_rows(rows, cache_block=0, n_blocks=n_blocks), np.ones(5))
+    engine = _engine(cfg, params)
+    spec = EngineSpec(solver="unipc", nfe=4, order=2, cache_block=1)
+    program = engine.build_step(spec, table=engine.compile(
+        spec, table=plan.compile(VPLinear())))
+    assert program.span_cost(0, program.n_rows) == pytest.approx(want)
+    assert program.cache is not None and program.cache.block == 1
+
+
+# ---------------------------------------------------------------------------
+# serving level: cached banks through the scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_staggered_cached_bank_matches_uniform_cached_scans(dit_classless):
+    """Cached-bank acceptance: staggered requests served from ONE compiled
+    cached program match each tier's own uniform cached build() scan, and
+    each completion's eval_cost is its tier's evals-per-latent."""
+    cfg, params = dit_classless
+    engine = _engine(cfg, params, batch=2)
+    sched_vp = VPLinear()
+    plans = {"fast": _cached_plan(3, k=1),
+             "quality": SolverPlan.default(5, order=2)}   # uncached tier
+    common = dict(solver="unipc", cache_block=1)
+    tier_specs = {n: EngineSpec(nfe=p.nfe, order=max(p.orders), **common)
+                  for n, p in plans.items()}
+    tables = {n: p.compile(sched_vp) for n, p in plans.items()}
+    program = engine.build_bank(tier_specs, tables)
+    sched = SlotScheduler(program, 2, (cfg.patch_tokens, cfg.latent_dim))
+    x_T = {r: np.asarray(_x(cfg, batch=1, seed=10 + r)[0]) for r in range(4)}
+    names = ["fast", "quality", "fast", "quality"]
+    reqs = [Request(rid=r, arrival=float(a), x_T=x_T[r], tier=names[r])
+            for r, a in zip(range(4), [0, 0, 2, 5])]
+    run_trace(sched, reqs)
+    got = {c.rid: c for c in sched.completions}
+    assert len(got) == 4
+    for r, name in enumerate(names):
+        ref = np.asarray(engine.build(
+            tier_specs[name], table=engine.compile(
+                tier_specs[name], table=tables[name]))(
+            jnp.asarray(x_T[r])[None]))[0]
+        # untrained data-prediction latents sit at O(600): 1e-3 absolute is
+        # fp32 ULP-level agreement between the scan and per-slot step paths
+        np.testing.assert_allclose(got[r].latent, ref, atol=1e-3, rtol=0,
+                                   err_msg=f"rid={r} tier={name}")
+        want = plans[name].eval_cost(cfg.num_layers)
+        assert got[r].eval_cost == pytest.approx(want)
+    # the cached tier really is below its floor; the plain tier is at it
+    assert got[0].eval_cost < got[0].evals
+    assert got[1].eval_cost == got[1].evals
+
+
+def test_slot_reuse_does_not_leak_cache_between_requests(dit_setup):
+    """A request admitted into a slot a previous request just vacated must
+    see a zeroed cache: same result as being served alone."""
+    cfg, params = dit_setup
+    engine = _engine(cfg, params, batch=1)
+    spec = EngineSpec(solver="unipc", nfe=3, order=2, cache_block=1)
+    tab = engine.compile(spec, table=_cached_plan(3).compile(VPLinear()))
+
+    def serve(reqs):
+        sched = SlotScheduler(engine.build_step(spec, table=tab), 1,
+                              (cfg.patch_tokens, cfg.latent_dim))
+        run_trace(sched, reqs)
+        return {c.rid: c.latent for c in sched.completions}
+
+    probe = np.asarray(_x(cfg, batch=1, seed=9)[0])
+    solo = serve([Request(rid=1, x_T=probe)])
+    behind = serve([Request(rid=0, x_T=np.asarray(_x(cfg, 1, 8)[0])),
+                    Request(rid=1, x_T=probe, arrival=4.0)])
+    np.testing.assert_array_equal(solo[1], behind[1])
+
+
+def test_bank_rejects_mixed_cache_boundaries(dit_setup):
+    cfg, params = dit_setup
+    engine = _engine(cfg, params)
+    specs = {"a": EngineSpec(solver="unipc", nfe=4, cache_block=1),
+             "b": EngineSpec(solver="unipc", nfe=4, cache_block=0)}
+    with pytest.raises(ValueError, match="agree on cache_block"):
+        engine.build_bank(specs)

@@ -1,0 +1,123 @@
+"""Hypothesis property tests for the step-row machinery under tuned plans
+(ISSUE 6 satellite): `augment_step_rows` row-gather identity, `stack_step_rows`
+span bookkeeping, and plan JSON round-trip bit-exactness — all under random
+NFE / per-step order / tier mixes, with and without a cache schedule.
+
+Skipped (not errored) when hypothesis is absent so the suite collects on
+minimal installs; `pip install -e .[test]` pulls it in (pyproject.toml).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.coeffs import augment_step_rows, stack_step_rows  # noqa: E402
+from repro.diffusion import VPLinear  # noqa: E402
+from repro.tuning import SolverPlan  # noqa: E402
+
+VP = VPLinear()
+
+# table columns compared for bit-exactness after a round trip
+TABLE_COLS = ("base_x", "base_m0", "w_pred", "w_corr_prev", "w_corr_new",
+              "use_corrector", "out_scale", "lambdas", "alphas", "sigmas",
+              "timesteps")
+# augmented-row keys whose body rows must mirror the table columns
+ROW_OF_COL = {"base_x": "base_x", "base_m0": "base_m0", "w_pred": "w_pred",
+              "w_corr_prev": "w_corr_prev", "w_corr_new": "w_corr_new",
+              "use_c": "use_corrector", "out_scale": "out_scale"}
+
+
+@st.composite
+def plans(draw, cached=None):
+    """A random valid SolverPlan; `cached` forces the cache axis on/off
+    (None draws it) so tier mixes can share one model-column set."""
+    nfe = draw(st.integers(2, 10))
+    per_step = lambda elems: st.lists(elems, min_size=nfe, max_size=nfe)
+    knots = sorted(draw(st.lists(
+        st.floats(0.01, 0.99, allow_nan=False), unique=True,
+        min_size=nfe - 1, max_size=nfe - 1)))
+    if cached is None:
+        cached = draw(st.booleans())
+    depth = (draw(per_step(st.sampled_from([0, 1]))) if cached else None)
+    return SolverPlan(
+        nfe=nfe, knots=knots,
+        orders=draw(per_step(st.integers(1, 3))),
+        corrector=draw(per_step(st.booleans())),
+        variants=draw(per_step(st.sampled_from(["bh1", "bh2"]))),
+        cache_depth=depth)
+
+
+@given(plans())
+@settings(max_examples=40, deadline=None)
+def test_augmented_rows_gather_back_to_the_table(plan):
+    """Row 0 is the identity init row; rows 1..M are the table's own columns
+    bit-for-bit; model columns keep their native (M+1,) layout."""
+    tab = plan.compile(VP)
+    rows = augment_step_rows(tab)
+    M = plan.nfe
+    for key, col in ROW_OF_COL.items():
+        np.testing.assert_array_equal(rows[key][1:], getattr(tab, col),
+                                      err_msg=key)
+    assert rows["base_x"][0] == 1.0 and rows["base_m0"][0] == 0.0
+    for key in ("w_pred", "w_corr_prev", "w_corr_new", "use_c", "out_scale"):
+        assert not np.any(rows[key][0]), key
+    np.testing.assert_array_equal(rows["t"], tab.timesteps)
+    assert all(len(rows[k]) == M + 1 for k in rows)
+    if plan.cache_depth is not None:
+        np.testing.assert_array_equal(rows["mc_cache_reuse"],
+                                      tab.model_cols["cache_reuse"])
+        assert rows["mc_cache_reuse"][0] == 0.0  # the init eval seeds, fully
+
+
+@given(st.lists(st.tuples(st.sampled_from(["fast", "mid", "hq", "xl"]),
+                          st.booleans()),
+                min_size=1, max_size=4, unique_by=lambda nb: nb[0]),
+       st.data())
+@settings(max_examples=25, deadline=None)
+def test_stacked_spans_recover_each_tier_exactly(names_cached, data):
+    """Tier spans are contiguous, cover the stack, and slicing a tier's span
+    out of the stacked rows reproduces that tier's own augmented rows
+    (difference columns zero-padded to the widest tier)."""
+    cached = any(c for _, c in names_cached)  # one column set per bank
+    tabs = {name: data.draw(plans(cached=cached)).compile(VP)
+            for name, _ in names_cached}
+    stacked, tiers = stack_step_rows(tabs)
+    assert list(tiers) == list(tabs)
+    offset = 0
+    K = max(t.w_pred.shape[1] for t in tabs.values())
+    for name, tab in tabs.items():
+        off, n = tiers[name]
+        assert off == offset and n == len(tab.timesteps)
+        offset += n
+        own = augment_step_rows(tab)
+        for key in ("w_pred", "w_corr_prev"):
+            pad = K - own[key].shape[1]
+            if pad:
+                own[key] = np.pad(own[key], ((0, 0), (0, pad)))
+        for key, v in own.items():
+            np.testing.assert_array_equal(stacked[key][off:off + n], v,
+                                          err_msg=f"{name}/{key}")
+    assert all(len(v) == offset for v in stacked.values())
+
+
+@given(plans())
+@settings(max_examples=40, deadline=None)
+def test_plan_json_round_trip_is_bit_exact(plan):
+    """to_dict -> json text -> from_dict compiles to the SAME table bit for
+    bit (floats survive JSON exactly: python json round-trips doubles)."""
+    loaded = SolverPlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert loaded.to_dict() == plan.to_dict()
+    assert loaded.cache_depth == plan.cache_depth
+    assert loaded.cache_block == plan.cache_block
+    a, b = plan.compile(VP), loaded.compile(VP)
+    for col in TABLE_COLS:
+        np.testing.assert_array_equal(getattr(a, col), getattr(b, col),
+                                      err_msg=col)
+    assert sorted((a.model_cols or {})) == sorted((b.model_cols or {}))
+    for k in (a.model_cols or {}):
+        np.testing.assert_array_equal(a.model_cols[k], b.model_cols[k],
+                                      err_msg=k)

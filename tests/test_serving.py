@@ -396,6 +396,85 @@ def test_per_tier_metrics_reported(gaussian_dpm):
 
 
 # ---------------------------------------------------------------------------
+# scheduler edge cases (ISSUE 6 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_burst_arrivals_beyond_slots_serve_fifo(gaussian_dpm):
+    """3x-slots requests all arriving at tick 0: admission drains the queue
+    strictly FIFO (rid order), nothing is dropped, and the queue backlog
+    shrinks only as slots free."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=4))
+    sched = SlotScheduler(program, slots=2, sample_shape=(8,))
+    for r in range(6):
+        sched.submit(Request(rid=r, x_T=_x_T(r)))
+    sched.tick()
+    assert sched.active == 2 and len(sched.queue) == 4
+    # mid-flight ticks keep the backlog: no slot frees before n_rows ticks
+    for _ in range(program.n_rows - 1):
+        sched.tick()
+    assert len(sched.completions) == 2 and len(sched.queue) == 4
+    sched.tick()                      # freed slots refill on the NEXT tick
+    assert sched.active == 2 and len(sched.queue) == 2
+    sched.drain()
+    assert [c.rid for c in sched.completions] == list(range(6))
+    finishes = [c.finish_tick for c in sched.completions]
+    assert finishes == sorted(finishes)
+
+
+def test_nfe_budget_one_request_completes(gaussian_dpm):
+    """The minimum budget: nfe=1 compiles to 2 rows (init + one step) and a
+    request consumes exactly those two evals."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    spec = EngineSpec(solver="unipc", order=1, nfe=1)
+    program = eng.build_step(spec)
+    assert program.n_rows == 2
+    sched = SlotScheduler(program, slots=2, sample_shape=(8,))
+    m = run_trace(sched, [Request(rid=0, x_T=_x_T(0))])
+    assert m.completed == 1 and m.ticks == 2
+    c = sched.completions[0]
+    assert c.evals == 2 and c.latency_ticks == 2
+    ref = np.asarray(eng.build(spec)(jnp.asarray(_x_T(0))[None, :]))[0]
+    np.testing.assert_allclose(c.latent, ref, atol=1e-5, rtol=0)
+
+
+def test_empty_trace_and_single_tier_metrics(gaussian_dpm):
+    """Zero-completion metrics must not divide by zero, and a bank trace
+    that exercises only one tier reports per_tier for that tier alone."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_bank(_tier_specs())
+    sched = SlotScheduler(program, slots=2, sample_shape=(8,))
+    m0 = run_trace(sched, [])
+    assert m0.completed == 0 and m0.ticks == 0 and m0.evals == 0
+    assert m0.occupancy == 0.0 and m0.throughput_rps == 0.0
+    assert m0.per_tier is None
+    m1 = run_trace(sched, [Request(rid=0, x_T=_x_T(0), tier="fast"),
+                           Request(rid=1, x_T=_x_T(1), tier="fast")])
+    assert m1.completed == 2
+    assert set(m1.per_tier) == {"fast"}
+    assert m1.per_tier["fast"]["completed"] == 2
+
+
+def test_trace_clock_resets_on_scheduler_reuse(gaussian_dpm):
+    """A second trace on the same scheduler restarts the arrival clock at 0:
+    its metrics cover only the new run (counter snapshots) and its
+    completions' latencies are not inflated by the first run's clock."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=4))
+    sched = SlotScheduler(program, slots=2, sample_shape=(8,))
+    m1 = run_trace(sched, [Request(rid=0, x_T=_x_T(0), arrival=3.0)])
+    assert sched.clock is None        # the driver always restores tick time
+    m2 = run_trace(sched, [Request(rid=1, x_T=_x_T(1), arrival=0.0)])
+    assert m1.completed == m2.completed == 1
+    assert m2.ticks == program.n_rows == m2.evals
+    lat = {c.rid: c.latency_ticks for c in sched.completions}
+    assert lat[0] == program.n_rows   # measured from ITS arrival, not tick 0
+    assert lat[1] == program.n_rows   # run-2 clock restarted at 0
+    assert len(sched.completions) == 2
+
+
+# ---------------------------------------------------------------------------
 # 1-device mesh under SERVE_RULES: bit-identical to no mesh context
 # ---------------------------------------------------------------------------
 
