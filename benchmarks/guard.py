@@ -8,7 +8,17 @@ Checks:
 * BENCH_serve.json — for every (arch, cfg_scale) pair, continuous-over-gang
   throughput ratio must stay >= --min-serve-ratio (default 1.1; the
   committed trace sits at ~1.18, so the guard allows drift but not a
-  collapse of the continuous-batching win).
+  collapse of the continuous-batching win). The async_runs section
+  (DESIGN.md §13) must be present, with pipelined (depth-2) throughput
+  >= --min-async-ratio x the synchronous depth-1 throughput per arch, and
+  the synchronous host bookkeeping overhead <= --max-host-frac of the
+  measured tick wall (the pipelined-serving acceptance criteria). The
+  async floor defaults to 0.95: on runtimes without async dispatch (CPU,
+  where the step executes inline in the dispatch call) the expectation is
+  parity within noise, and a real pipelining regression (a sync added to
+  the hot loop) lands far below it. The host-frac cap defaults to 0.5,
+  sized for the reduced-scale CPU tick (~2 ms at dit-cifar, where fixed
+  bookkeeping is proportionally largest; dit-i256 sits under 0.1).
 * BENCH_tuning.json — must be present (the tuning acceptance trajectory is
   committed alongside the serving one); every tuned plan must score <= its
   baseline, and NFE <= 8 rows must improve strictly.
@@ -34,7 +44,9 @@ def fail(msg: str) -> None:
 
 
 def check_serve(path: str = "BENCH_serve.json",
-                min_ratio: float = 1.1) -> int:
+                min_ratio: float = 1.1,
+                min_async_ratio: float = 0.95,
+                max_host_frac: float = 0.5) -> int:
     try:
         with open(path) as f:
             data = json.load(f)
@@ -67,6 +79,51 @@ def check_serve(path: str = "BENCH_serve.json",
         if ratio < min_ratio:
             fail(f"continuous-batching throughput ratio dropped to "
                  f"{ratio:.3f} < {min_ratio} for {arch}/cfg{cfg}")
+        checked += 1
+    # pipelined serving acceptance (DESIGN.md §13): async (depth >= 2) must
+    # not lose throughput vs the synchronous loop at saturating arrival, and
+    # synchronous host bookkeeping must stay a bounded fraction of tick time
+    async_runs = data.get("async_runs")
+    if not async_runs:
+        fail(f"{path} carries no async_runs — the pipelined-serving "
+             f"trajectory must stay committed (run `python -m benchmarks."
+             f"run --only serve`)")
+    by_arch = {}
+    for run in async_runs:
+        by_arch.setdefault(run.get("arch"), {})[run.get("pipeline_depth")] = run
+    for arch, depths in sorted(by_arch.items()):
+        sync = depths.get(1)
+        asyn = next((r for d, r in sorted(depths.items()) if d and d >= 2),
+                    None)
+        if sync is None or asyn is None:
+            fail(f"{path} async_runs {arch}: needs a depth-1 and a "
+                 f"depth>=2 run, has depths {sorted(depths)}")
+        tputs = (sync.get("throughput_rps"), asyn.get("throughput_rps"))
+        if any(not isinstance(v, (int, float)) or v <= 0 for v in tputs):
+            fail(f"{path} async_runs {arch}: throughput_rps missing or "
+                 f"non-positive ({tputs}) — artifact schema drift?")
+        ratio = tputs[1] / tputs[0]
+        status = "ok" if ratio >= min_async_ratio else "FAIL"
+        print(f"serve {arch}: async(depth {asyn['pipeline_depth']})/sync "
+              f"throughput ratio {ratio:.3f} (floor {min_async_ratio}) "
+              f"{status}")
+        if ratio < min_async_ratio:
+            fail(f"pipelined serving lost throughput vs the synchronous "
+                 f"loop at {arch}: ratio {ratio:.3f} < {min_async_ratio}")
+        host_us, tick_s = (sync.get("host_us_per_tick"), sync.get("tick_s"))
+        if not all(isinstance(v, (int, float)) and v > 0
+                   for v in (host_us, tick_s)):
+            fail(f"{path} async_runs {arch}: host_us_per_tick/tick_s "
+                 f"missing or non-positive (host_us={host_us}, "
+                 f"tick_s={tick_s}) — artifact schema drift?")
+        frac = host_us / (tick_s * 1e6)
+        status = "ok" if frac <= max_host_frac else "FAIL"
+        print(f"serve {arch}: host overhead {host_us:.0f}us/tick = "
+              f"{frac:.3f} of tick wall (cap {max_host_frac}) {status}")
+        if frac > max_host_frac:
+            fail(f"host bookkeeping overhead at {arch} is {frac:.3f} of "
+                 f"tick time > {max_host_frac} — the scheduler's host path "
+                 f"regressed")
         checked += 1
     return checked
 
@@ -180,10 +237,18 @@ def check_model(path: str = "BENCH_model.json") -> int:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--min-serve-ratio", type=float, default=1.1)
+    ap.add_argument("--min-async-ratio", type=float, default=0.95,
+                    help="floor on pipelined/synchronous throughput at "
+                         "saturating arrival (async must not lose)")
+    ap.add_argument("--max-host-frac", type=float, default=0.5,
+                    help="cap on synchronous host bookkeeping as a fraction "
+                         "of measured tick wall time")
     ap.add_argument("--root", default=".")
     args = ap.parse_args()
     os.chdir(args.root)
-    n = check_serve(min_ratio=args.min_serve_ratio)
+    n = check_serve(min_ratio=args.min_serve_ratio,
+                    min_async_ratio=args.min_async_ratio,
+                    max_host_frac=args.max_host_frac)
     n += check_tuning()
     n += check_model()
     print(f"bench guard ok ({n} checks)")

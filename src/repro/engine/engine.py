@@ -85,6 +85,16 @@ class StepProgram:
     tau and stepped through rows 0..n_rows-1 reproduces the uniform
     `build()` scan for its own (solver, order, nfe, seed, cfg-scale)
     exactly.
+
+    step_flight(state, meta[, g, extras]) -> (state, meta, done) is the
+    async-serving variant (DESIGN.md §13): the per-slot bookkeeping lives
+    on device as `meta`, a (4, B) int32 array of [row, offset, budget, busy]
+    rows (`init_meta`). The program derives each slot's table index from its
+    own counters (`offset + row` while busy, the parked init row otherwise),
+    advances them, and emits the per-slot `done` mask — the tick a busy slot
+    executes its last budgeted row. The host never rebuilds `idx`: it only
+    scatters admissions into `meta` and reads the tiny done mask back, which
+    is what lets the serving scheduler keep several ticks in flight.
     """
 
     step: Callable
@@ -101,6 +111,9 @@ class StepProgram:
     # 1.0 everywhere without caching, cache_block/n_blocks on reuse rows.
     cache: Optional[CacheSpec] = None
     row_cost: Optional[np.ndarray] = None
+    # the on-device-bookkeeping step (same compiled math as `step`, plus the
+    # meta counters and done mask); always built by `_step_program`
+    step_flight: Optional[Callable] = None
 
     def resolve_tier(self, tier: Optional[str]) -> Tuple[int, int]:
         """(row_offset, rows_to_run) for a request's tier tag. Single-plan
@@ -146,6 +159,15 @@ class StepProgram:
         """Per-slot guidance scales, seeded with the spec's nominal scale."""
         return jnp.full((slots,), float(self.spec.cfg_scale or 0.0),
                         jnp.float32)
+
+    def init_meta(self, slots: int):
+        """Zeroed on-device slot counters for `step_flight`: a (4, slots)
+        int32 array of [row, offset, budget, busy] rows. Every slot starts
+        idle (busy = 0, parked on the init row); budget is seeded with the
+        full table so an un-admitted slot can never trip the done mask."""
+        meta = np.zeros((4, slots), np.int32)
+        meta[2] = self.n_rows
+        return jnp.asarray(meta)
 
 
 @dataclass
@@ -430,7 +452,7 @@ class SamplerEngine:
             C = state[2]
             return x, E, shard(C, "batch", *([None] * (C.ndim - 1)))
 
-        def step(state, idx, g=None, extras=None):
+        def _apply(state, idx, g, extras):
             state = _shard_state(*state)
             kw = dict(extras) if extras else {}
             if uses_cfg:
@@ -440,6 +462,27 @@ class SamplerEngine:
             state = core_step(state, idx, model_kwargs=kw or None)
             return _shard_state(*state)
 
+        def step(state, idx, g=None, extras=None):
+            return _apply(state, idx, g, extras)
+
+        def step_flight(state, meta, g=None, extras=None):
+            # on-device bookkeeping (DESIGN.md §13): the slot's table index
+            # is derived from its own counters, never shipped from the host
+            row, off, budget, busy = meta
+            live = busy > 0
+            idx = jnp.where(live, off + row, 0).astype(jnp.int32)
+            state = _apply(state, idx, g, extras)
+            row = row + 1
+            done = live & (row >= budget)
+            live = live & ~done
+            # finished / idle slots park back on the init row (idx 0, an
+            # identity update) so the next tick leaves their latent intact
+            # until the trailing readback collects it
+            meta = jnp.stack([jnp.where(live, row, 0),
+                              jnp.where(live, off, 0),
+                              budget, live.astype(jnp.int32)])
+            return state, meta, done
+
         if jit:
             # donate the slot state (arg 0): the tick's (x, E) update writes
             # into the previous tick's buffers instead of fresh HBM — safe
@@ -447,10 +490,16 @@ class SamplerEngine:
             # step's return value (bit-identity pinned in tests/test_serving).
             # For cached programs the feature cache C rides in the same
             # donated tuple: it is per-slot trajectory state exactly like the
-            # eval ring, so it must live (and be recycled) with it.
-            step = (jax.jit(step, donate_argnums=(0,)) if donate
-                    else jax.jit(step))
-        return StepProgram(step=step, n_rows=n_rows,
+            # eval ring, so it must live (and be recycled) with it. The
+            # flight variant additionally donates the (tiny) meta counters,
+            # which live and recycle with the state across in-flight ticks.
+            if donate:
+                step = jax.jit(step, donate_argnums=(0,))
+                step_flight = jax.jit(step_flight, donate_argnums=(0, 1))
+            else:
+                step = jax.jit(step)
+                step_flight = jax.jit(step_flight)
+        return StepProgram(step=step, step_flight=step_flight, n_rows=n_rows,
                            table=tab0, spec=spec0, uses_cfg=uses_cfg,
                            ring=rows_np["w_pred"].shape[-1] + 1,
                            tiers=dict(spans) if tiers else None,

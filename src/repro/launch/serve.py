@@ -84,7 +84,8 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                     solver="unipc", fused_update=True, cfg_scale=0.0,
                     cfg_schedule="constant", thresholding=False, seed=0,
                     arrival_rate=None, trace=None, requests=None,
-                    plan_bank=None, tiers=None, eval_dtype="float32"):
+                    plan_bank=None, tiers=None, eval_dtype="float32",
+                    pipeline_depth=2):
     """Continuous-batching diffusion serving through the engine's per-slot
     step program (`SamplerEngine.build_step` + `serving.SlotScheduler`):
     `batch` slots, requests admitted the tick a slot frees, per-request
@@ -101,6 +102,12 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     same scheduler). The step program is compiled ahead of time
     (`jit(...).lower(...).compile()`), so compile and steady-state serving
     are reported separately. Returns the finished latents ordered by rid.
+
+    `pipeline_depth` (DESIGN.md §13) is how many ticks the scheduler keeps
+    in flight: the default 2 overlaps host bookkeeping and admission with
+    device execution (JAX async dispatch, trailing-stream readback of
+    finished latents); 1 is the synchronous legacy loop. Finished latents
+    and tick-denominated metrics are bit-identical across depths.
 
     Quality tiers (DESIGN.md §10): `plan_bank` (a JSON bank of tuned
     `SolverPlan`s from `repro.launch.tune --bank`) or `tiers` (a list of
@@ -177,7 +184,8 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     # regardless of which slot the scheduler admits it into
     sched = SlotScheduler(program, batch,
                           (cfg.patch_tokens, cfg.latent_dim),
-                          extras_init={"class_ids": NULL_CLASS_ID})
+                          extras_init={"class_ids": NULL_CLASS_ID},
+                          pipeline_depth=pipeline_depth)
     compile_s = sched.aot_compile()
     if trace is not None:
         reqs = load_trace(trace)
@@ -198,7 +206,7 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     m = run_trace(sched, reqs)
     mode = (f"bank[{','.join(tier_names)}]" if tier_names
             else f"{solver} nfe={nfe} order={order}")
-    print(f"diffusion slots={batch} {mode} "
+    print(f"diffusion slots={batch} {mode} depth={m.pipeline_depth} "
           f"cfg={cfg_scale} fused_update={fused_update} eval={eval_dtype}: "
           f"compile {compile_s:.2f}s (AOT), tick {m.tick_s*1e3:.1f} ms, "
           f"{m.completed}/{m.requests} requests, "
@@ -265,6 +273,11 @@ def main():
     ap.add_argument("--requests", type=int, default=None,
                     help="diffusion serving: request count for "
                          "--arrival-rate traffic (default 4x batch)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="diffusion serving: ticks kept in flight "
+                         "(DESIGN.md §13); 1 = synchronous loop, >= 2 "
+                         "overlaps host bookkeeping with device execution; "
+                         "finished latents are bit-identical at any depth")
     bank = ap.add_mutually_exclusive_group()
     bank.add_argument("--plan-bank", default=None,
                       help="diffusion serving: JSON bank of tuned SolverPlans"
@@ -303,6 +316,11 @@ def main():
     if args.arrival_rate is not None and args.arrival_rate <= 0:
         ap.error(f"--arrival-rate must be > 0 requests per tick, "
                  f"got {args.arrival_rate}")
+    if family != "dit" and args.pipeline_depth != 2:
+        ap.error(f"--pipeline-depth configures the diffusion serving loop; "
+                 f"--arch {args.arch} is family '{family}'")
+    if args.pipeline_depth < 1:
+        ap.error(f"--pipeline-depth must be >= 1, got {args.pipeline_depth}")
     if family == "dit":
         serve_diffusion(args.arch, reduced=not args.full, batch=args.batch,
                         nfe=nfe, order=order, solver=solver,
@@ -313,7 +331,8 @@ def main():
                         arrival_rate=args.arrival_rate, trace=args.trace,
                         requests=args.requests, plan_bank=args.plan_bank,
                         tiers=(args.tiers.split(",") if args.tiers else None),
-                        eval_dtype=args.eval_dtype)
+                        eval_dtype=args.eval_dtype,
+                        pipeline_depth=args.pipeline_depth)
         return
     serve(args.arch, reduced=not args.full, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,

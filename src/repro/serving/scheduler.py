@@ -7,12 +7,26 @@ seed / cfg-scale / NFE-budget bookkeeping, and finished-latent emission.
 
 One `tick()` = one batched model eval: admit queued requests into free slots
 (write the request's initial latent, zero the slot's eval ring, set its
-guidance scale), gather the per-slot row indices, call the step function once
-for the whole batch, then emit every slot that just executed its last row.
-Because admission resets the ring and the zero-padded warm-up rows null empty
-ring slots, a request admitted mid-flight reproduces the uniform `build()`
-scan for its own (solver, order, nfe, seed, cfg-scale) exactly — the parity
-property `tests/test_serving.py` pins across solvers.
+guidance scale), dispatch the step program once for the whole batch, then
+emit every slot that just executed its last row. Because admission resets the
+ring and the zero-padded warm-up rows null empty ring slots, a request
+admitted mid-flight reproduces the uniform `build()` scan for its own
+(solver, order, nfe, seed, cfg-scale) exactly — the parity property
+`tests/test_serving.py` pins across solvers.
+
+The dispatched program is `StepProgram.step_flight` (DESIGN.md §13): the
+per-slot row / budget / busy counters live on device, so the host never
+ships a rebuilt `idx` vector — it only scatters admissions in and reads the
+per-slot done mask back. Completion readback is a *trailing stream*: each
+tick with predicted completions issues ONE batched gather of the finished
+slots' latents plus an async host copy, and the concrete values are consumed
+`pipeline_depth - 1` ticks later. `pipeline_depth=1` (the default) is the
+synchronous loop — dispatch, then consume the same tick's readback before
+returning — while depth >= 2 keeps that many ticks in flight, overlapping
+host bookkeeping and admission with device execution (JAX async dispatch).
+Both depths run the identical compiled program over the identical admission
+schedule, so finished latents, completion order, and tick-clock metrics are
+bit-identical across depths (`tests/test_async_serving.py`).
 
 Idle slots park on row 0 (an identity update), so the batch shape — and the
 compiled program — never changes. `gang=True` degrades admission to
@@ -22,8 +36,10 @@ baseline the benchmarks compare continuous batching against.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Deque, List, Optional, Tuple
 
 import jax
@@ -31,6 +47,45 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..engine.engine import StepProgram
+
+
+@partial(jax.jit, static_argnames=("has_cache", "uses_cfg"))
+def _apply_admission(state, meta, g, extras,
+                     mask, x_new, meta_new, g_new, ex_new,
+                     *, has_cache, uses_cfg):
+    """Fold one tick's admissions into the device state in ONE fixed-shape
+    dispatch: the host builds full-width (B-wide) masked update buffers in
+    numpy and this compiled apply selects them in. Shapes never depend on
+    how many slots admit, so the executable compiles once per (B, sample
+    shape) — eager per-count scatters would recompile for every distinct
+    admission count. Module-level so the compile cache is shared across
+    scheduler instances."""
+    x, E = state[0], state[1]
+    mx = mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+    x = jnp.where(mx, x_new, x)
+    mE = mask.reshape((1,) + mask.shape + (1,) * (E.ndim - 2))
+    E = jnp.where(mE, 0.0, E)  # fresh rings -> warm-up from order 1
+    if has_cache:
+        # a reused slot must not inherit the previous request's deep
+        # features; zeroed cache + the span's full init row reproduce the
+        # uniform cached scan exactly (DESIGN.md §12)
+        C = state[2]
+        mC = mask.reshape(mask.shape + (1,) * (C.ndim - 1))
+        state = (x, E, jnp.where(mC, 0.0, C))
+    else:
+        state = (x, E)
+    meta = jnp.where(mask[None, :], meta_new, meta)
+    if uses_cfg:
+        g = jnp.where(mask, g_new, g)
+    extras = {k: jnp.where(mask, ex_new[k], v) for k, v in extras.items()}
+    return state, meta, g, extras
+
+
+@jax.jit
+def _gather_rows(x, idx):
+    """Fixed-width readback gather: `idx` is padded to B so the compiled
+    shape is count-independent (one compile per (B, sample shape), ever)."""
+    return x[idx]
 
 
 @dataclass
@@ -85,19 +140,55 @@ class Completion:
         return self.finish_clock - self.arrival
 
 
+@dataclass
+class _Flight:
+    """One dispatched-but-not-yet-consumed tick: the trailing-readback
+    record. `mask` is the device done mask, `lat` the one batched gather of
+    the finished slots' latents (both with async host copies already in
+    flight); everything else is host metadata stamped at dispatch time, so
+    latency metrics are correct no matter how late the flight is consumed."""
+
+    tick: int
+    clock: float
+    mask: object = None                 # device (B,) bool done mask
+    lat: object = None                  # device (B, *sample) gather, padded
+                                        # to full width — rows [0, n_done)
+                                        # are the finished slots in order
+    slots: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    reqs: List[Request] = field(default_factory=list)
+    admits: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    budgets: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    offs: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+
+
 class SlotScheduler:
-    """Fixed-B continuous batching over a compiled `StepProgram`."""
+    """Fixed-B continuous batching over a compiled `StepProgram`.
+
+    `pipeline_depth` is the number of ticks kept in flight (DESIGN.md §13):
+    1 = the synchronous loop (every tick's readback is consumed before
+    `tick()` returns), N >= 2 dispatches up to N ticks ahead and consumes
+    readbacks N-1 ticks late. Admission bookkeeping is host-predicted (the
+    solver grid is deterministic), so the admission schedule — and therefore
+    every latent — is identical at every depth; the device done mask is
+    verified against the prediction at consumption time.
+    """
 
     def __init__(self, program: StepProgram, slots: int,
                  sample_shape: Tuple[int, ...], dtype=jnp.float32,
                  gang: bool = False, step_override=None,
-                 extras_init: Optional[dict] = None):
+                 extras_init: Optional[dict] = None,
+                 pipeline_depth: int = 1):
+        if pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, "
+                             f"got {pipeline_depth}")
         self.program = program
         self.slots = slots
         self.sample_shape = tuple(sample_shape)
         self.dtype = dtype
         self.gang = gang
+        self.pipeline_depth = int(pipeline_depth)
         self.state = program.init_state(slots, self.sample_shape, dtype)
+        self.meta = program.init_meta(slots)
         self.g = program.init_g(slots)
         # per-slot model conditioning (e.g. class ids): one (slots,) array
         # per key, seeded from extras_init and overwritten at admission from
@@ -112,6 +203,12 @@ class SlotScheduler:
         self._extras_init = dict(extras_init or {})
         self.queue: Deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * slots
+        # host mirror of the on-device meta counters, all vectorized numpy:
+        # needed for admission (which slots are free), completion prediction
+        # (which flight a request's latent rides home on), and the Completion
+        # metadata. The device counters stay authoritative for the compiled
+        # program's idx; the done mask is cross-checked at consumption.
+        self._busy = np.zeros(slots, bool)
         self.slot_row = np.zeros(slots, np.int64)    # next row (tier-relative)
         self.slot_admit = np.zeros(slots, np.int64)
         # plan-bank bookkeeping: each slot's row span in the stacked table.
@@ -124,7 +221,23 @@ class SlotScheduler:
         self.clock: Optional[float] = None  # trace driver's simulated time;
                                             # None -> clock follows ticks
         self.completions: List[Completion] = []
-        self._step = step_override if step_override is not None else program.step
+        self._inflight: Deque[_Flight] = deque()
+        # host-overhead accounting (benchmarks/bench_serve.py): _host_ns is
+        # tick() wall time minus time blocked on device readbacks and minus
+        # the step dispatch call itself (on runtimes without async dispatch
+        # the call executes inline, which is device time, not bookkeeping)
+        self._host_ns = 0
+        self._blocked_ns = 0
+        self._dispatch_ns = 0
+        # step_override replaces the dispatched flight step — signature
+        # step(state, meta, g, extras) -> (state, meta, done), and the done
+        # mask must be consistent with the meta counters (it is verified
+        # against the host prediction whenever a completion is consumed)
+        self._flight = (step_override if step_override is not None
+                        else program.step_flight)
+        self._np_dtype = np.dtype(dtype)
+        self._extras_np = {k: np.asarray(v).dtype
+                           for k, v in self.extras.items()}
 
     # -- queue / slots -------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -145,7 +258,19 @@ class SlotScheduler:
 
     @property
     def active(self) -> int:
-        return sum(r is not None for r in self.slot_req)
+        return int(self._busy.sum())
+
+    @property
+    def in_flight(self) -> int:
+        """Dispatched ticks whose readback has not been consumed yet."""
+        return len(self._inflight)
+
+    @property
+    def host_ns(self) -> int:
+        """Accumulated host-side bookkeeping time across tick() calls,
+        excluding time spent blocked on device readbacks and the step
+        dispatch call itself."""
+        return self._host_ns
 
     @property
     def occupancy(self) -> float:
@@ -153,93 +278,169 @@ class SlotScheduler:
         return (self.active_slot_ticks / (self.ticks * self.slots)
                 if self.ticks else 0.0)
 
-    def _draw(self, req: Request):
+    def _draw(self, req: Request) -> np.ndarray:
+        """The request's initial latent, as host numpy (it is written into
+        the full-width admission buffer, not shipped per-request)."""
         if req.x_T is not None:
-            return jnp.asarray(req.x_T, self.dtype)
+            return np.asarray(req.x_T, self._np_dtype)
         key = jax.random.PRNGKey(req.seed)
-        return jax.random.normal(key, self.sample_shape, self.dtype)
+        return np.asarray(jax.random.normal(key, self.sample_shape,
+                                            self.dtype))
 
     def _admit(self) -> None:
-        if self.gang and self.active:
+        if self.gang and self._busy.any():
             return  # sequential full-batch baseline: drain before refilling
-        taken, draws, scales = [], [], []
-        extra_vals = {k: [] for k in self.extras}
-        for s in range(self.slots):
-            if not self.queue:
-                break
-            if self.slot_req[s] is not None:
-                continue
-            req = self.queue.popleft()
-            taken.append(s)
-            draws.append(self._draw(req))
-            scales.append(float(req.cfg_scale)
-                          if req.cfg_scale is not None
-                          else float(self.program.spec.cfg_scale or 0.0))
-            for k in extra_vals:
-                extra_vals[k].append((req.extras or {}).get(
-                    k, self._extras_init[k]))
-            self.slot_req[s] = req
-            self.slot_row[s] = 0
-            off, budget = self.program.resolve_tier(req.tier)
-            self.slot_off[s] = off
-            self.slot_budget[s] = budget
-            self.slot_admit[s] = self.ticks
-        if not taken:
+        if not self.queue:
             return
-        # one scatter per tick, not one full-state copy per admitted request
-        x, E = self.state[:2]
-        sl = jnp.asarray(taken, jnp.int32)
-        x = x.at[sl].set(jnp.stack(draws))
-        E = E.at[:, sl].set(0.0)  # fresh rings -> warm-up from order 1
-        if self.program.cache is not None:
-            # a reused slot must not inherit the previous request's deep
-            # features; zeroed cache + the span's full init row reproduce the
-            # uniform cached scan exactly (DESIGN.md §12)
-            C = self.state[2].at[sl].set(0.0)
-            self.state = (x, E, C)
-        else:
-            self.state = (x, E)
+        free = np.flatnonzero(~self._busy)
+        n = min(free.size, len(self.queue))
+        if n == 0:
+            return
+        taken = free[:n]
+        reqs = [self.queue.popleft() for _ in range(n)]
+        offs = np.empty(n, np.int64)
+        budgets = np.empty(n, np.int64)
+        for j, r in enumerate(reqs):
+            offs[j], budgets[j] = self.program.resolve_tier(r.tier)
+            self.slot_req[int(taken[j])] = r
+        # vectorized host bookkeeping: one fancy-indexed write per array
+        self._busy[taken] = True
+        self.slot_row[taken] = 0
+        self.slot_off[taken] = offs
+        self.slot_budget[taken] = budgets
+        self.slot_admit[taken] = self.ticks
+        # full-width masked update buffers, built host-side in numpy; the
+        # jitted apply folds latents + meta counters + guidance + extras into
+        # the device state in ONE fixed-shape dispatch per tick
+        B = self.slots
+        mask = np.zeros(B, bool)
+        mask[taken] = True
+        x_new = np.zeros((B,) + self.sample_shape, self._np_dtype)
+        for j, r in enumerate(reqs):
+            x_new[taken[j]] = self._draw(r)
+        # on-device counters: row 0, the tier's span, busy
+        meta_new = np.zeros((4, B), np.int32)
+        meta_new[1, taken] = offs
+        meta_new[2, taken] = budgets
+        meta_new[3, taken] = 1
+        g_new = np.zeros(B, np.float32)
         if self.program.uses_cfg:
-            self.g = self.g.at[sl].set(jnp.asarray(scales, jnp.float32))
-        for k, vals in extra_vals.items():
-            self.extras[k] = self.extras[k].at[sl].set(
-                jnp.asarray(vals, self.extras[k].dtype))
+            g_new[taken] = [float(r.cfg_scale) if r.cfg_scale is not None
+                            else float(self.program.spec.cfg_scale or 0.0)
+                            for r in reqs]
+        ex_new = {k: np.zeros(B, self._extras_np[k]) for k in self.extras}
+        for k in ex_new:
+            ex_new[k][taken] = [(r.extras or {}).get(k, self._extras_init[k])
+                                for r in reqs]
+        self.state, self.meta, self.g, self.extras = _apply_admission(
+            tuple(self.state), self.meta, self.g, self.extras,
+            mask, x_new, meta_new, g_new, ex_new,
+            has_cache=self.program.cache is not None,
+            uses_cfg=self.program.uses_cfg)
 
     # -- the serving step ----------------------------------------------------
     def tick(self) -> List[Completion]:
-        """Admit, run ONE batched step, emit finished latents."""
+        """Admit, dispatch ONE batched step, consume due readbacks.
+
+        At pipeline_depth=1 the returned completions are this tick's; at
+        depth N they are the completions of the tick dispatched N-1 ticks
+        ago (its readback has had N-1 device ticks to land)."""
+        t0 = time.perf_counter_ns()
+        b0 = self._blocked_ns
         self._admit()
-        if self.active == 0:
+        busy = self._busy
+        if not busy.any():
+            self._host_ns += (time.perf_counter_ns() - t0
+                              - (self._blocked_ns - b0))
             return []
-        busy = np.array([r is not None for r in self.slot_req])
-        # idle slots park on row 0 — the (first tier's) init row, an identity
-        # update; busy slots gather their tier offset + trajectory position
-        idx = jnp.asarray(np.where(busy, self.slot_off + self.slot_row, 0),
-                          jnp.int32)
-        self.state = self._step(self.state, idx, *self._step_tail())
         self.ticks += 1
         self.evals += 1
         self.active_slot_ticks += int(busy.sum())
+        # dispatch: idx construction and row advance happen on device
+        # (StepProgram.step_flight); nothing tick-varying crosses the host
+        # boundary here. Timed separately — the call is device time (inline
+        # execution on runtimes without async dispatch), not bookkeeping.
+        d0 = time.perf_counter_ns()
+        self.state, self.meta, mask = self._flight(self.state, self.meta,
+                                                   *self._step_tail())
+        d1 = time.perf_counter_ns()
+        self._dispatch_ns += d1 - d0
+        flight = _Flight(
+            tick=self.ticks,
+            clock=(float(self.ticks) if self.clock is None else self.clock))
+        # host prediction of this tick's completions (the grid is
+        # deterministic): vectorized row advance + budget compare
+        self.slot_row[busy] += 1
+        done_mask = busy & (self.slot_row >= self.slot_budget)
+        if done_mask.any():
+            slots_done = np.flatnonzero(done_mask)
+            flight.mask = mask
+            flight.slots = slots_done
+            flight.reqs = [self.slot_req[int(s)] for s in slots_done]
+            flight.admits = self.slot_admit[slots_done].copy()
+            flight.budgets = self.slot_budget[slots_done].copy()
+            flight.offs = self.slot_off[slots_done].copy()
+            # the trailing readback stream: ONE batched gather of the
+            # finished slots' latents, host copy started immediately; the
+            # concrete values are consumed up to depth-1 ticks later. The
+            # gather is dispatched before the next tick's donated step, so
+            # it reads this tick's output before the buffers are recycled.
+            # Indices are padded to full width so the compiled gather shape
+            # is count-independent; rows past n_done are discarded.
+            idx = np.full(self.slots, slots_done[-1], np.int32)
+            idx[:slots_done.size] = slots_done
+            lat = _gather_rows(self.state[0], idx)
+            lat.copy_to_host_async()
+            mask.copy_to_host_async()
+            flight.lat = lat
+            # free the slots now (host prediction): the next dispatch may
+            # re-admit into them without draining the pipeline
+            for s in slots_done:
+                self.slot_req[int(s)] = None
+            self._busy[done_mask] = False
+            self.slot_row[done_mask] = 0
+            self.slot_off[done_mask] = 0
+        self._inflight.append(flight)
         done: List[Completion] = []
-        for s in range(self.slots):
-            req = self.slot_req[s]
-            if req is None:
-                continue
-            self.slot_row[s] += 1
-            if self.slot_row[s] >= self.slot_budget[s]:
-                done.append(Completion(
-                    rid=req.rid, latent=np.asarray(self.state[0][s]),
-                    arrival=req.arrival, admit_tick=int(self.slot_admit[s]),
-                    finish_tick=self.ticks,
-                    finish_clock=(float(self.ticks) if self.clock is None
-                                  else self.clock),
-                    evals=int(self.slot_budget[s]), tier=req.tier,
-                    eval_cost=self.program.span_cost(
-                        int(self.slot_off[s]), int(self.slot_budget[s]))))
-                self.slot_req[s] = None
-                self.slot_row[s] = 0
-                self.slot_off[s] = 0
+        while len(self._inflight) > self.pipeline_depth - 1:
+            done.extend(self._consume(self._inflight.popleft()))
+        self._host_ns += (time.perf_counter_ns() - t0 - (d1 - d0)
+                          - (self._blocked_ns - b0))
+        return done
+
+    def _consume(self, f: _Flight) -> List[Completion]:
+        """Materialize one flight's readback: verify the on-device done mask
+        against the host prediction and emit the finished latents."""
+        if not f.slots.size:
+            return []
+        tb = time.perf_counter_ns()
+        mask_np = np.asarray(f.mask)       # blocks until the tick executed
+        lat_np = np.asarray(f.lat)         # ONE batched device_get per tick
+        self._blocked_ns += time.perf_counter_ns() - tb
+        got = np.flatnonzero(mask_np)
+        if not np.array_equal(got, f.slots):
+            raise RuntimeError(
+                f"on-device done mask {got.tolist()} disagrees with the "
+                f"host completion prediction {f.slots.tolist()} at tick "
+                f"{f.tick} — scheduler bookkeeping desynchronized from the "
+                f"compiled step program")
+        done = [Completion(
+            rid=req.rid, latent=lat_np[j], arrival=req.arrival,
+            admit_tick=int(f.admits[j]), finish_tick=f.tick,
+            finish_clock=f.clock, evals=int(f.budgets[j]), tier=req.tier,
+            eval_cost=self.program.span_cost(int(f.offs[j]),
+                                             int(f.budgets[j])))
+            for j, req in enumerate(f.reqs)]
         self.completions.extend(done)
+        return done
+
+    def flush(self) -> List[Completion]:
+        """Consume every in-flight readback (blocking). A no-op at
+        pipeline_depth=1; the async trace driver calls it once the arrival
+        stream is exhausted."""
+        done: List[Completion] = []
+        while self._inflight:
+            done.extend(self._consume(self._inflight.popleft()))
         return done
 
     def drain(self) -> List[Completion]:
@@ -247,25 +448,23 @@ class SlotScheduler:
         out: List[Completion] = []
         while self.queue or self.active:
             out.extend(self.tick())
+        out.extend(self.flush())
         return out
 
     def _step_tail(self):
-        """Trailing step args after (state, idx) — identical for every tick
+        """Trailing step args after (state, meta) — identical for every tick
         and for the AOT lowering, so compiled signatures always match."""
         return (self.g if self.program.uses_cfg else None,
                 self.extras if self.extras else None)
 
     # -- AOT compile (DESIGN.md §9; the serve-timing fix) --------------------
     def aot_compile(self) -> float:
-        """Lower + compile the step function ahead of time and swap the
+        """Lower + compile the flight step ahead of time and swap the
         compiled executable in; returns the compile seconds. Keeps the first
         tick's timing honest — compile is no longer folded into execution."""
-        import time
-
-        idx = jnp.zeros((self.slots,), jnp.int32)
         t0 = time.perf_counter()
-        compiled = self._step.lower(self.state, idx,
-                                    *self._step_tail()).compile()
+        compiled = self._flight.lower(self.state, self.meta,
+                                      *self._step_tail()).compile()
         dt = time.perf_counter() - t0
-        self._step = compiled
+        self._flight = compiled
         return dt

@@ -99,13 +99,19 @@ class ServeMetrics:
     latency_ticks_p95: float
     occupancy: float          # busy-slot fraction over ticks that ran
     evals_per_latent: float   # slot-evals spent per finished latent
-    tick_s: float             # median measured wall seconds per tick
-    throughput_rps: float     # completed / (ticks * tick_s)
+    tick_s: float             # wall seconds per tick: the per-tick median at
+                              # pipeline depth 1, wall_s / ticks otherwise
+                              # (per-tick walls are meaningless mid-pipeline)
+    throughput_rps: float     # completed / wall_s
     latency_s_p50: float
     latency_s_p95: float
     # plan-bank runs: {tier: {completed, evals, latency_ticks_p50}} — how
     # each quality tier fared inside the shared batch. None for single-plan.
     per_tier: Optional[dict] = None
+    pipeline_depth: int = 1   # ticks kept in flight (DESIGN.md §13)
+    wall_s: float = 0.0       # measured wall seconds for the whole trace
+    host_us_per_tick: float = 0.0  # host bookkeeping µs per tick, excluding
+                                   # time blocked on device readbacks
 
     def row(self) -> dict:
         return asdict(self)
@@ -118,15 +124,25 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
     The clock advances one tick per step call; when nothing is queued or
     in-flight the clock fast-forwards to the next arrival without burning an
     eval (so `evals == ticks` holds by construction).
+
+    At pipeline depth 1 every tick is individually fenced (dispatch + block),
+    so `tick_s` is a clean per-tick median. At depth >= 2 the loop never
+    blocks mid-trace — completions surface from the trailing readback stream
+    as their flights land, and the final `flush()` consumes the stragglers —
+    so only the whole-trace `wall_s` is meaningful and `tick_s` is reported
+    as its per-tick mean. Completion clocks are stamped at dispatch time, so
+    tick-denominated latency metrics are identical at every depth.
     """
     pending = sorted(requests, key=lambda r: r.arrival)
+    sync = sched.pipeline_depth == 1
     # snapshot the counters so a reused scheduler reports THIS run's metrics
     ticks0, evals0 = sched.ticks, sched.evals
     done0, ast0 = len(sched.completions), sched.active_slot_ticks
+    host0 = sched.host_ns
     i = 0
     now = 0.0
     tick_walls: List[float] = []
-    latencies = []
+    wall0 = time.perf_counter()
     try:
         while i < len(pending) or sched.queue or sched.active:
             while i < len(pending) and pending[i].arrival <= now:
@@ -137,19 +153,24 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
                 continue
             sched.clock = now + 1.0  # this tick's completions land at now+1
             t0 = time.perf_counter()
-            done = sched.tick()
-            # block per tick: JAX dispatch is async, and ticks without a
-            # completion fetch would otherwise clock only their dispatch cost
-            jax.block_until_ready(sched.state)
-            tick_walls.append(time.perf_counter() - t0)
+            sched.tick()
+            if sync:
+                # block per tick: JAX dispatch is async, and ticks without a
+                # completion fetch would otherwise clock only dispatch cost
+                jax.block_until_ready(sched.state)
+                tick_walls.append(time.perf_counter() - t0)
             now += 1.0
-            latencies.extend(c.latency_ticks for c in done)
+        sched.flush()  # consume the trailing readbacks still in flight
+        jax.block_until_ready(sched.state)
     finally:
         sched.clock = None  # later direct tick()s fall back to the tick clock
+    wall_s = time.perf_counter() - wall0
+    latencies = [c.latency_ticks for c in sched.completions[done0:]]
     lat = np.asarray(latencies) if latencies else np.zeros(1)
-    tick_s = float(np.median(tick_walls)) if tick_walls else 0.0
     n_done = len(sched.completions) - done0
     ticks = sched.ticks - ticks0
+    tick_s = (float(np.median(tick_walls)) if tick_walls
+              else (wall_s / ticks if ticks else 0.0))
     run_done = sched.completions[done0:]
     per_tier = None
     if any(c.tier is not None for c in run_done):
@@ -180,10 +201,14 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
                    if ticks else 0.0),
         evals_per_latent=ticks * sched.slots / max(n_done, 1),
         tick_s=tick_s,
-        throughput_rps=n_done / max(ticks * tick_s, 1e-12),
+        throughput_rps=n_done / max(wall_s, 1e-12),
         latency_s_p50=float(np.percentile(lat, 50)) * tick_s,
         latency_s_p95=float(np.percentile(lat, 95)) * tick_s,
         per_tier=per_tier,
+        pipeline_depth=sched.pipeline_depth,
+        wall_s=wall_s,
+        host_us_per_tick=((sched.host_ns - host0) / ticks / 1e3
+                          if ticks else 0.0),
     )
 
 
@@ -194,10 +219,11 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
 
 def smoke(arch: str = "dit-cifar", slots: int = 2, nfe: int = 4,
           n_requests: int = 5, rate: float = 0.5, cfg_scale: float = 2.0,
-          seed: int = 0) -> ServeMetrics:
+          seed: int = 0, pipeline_depth: int = 1) -> ServeMetrics:
     """Serve a short Poisson trace end to end and assert the scheduler
-    invariants: every request completes, one batched eval per tick, and
-    per-request eval bookkeeping adds up."""
+    invariants: every request completes, one batched eval per tick,
+    per-request eval bookkeeping adds up, and the completion clock is
+    monotonic (dispatch-stamped even when readbacks trail the pipeline)."""
     import jax
 
     from ..configs.registry import get_config
@@ -213,14 +239,19 @@ def smoke(arch: str = "dit-cifar", slots: int = 2, nfe: int = 4,
     spec = EngineSpec(solver="unipc", nfe=nfe, cfg_scale=cfg_scale)
     program = engine.build_step(spec)
     sched = SlotScheduler(program, slots,
-                          (cfg.patch_tokens, cfg.latent_dim))
+                          (cfg.patch_tokens, cfg.latent_dim),
+                          pipeline_depth=pipeline_depth)
     reqs = poisson_requests(n_requests, rate, seed=seed,
                             cfg_scales=[1.5, cfg_scale, 4.0])
     m = run_trace(sched, reqs)
     assert m.completed == n_requests, (m.completed, n_requests)
     assert m.evals == m.ticks, (m.evals, m.ticks)
+    assert sched.in_flight == 0, sched.in_flight
     assert all(c.evals == program.n_rows for c in sched.completions)
     assert all(np.isfinite(c.latent).all() for c in sched.completions)
+    clocks = [c.finish_clock for c in sched.completions]
+    assert clocks == sorted(clocks), clocks
+    assert all(c.finish_clock > c.arrival for c in sched.completions)
     return m
 
 
@@ -237,16 +268,22 @@ def main() -> None:
                     help="requests per tick (one tick = one batched eval)")
     ap.add_argument("--cfg-scale", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="ticks kept in flight; 1 = synchronous loop, "
+                         ">= 2 overlaps host bookkeeping with device "
+                         "execution (DESIGN.md §13)")
     args = ap.parse_args()
     if not args.smoke:
         ap.error("this entry point runs the CI scheduler smoke; pass "
                  "--smoke (real serving lives in repro.launch.serve)")
     m = smoke(args.arch, slots=args.slots, nfe=args.nfe,
               n_requests=args.requests, rate=args.arrival_rate,
-              cfg_scale=args.cfg_scale, seed=args.seed)
+              cfg_scale=args.cfg_scale, seed=args.seed,
+              pipeline_depth=args.pipeline_depth)
     print(json.dumps(m.row(), indent=1))
     print(f"smoke ok: {m.completed}/{m.requests} requests, "
-          f"{m.evals} evals == {m.ticks} ticks")
+          f"{m.evals} evals == {m.ticks} ticks, "
+          f"depth {m.pipeline_depth}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,206 @@
+"""Pipelined serving loop: depth-N scheduling is bit-identical to depth 1.
+
+The tentpole property (DESIGN.md §13): every pipeline depth drives the SAME
+compiled `step_flight` program over the SAME host-predicted admission
+schedule, so finished latents, completion order, per-request bookkeeping,
+and every tick-denominated metric are bit-identical across depths — the
+only thing depth changes is WHEN the trailing readback stream is consumed.
+Plus the mechanics that make it work: mid-flight admission (arrivals fold
+into the next tick without draining the pipeline), one batched readback per
+completing tick, dispatch-stamped completion clocks, and the done-mask
+cross-check between device and host bookkeeping.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion import GaussianDPM
+from repro.engine import EngineSpec, SamplerEngine
+from repro.serving import Request, SlotScheduler, poisson_requests, run_trace
+
+from test_serving import _cfg_engine, _eps_jx, _tier_specs, _x_T
+
+DEPTHS = (1, 2, 3)
+
+
+def _metric_key(m):
+    """The deterministic (tick-denominated) slice of ServeMetrics — the
+    fields that must be EXACTLY equal across pipeline depths."""
+    return (m.mode, m.requests, m.completed, m.slots, m.n_rows, m.ticks,
+            m.evals, m.makespan_ticks, m.throughput_per_tick,
+            m.latency_ticks_p50, m.latency_ticks_p95, m.occupancy,
+            m.evals_per_latent, m.per_tier)
+
+
+def _completion_key(c):
+    return (c.rid, c.arrival, c.admit_tick, c.finish_tick, c.finish_clock,
+            c.evals, c.tier, c.eval_cost)
+
+
+def _run_at_depth(make_sched, reqs, depth):
+    sched = make_sched(depth)
+    m = run_trace(sched, reqs())
+    assert sched.in_flight == 0  # run_trace flushed the readback stream
+    return sched, m
+
+
+@pytest.mark.parametrize("solver,order", [("unipc", 3), ("dpmpp", 2)])
+def test_depths_bit_identical_on_poisson_trace(gaussian_dpm, solver, order):
+    """Latents, completion order, bookkeeping, and metrics at depths 1/2/3
+    are EXACTLY equal (np.testing.assert_array_equal, not allclose) on a
+    staggered Poisson trace."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver=solver, order=order, nfe=7))
+
+    def make(depth):
+        return SlotScheduler(program, 3, (8,), pipeline_depth=depth)
+
+    def reqs():
+        return [Request(rid=r.rid, arrival=r.arrival, x_T=_x_T(r.rid))
+                for r in poisson_requests(9, rate=0.5, seed=5)]
+
+    base, m0 = _run_at_depth(make, reqs, 1)
+    assert m0.completed == 9 and m0.pipeline_depth == 1
+    for depth in DEPTHS[1:]:
+        sched, m = _run_at_depth(make, reqs, depth)
+        assert m.pipeline_depth == depth
+        assert _metric_key(m) == _metric_key(m0)
+        assert ([_completion_key(c) for c in sched.completions]
+                == [_completion_key(c) for c in base.completions])
+        for a, b in zip(base.completions, sched.completions):
+            np.testing.assert_array_equal(a.latent, b.latent)
+
+
+def test_depths_bit_identical_with_tiers_and_cfg(vp):
+    """The composed case: a plan-bank (tiered) program with per-request
+    guidance scales — per-tier metrics and eval_cost included in the
+    cross-depth equality."""
+    eng = _cfg_engine(vp)
+    tiers = {k: EngineSpec(solver="unipc", nfe=s.nfe, order=s.order,
+                           cfg_scale=2.0)
+             for k, s in _tier_specs().items()}
+    program = eng.build_bank(tiers)
+    names = ["fast", "balanced", "quality"]
+    scales = [1.0, 2.0, 3.5]
+
+    def make(depth):
+        return SlotScheduler(program, 3, (8,), pipeline_depth=depth)
+
+    def reqs():
+        return [Request(rid=i, arrival=float(a), x_T=_x_T(i),
+                        tier=names[i % 3], cfg_scale=scales[i % 3])
+                for i, a in enumerate([0, 0, 1, 3, 4, 8, 9])]
+
+    base, m0 = _run_at_depth(make, reqs, 1)
+    assert m0.completed == 7
+    assert m0.per_tier is not None and set(m0.per_tier) == set(names)
+    for depth in DEPTHS[1:]:
+        sched, m = _run_at_depth(make, reqs, depth)
+        assert _metric_key(m) == _metric_key(m0)  # incl. per_tier dicts
+        assert ([_completion_key(c) for c in sched.completions]
+                == [_completion_key(c) for c in base.completions])
+        for a, b in zip(base.completions, sched.completions):
+            np.testing.assert_array_equal(a.latent, b.latent)
+
+
+def test_mid_flight_admission_does_not_drain_the_pipeline(gaussian_dpm):
+    """An arrival while ticks are in flight is admitted on the very next
+    tick — not delayed to a pipeline drain boundary — so its latency equals
+    the compiled budget exactly."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=6))
+    sched = SlotScheduler(program, 2, (8,), pipeline_depth=3)
+    sched.submit(Request(rid=0, x_T=_x_T(0)))
+    sched.tick()
+    sched.tick()
+    assert sched.in_flight == 2  # a full-depth-minus-one pipeline
+    # B arrives mid-flight: admission must fold into the NEXT tick's scatter
+    sched.submit(Request(rid=1, x_T=_x_T(1)))
+    sched.tick()
+    assert sched.in_flight == 2  # pipeline stayed full — nothing drained
+    assert not sched.queue  # admitted, not still queued
+    assert sched.slot_req[1] is not None and sched.slot_req[1].rid == 1
+    done = sched.drain()
+    got = {c.rid: c for c in done}
+    # rid 1 was admitted into the very next dispatched tick (admit_tick is
+    # the pre-tick counter: 2 ticks had run when it folded in) and finished
+    # exactly n_rows ticks later — zero drain-boundary delay
+    assert got[1].admit_tick == 2
+    assert got[1].finish_tick == 2 + program.n_rows
+    # and the mid-flight admission reproduced the uniform scan bit-for-bit
+    ref = np.asarray(eng.build(EngineSpec(solver="unipc", order=2, nfe=6))(
+        jnp.asarray(_x_T(1))[None, :]))[0]
+    np.testing.assert_allclose(got[1].latent, ref, atol=1e-5, rtol=0)
+
+
+def test_trailing_readback_defers_emission_by_depth(gaussian_dpm):
+    """At depth 2 a completion is emitted one tick AFTER the tick that
+    finished it (or at flush), with finish_tick/clock stamped at dispatch."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=4))
+    n = program.n_rows
+    sched = SlotScheduler(program, 2, (8,), pipeline_depth=2)
+    sched.submit(Request(rid=0, x_T=_x_T(0)))
+    emitted = []
+    for _ in range(n):
+        emitted += sched.tick()
+    # the finishing tick's readback is still in flight at depth 2
+    assert emitted == [] and sched.in_flight >= 1
+    assert sched.active == 0  # host prediction already freed the slot
+    done = sched.flush()
+    assert [c.rid for c in done] == [0]
+    assert done[0].finish_tick == n  # dispatch-stamped, not emission-stamped
+    # depth 1 on the same trace emits the identical completion immediately
+    ref = SlotScheduler(program, 2, (8,), pipeline_depth=1)
+    ref.submit(Request(rid=0, x_T=_x_T(0)))
+    ref_done = []
+    for _ in range(n):
+        ref_done += ref.tick()
+    assert [c.finish_tick for c in ref_done] == [n]
+    np.testing.assert_array_equal(done[0].latent, ref_done[0].latent)
+
+
+def test_simultaneous_completions_ride_one_flight(gaussian_dpm):
+    """Slots finishing on the same tick share ONE batched readback (the
+    satellite fix for the per-slot device_get): a single flight record
+    carries all of them, already in slot order."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=5))
+    sched = SlotScheduler(program, 3, (8,), pipeline_depth=2)
+    for r in range(3):  # all admitted tick 1 -> all finish the same tick
+        sched.submit(Request(rid=r, x_T=_x_T(r)))
+    for _ in range(program.n_rows):
+        sched.tick()
+    [flight] = list(sched._inflight)
+    assert flight.slots.tolist() == [0, 1, 2]
+    assert flight.lat is not None and flight.lat.shape[0] == 3
+    done = sched.flush()
+    assert [c.rid for c in done] == [0, 1, 2]
+    assert len({c.finish_tick for c in done}) == 1
+
+
+def test_done_mask_desync_raises(gaussian_dpm):
+    """The device done mask is cross-checked against the host prediction at
+    consumption: a step override whose mask disagrees must raise, naming the
+    desync — never silently emit wrong latents."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=4))
+
+    def lying_step(state, meta, g=None, extras=None):
+        state, meta, done = program.step_flight(state, meta, g, extras)
+        return state, meta, jnp.zeros_like(done)  # device says: nobody done
+
+    sched = SlotScheduler(program, 2, (8,), step_override=lying_step)
+    sched.submit(Request(rid=0, x_T=_x_T(0)))
+    with pytest.raises(RuntimeError, match="done mask"):
+        sched.drain()
+
+
+def test_depth_zero_rejected(gaussian_dpm):
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_step(EngineSpec(solver="unipc", order=1, nfe=3))
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        SlotScheduler(program, 2, (8,), pipeline_depth=0)
+    # default stays the synchronous loop — depth is opt-in
+    assert SlotScheduler(program, 2, (8,)).pipeline_depth == 1

@@ -71,6 +71,47 @@ def test_guard_fails_and_names_corrupt_artifact(bench_root, victim):
     assert victim in r.stderr and "corrupt" in r.stderr
 
 
+def test_guard_fails_when_async_runs_are_dropped(bench_root):
+    """The pipelined-serving trajectory (DESIGN.md §13) is load-bearing:
+    stripping async_runs from an otherwise valid BENCH_serve.json must fail
+    the guard by name."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    data.pop("async_runs")
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "async_runs" in r.stderr and "BENCH_serve.json" in r.stderr
+
+
+def test_guard_fails_when_async_loses_throughput(bench_root):
+    """Pipelined serving falling behind the synchronous loop (beyond the
+    noise floor) must trip the async acceptance check."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    for run in data["async_runs"]:
+        if run["pipeline_depth"] >= 2:
+            run["throughput_rps"] *= 0.5
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "lost throughput" in r.stderr
+
+
+def test_guard_fails_when_host_overhead_blows_the_cap(bench_root):
+    """Host bookkeeping creeping back onto the critical path (e.g. a
+    reintroduced per-slot Python loop) must trip the host-fraction cap."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    for run in data["async_runs"]:
+        if run["pipeline_depth"] == 1:
+            run["host_us_per_tick"] = run["tick_s"] * 1e6  # 100% of the tick
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "host bookkeeping overhead" in r.stderr
+
+
 def test_guard_fails_when_cached_runs_are_dropped(bench_root):
     """The feature-reuse acceptance trajectory (DESIGN.md §12) is load-
     bearing: stripping cached_runs from an otherwise valid BENCH_tuning.json
