@@ -36,11 +36,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit
+from .common import bench_header, emit
 
 ARCHS = ("dit-cifar", "dit-i256")
 SLOTS = 4
 COMBINE_K = 5  # order-3 UniC combine width, the widest default
+# quantized tiers benched against the shipped fp32 fast path (DESIGN.md §14)
+QUANT_BENCH_MODES = ("w8a16", "w8a8")
 
 
 def _setup(arch: str, seed: int = 0, **cfg_overrides):
@@ -205,9 +207,20 @@ def _attn_traffic(cfg):
     return naive, flash
 
 
+def _quant_variant(cfg, params, mode: str):
+    """(eval_fn, param_bytes) for one calibrated quant tier (DESIGN.md §14)."""
+    from repro.models import api
+    from repro.models.quant import quant_param_bytes
+
+    qcfg, qparams, _ = api.calibrate_and_quantize(cfg, params, mode)
+    net = api.eps_network(qcfg)
+    fn = lambda x, t, ids: net(qparams, x, t, {"class_ids": ids})  # noqa: E731
+    return fn, quant_param_bytes(qparams)
+
+
 def bench_model(out_path: str = "BENCH_model.json"):
     """Eval-path wall clock + HBM bytes at both dit serving shapes."""
-    rows = []
+    rows, qrows = [], []
     for arch in ARCHS:
         cfg, params, x, t, ids = _setup(arch)
         variants, hbm = {}, {}
@@ -231,12 +244,43 @@ def bench_model(out_path: str = "BENCH_model.json"):
             {m: (lambda f=f: jax.block_until_ready(f(x, t, ids)))
              for m, f in jitted.items()})
         for mode in variants:
-            rows.append(dict(arch=arch, mode=mode, eval_us=us[mode],
-                             hbm_bytes=hbm[mode],
-                             speedup_vs_eager=us["eager"] / us[mode]))
+            row = dict(arch=arch, mode=mode, eval_us=us[mode],
+                       hbm_bytes=hbm[mode],
+                       speedup_vs_eager=us["eager"] / us[mode])
+            if mode == "flash_fused_bf16" and row["speedup_vs_eager"] < 1.0:
+                # measured 0.67x at dit-cifar on the cpu runner: XLA
+                # rematerializes the bf16 casts in fp32 arithmetic, so the
+                # halved HBM reads never pay off. The hbm_bytes column is
+                # what the mode buys on a bandwidth-bound accelerator; the
+                # guard enforces the wall-clock win on tpu/gpu only.
+                row["note"] = ("loses wall-clock on this backend (cast "
+                               "remat); hbm_bytes is the accelerator story")
+            rows.append(row)
             emit(f"model/{arch}/{mode}", us[mode],
                  f"hbm_bytes={hbm[mode]:.3e};"
                  f"speedup={us['eager']/us[mode]:.2f}")
+        # quantized denoiser tiers (DESIGN.md §14), timed interleaved with
+        # the shipped fp32 fast path so the speedup_vs_fp32 ratios are honest
+        qfns = {"fp32": variants["flash_fused"]}
+        qmeta = {}
+        for qmode in QUANT_BENCH_MODES:
+            qfns[qmode], qmeta[qmode] = _quant_variant(cfg, params, qmode)
+        qjit = {m: jax.jit(f) for m, f in qfns.items()}
+        qus = _interleaved_us(
+            {m: (lambda f=f: jax.block_until_ready(f(x, t, ids)))
+             for m, f in qjit.items()})
+        for qmode in QUANT_BENCH_MODES:
+            qhbm = _hbm_bytes(qfns[qmode], x, t, ids)
+            qrows.append(dict(arch=arch, mode=qmode, eval_us=qus[qmode],
+                              fp32_eval_us=qus["fp32"], hbm_bytes=qhbm,
+                              speedup_vs_fp32=qus["fp32"] / qus[qmode],
+                              quant_param_bytes=qmeta[qmode]["quant"],
+                              fp32_param_bytes=qmeta[qmode]["fp32"]))
+            emit(f"model/{arch}/quant_{qmode}", qus[qmode],
+                 f"hbm_bytes={qhbm:.3e};"
+                 f"speedup_vs_fp32={qus['fp32']/qus[qmode]:.2f};"
+                 f"param_bytes={qmeta[qmode]['quant']}/"
+                 f"{qmeta[qmode]['fp32']}")
         # the solver side of the same tick, for the §11 breakdown
         us = _combine_us((cfg.patch_tokens, cfg.latent_dim))
         rows.append(dict(arch=arch, mode="unipc_combine", eval_us=us,
@@ -250,22 +294,27 @@ def bench_model(out_path: str = "BENCH_model.json"):
              f"naive_bytes={naive:.3e};flash_model={flash:.3e};"
              f"ratio={naive/flash:.1f}")
     with open(out_path, "w") as f:
-        json.dump({"slots": SLOTS, "runs": rows}, f, indent=1)
+        json.dump({"slots": SLOTS, "env": bench_header(), "runs": rows,
+                   "quant_runs": qrows}, f, indent=1)
     return rows
+
+
+def _perturb(params, seed: int = 9, scale: float = 0.05):
+    """Perturb every float leaf — the adaLN-zero init makes an untrained
+    DiT output exactly zero, which would make any parity check vacuous."""
+    leaves, treedef = jax.tree.flatten(params)
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree.unflatten(treedef, [
+        a + scale * jax.random.normal(k, a.shape, a.dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a
+        for a, k in zip(leaves, ks)])
 
 
 def smoke():
     """CI: run the real kernels (interpret mode) at tiny shapes and assert
-    the fast-eval path matches the eager baseline; no timing. Params are
-    perturbed first — the adaLN-zero init makes an untrained DiT output
-    exactly zero, which would make the parity check vacuous."""
+    the fast-eval path matches the eager baseline; no timing."""
     cfg, params, x, t, ids = _setup("dit-cifar", num_layers=2)
-    leaves, treedef = jax.tree.flatten(params)
-    ks = jax.random.split(jax.random.PRNGKey(9), len(leaves))
-    params = jax.tree.unflatten(treedef, [
-        a + 0.05 * jax.random.normal(k, a.shape, a.dtype)
-        if jnp.issubdtype(a.dtype, jnp.floating) else a
-        for a, k in zip(leaves, ks)])
+    params = _perturb(params)
     eager = jax.jit(_eval_variant(cfg, params, "sdpa", "inline"))
     fast = jax.jit(_eval_variant(cfg, params, "interpret", "interpret"))
     a, b = np.asarray(eager(x, t, ids)), np.asarray(fast(x, t, ids))
@@ -275,14 +324,68 @@ def smoke():
           f"max|diff|={np.abs(a - b).max():.2e}")
 
 
+def smoke_quant():
+    """CI: calibrated W8 eval through the interpret-mode quant_matmul kernel
+    on perturbed dit-cifar params (DESIGN.md §14). Asserts (a) the quantized
+    eval tracks the fp32 eval within the tier's tolerance, (b) w8a8's
+    calibrated activation scales hold too, and (c) quant composes with
+    feature reuse: the cache-wired eval with reuse=0 is BITWISE the plain
+    quantized eval, and a cached shallow re-eval runs the quantized records
+    and stays finite."""
+    from repro.models import api
+
+    cfg, params, x, t, ids = _setup("dit-cifar", num_layers=2)
+    params = _perturb(params)
+    net = api.eps_network(cfg)
+    ref = np.asarray(jax.jit(
+        lambda x, t: net(params, x, t, {"class_ids": ids}))(x, t))
+    assert np.abs(ref).max() > 0, "degenerate eval — parity is vacuous"
+    for qmode, tol in (("w8a16", 1e-2), ("w8a8", 3e-2)):
+        qcfg, qparams, _ = api.calibrate_and_quantize(cfg, params, qmode)
+        qcfg = dataclasses.replace(qcfg, quant_backend="interpret")
+        qnet = api.eps_network(qcfg)
+        q = np.asarray(jax.jit(
+            lambda x, t: qnet(qparams, x, t, {"class_ids": ids}))(x, t))
+        rel = float(np.linalg.norm(q - ref) / np.linalg.norm(ref))
+        assert rel < tol, (f"{qmode} interpret-kernel eval drifted: "
+                           f"rel err {rel:.2e} >= {tol}")
+        print(f"quant smoke {qmode}: rel err vs fp32 {rel:.2e} < {tol}")
+        if qmode != "w8a16":
+            continue
+        # cache_block/quant composition: one quantized tree serves both the
+        # full and the cached (shallow) eval paths
+        cached = api.eps_network_cached(qcfg, cache_block=1)
+        B, T = x.shape[:2]
+        cache0 = jnp.zeros((B, T, qcfg.d_model), x.dtype)
+        full, cache = jax.jit(lambda x, t, c: cached(
+            qparams, x, t, {"class_ids": ids}, c,
+            jnp.zeros((B,), jnp.bool_)))(x, t, cache0)
+        qf = np.asarray(jax.jit(
+            lambda x, t: qnet(qparams, x, t, {"class_ids": ids}))(x, t))
+        np.testing.assert_array_equal(np.asarray(full), qf)
+        shallow, _ = jax.jit(lambda x, t, c: cached(
+            qparams, x, t, {"class_ids": ids}, c,
+            jnp.ones((B,), jnp.bool_)))(x, t, cache)
+        assert np.isfinite(np.asarray(shallow)).all()
+        print("quant smoke w8a16: cached full eval bitwise == quantized "
+              "eval; shallow reuse eval finite")
+    print("quant smoke ok")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CI parity smoke (interpret-mode kernels, tiny "
                          "shapes); exits nonzero on mismatch")
+    ap.add_argument("--smoke-quant", action="store_true",
+                    help="CI quantized-eval smoke (interpret-mode "
+                         "quant_matmul, calibrated W8 tiers, cache "
+                         "composition); exits nonzero on drift")
     args = ap.parse_args()
     if args.smoke:
         smoke()
+    elif args.smoke_quant:
+        smoke_quant()
     else:
         print("name,us_per_call,derived")
         bench_model()

@@ -29,7 +29,7 @@ import json
 
 import jax
 
-from .common import emit, timed  # noqa: F401  (timed: CSV-harness parity)
+from .common import bench_header, emit, timed  # noqa: F401
 
 ARCHS = ("dit-cifar", "dit-i256")
 SLOTS = 4
@@ -138,7 +138,8 @@ def bench_serve(out_path: str = "BENCH_serve.json"):
              f"throughput_ratio={ratio:.3f}")
     with open(out_path, "w") as f:
         json.dump({"slots": SLOTS, "nfe": NFE, "requests": REQUESTS,
-                   "runs": rows, "async_runs": async_rows}, f, indent=1)
+                   "env": bench_header(), "runs": rows,
+                   "async_runs": async_rows}, f, indent=1)
     return rows
 
 

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit
+from .common import bench_header, emit
 
 ARCH = "dit-cifar"
 NFES = (5, 6, 8, 10)
@@ -47,8 +47,8 @@ def bench_tuning(out_path: str = "BENCH_tuning.json"):
     from repro.launch.tune import _setup, tune
     from repro.tuning import reference_trajectory
 
-    engine, x_T = _setup(ARCH, reduced=True, batch=4, seed=0,
-                         train_steps=TRAIN_STEPS)
+    engine, x_T, _ = _setup(ARCH, reduced=True, batch=4, seed=0,
+                            train_steps=TRAIN_STEPS)
     # one reference trajectory serves every NFE budget below
     x_ref = reference_trajectory(engine, EngineSpec(solver="unipc"), x_T,
                                  ref_nfe=48)
@@ -90,8 +90,9 @@ def bench_tuning(out_path: str = "BENCH_tuning.json"):
     # -- cached runs: joint solver + feature-reuse schedules ----------------
     # same seed/train_steps -> bit-identical backbone params, so cached
     # discrepancies are comparable with the uncached rows above
-    cengine, cx_T = _setup(ARCH, reduced=True, batch=4, seed=0,
-                           train_steps=TRAIN_STEPS, cache_block=CACHE_BLOCK)
+    cengine, cx_T, _ = _setup(ARCH, reduced=True, batch=4, seed=0,
+                              train_steps=TRAIN_STEPS,
+                              cache_block=CACHE_BLOCK)
     cx_ref = reference_trajectory(
         cengine, EngineSpec(solver="unipc", cache_block=CACHE_BLOCK), cx_T,
         ref_nfe=48)
@@ -123,8 +124,8 @@ def bench_tuning(out_path: str = "BENCH_tuning.json"):
         f"(acceptance criterion): {cached_rows}")
     with open(out_path, "w") as f:
         json.dump({"arch": ARCH, "budget": BUDGET,
-                   "train_steps": TRAIN_STEPS, "runs": rows,
-                   "cached_runs": cached_rows}, f, indent=1)
+                   "train_steps": TRAIN_STEPS, "env": bench_header(),
+                   "runs": rows, "cached_runs": cached_rows}, f, indent=1)
     return rows
 
 

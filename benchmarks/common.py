@@ -21,6 +21,33 @@ from repro.core import DDIM, Grid  # noqa: E402
 from repro.diffusion import MixtureDPM, VPCosine, VPLinear  # noqa: E402
 
 
+def bench_header() -> dict:
+    """Environment stamp for every BENCH_*.json artifact.
+
+    Which accelerator produced the numbers decides which guard rules apply
+    (benchmarks/guard.py): low-precision eval paths (bf16, quantized) must
+    WIN wall-clock on tpu/gpu — where they halve/quarter the HBM traffic the
+    eval is bound by — but may legitimately lose on cpu, where XLA
+    rematerializes casts in fp32 arithmetic. A committed artifact without
+    this stamp is treated as cpu-produced."""
+    import platform
+
+    import jax
+
+    cpu = platform.processor() or ""
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("model name"):
+                    cpu = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return {"backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "cpu": cpu}
+
+
 def timed(fn, repeat=3):
     best = float("inf")
     out = None

@@ -29,6 +29,13 @@ BENCH_ARTIFACTS = {
     "model": "BENCH_model.json",
 }
 
+# extra sections an artifact must carry beyond 'runs' — a bench that stopped
+# writing one of these silently dropped part of the tracked trajectory
+REQUIRED_SECTIONS = {
+    "BENCH_serve.json": ("async_runs",),
+    "BENCH_model.json": ("quant_runs",),
+}
+
 
 def _load_bench_file(path: str) -> dict:
     """Parse one BENCH_*.json; a corrupt or unreadable artifact is fatal."""
@@ -45,6 +52,12 @@ def _load_bench_file(path: str) -> dict:
     if not isinstance(data, dict) or "runs" not in data:
         raise SystemExit(f"bench artifact {path} has no 'runs' table — "
                          f"not a bench artifact?")
+    for section in REQUIRED_SECTIONS.get(os.path.basename(path), ()):
+        if not data.get(section):
+            raise SystemExit(f"bench artifact {path} has no {section!r} "
+                             f"section — the bench stopped writing part of "
+                             f"its trajectory; rerun `python -m "
+                             f"benchmarks.run --only {_bench_for(path)}`")
     return data
 
 
@@ -74,6 +87,15 @@ def summarize(root: str = ".") -> int:
         for run in data["runs"]:
             print(f"{base:<22} {_run_tag(base, run):<40} "
                   f"{_run_headline(base, run)}")
+        for run in data.get("quant_runs", []):
+            tag = f"{run.get('arch')}/quant_{run.get('mode')}"
+            pb = (run.get("quant_param_bytes", 0)
+                  / max(run.get("fp32_param_bytes", 1), 1))
+            print(f"{base:<22} {tag:<40} "
+                  f"eval={run.get('eval_us', 0)/1e3:.2f}ms "
+                  f"hbm={run.get('hbm_bytes', 0):.2e}B "
+                  f"x{run.get('speedup_vs_fp32', 0):.2f} vs fp32 "
+                  f"params x{pb:.2f}")
     return len(paths)
 
 

@@ -78,6 +78,12 @@ class ModelConfig:
     # "jnp" explicitly (CI runs the real kernels under "interpret").
     attention_backend: Optional[str] = None  # kernels/flash_attention dispatch
     adaln_backend: Optional[str] = None      # kernels/adaln_modulate dispatch
+    quant_backend: Optional[str] = None      # kernels/quant_matmul dispatch
+
+    # quantized denoiser path (DESIGN.md §14): a models.quant.QuantSpec when
+    # the param tree carries quant records, None for the float path. Typed
+    # loosely to keep configs free of a models import.
+    quant: Optional[object] = None
 
     def __post_init__(self):
         if self.num_kv_heads is None:

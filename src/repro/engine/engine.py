@@ -200,6 +200,10 @@ class SamplerEngine:
     eval_dtype: str = "float32"
     eps_cached: Optional[Callable] = None
     cache_spec: Optional["CacheSpec"] = None
+    # quantized-tier contract (DESIGN.md §14), handshaken like eval_dtype:
+    # "none" or the models.quant tier the wired eps-net's params were
+    # quantized for (`launch.sample.build_engine(quant=...)` sets it)
+    quant: str = "none"
 
     # -- table ---------------------------------------------------------------
     def compile(self, spec: EngineSpec,
@@ -232,6 +236,12 @@ class SamplerEngine:
                 f"spec.eval_dtype={spec.eval_dtype!r} but this engine's "
                 f"eps-net was wired for {self.eval_dtype!r}; pass the same "
                 f"eval_dtype to build_engine and the EngineSpec")
+        if spec.quant != self.quant:
+            raise ValueError(
+                f"spec.quant={spec.quant!r} but this engine's eps-net was "
+                f"wired for {self.quant!r}; the quantized param tree is "
+                f"baked into the net — pass the same quant to build_engine "
+                f"and the EngineSpec")
         if spec.cache_block:
             return self._cached_model_fn(spec, tab)
         if "cache_reuse" in (tab.model_cols or {}):
@@ -400,6 +410,11 @@ class SamplerEngine:
             if s.eval_dtype != spec0.eval_dtype:
                 raise ValueError("bank tiers must agree on eval_dtype (one "
                                  "compiled program, one model wrapper)")
+            if s.quant != spec0.quant:
+                raise ValueError(
+                    f"bank tiers must agree on quant (one quantized param "
+                    f"tree serves the whole program); tier {name!r} has "
+                    f"quant={s.quant!r}, expected {spec0.quant!r}")
             if s.cache_block != spec0.cache_block:
                 raise ValueError(
                     f"bank tiers must agree on cache_block (the boundary is "

@@ -55,6 +55,12 @@ class EngineSpec:
     # stay fp32 regardless. "bfloat16" is the opt-in fast serving mode —
     # parity bounds documented in DESIGN.md §11 and pinned by tests.
     eval_dtype: str = "float32"
+    # quantized denoiser tier (DESIGN.md §14): "none" or a
+    # models.quant.QUANT_MODES name ("w8a16", "w8a8", "fp8a16", "w4a16").
+    # Like eval_dtype this is a contract, not a switch: the engine must be
+    # wired with a matching quantized param tree
+    # (`build_engine(quant=...)`), and `model_fn` rejects a mismatch.
+    quant: str = "none"
 
     def resolve(self) -> "EngineSpec":
         """Fill solver-dependent defaults; validate against the registry."""
@@ -63,6 +69,10 @@ class EngineSpec:
         if out.eval_dtype not in ("float32", "bfloat16"):
             raise ValueError(f"eval_dtype must be 'float32' or 'bfloat16', "
                              f"got {out.eval_dtype!r}")
+        if out.quant != "none":
+            # import here: specs stays importable without the models package
+            from ..models.quant import quant_spec
+            quant_spec(out.quant)  # raises on unknown tier names
         if out.cache_block < 0:
             raise ValueError(f"cache_block must be >= 0, got "
                              f"{out.cache_block}")

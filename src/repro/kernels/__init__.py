@@ -13,8 +13,15 @@ and ref.py (pure-jnp oracle):
 * adaln_modulate  — fused layernorm + adaLN-zero scale/shift and the gated
                     residual re-entry; `models.dit` runs every block's
                     modulation through it (DESIGN.md §11)
+* quant_matmul    — blocked matmul over quantized weights (int8, int4-in-
+                    int8, fp8 e4m3; per-output-channel or per-tensor absmax
+                    scales; optional static-scale int8 activations) with
+                    fp32 MXU accumulation; `models.layers.dense_apply`
+                    routes structural quant records through its ops wrapper
+                    (the quantized serving path, DESIGN.md §14)
 
 Validated against the oracles in interpret mode (tests/test_kernels.py,
-tests/test_fast_eval.py); selected on TPU backends by the ops wrappers, with
-the jnp oracles as the compiled-XLA path everywhere else.
+tests/test_fast_eval.py, tests/test_quant.py); selected on TPU backends by
+the ops wrappers, with the jnp oracles as the compiled-XLA path everywhere
+else.
 """

@@ -1,0 +1,78 @@
+"""Quantized blocked matmul — Pallas TPU kernel.
+
+The denoiser's serving tick is dominated by its dense matmuls (BENCH_model:
+dit-i256 eval ~12.3 ms vs ~0.34 ms for the whole solver combine), and every
+one of them is memory-bound at slot-batch shapes: the weight matrix is read
+from HBM once per eval, so halving (int8) or quartering (int4 container) the
+bytes per weight is the direct lever. The kernel keeps the MXU contraction
+in fp32 regardless of storage width: each (bk, bn) weight tile is widened
+in-register after the VMEM load — HBM sees quantized bytes, the accumulator
+never does.
+
+One kernel serves W8A16 and W8A8: the x operand is either float activations
+or int8 pre-quantized upstream (ops.py folds the static activation scale
+into the per-channel weight scale), and the weight tile is int8 or fp8 e4m3.
+Grid is (M tiles, N tiles, K tiles) with K innermost: the fp32 output block
+stays resident in VMEM across the K sweep (zeroed at k == 0, scaled by the
+per-output-channel row once at the last K step). Arbitrary (M, N, K) is
+handled by ops.py zero-padding every operand to the tile lattice — zero
+rows/columns contribute nothing to the fp32 accumulation and the padded
+output rows/cols are sliced off — matching the pad-and-mask contract of the
+other kernel packages (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles; 128 lanes also satisfies the int8 (32, 128) minimum
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # widen the quantized tile in-register; fp32 MXU accumulation
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                          w_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _scale():
+        o_ref[...] *= s_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_m", "blk_n", "blk_k",
+                                             "interpret"))
+def quant_matmul(x, qw, scale, *, blk_m=DEFAULT_BLOCK_M, blk_n=DEFAULT_BLOCK_N,
+                 blk_k=DEFAULT_BLOCK_K, interpret=True):
+    """x: (M, K) float or int8; qw: (K, N) int8/fp8; scale: (1, N) fp32.
+    M/N/K must be tile multiples (pad upstream in ops.py; zero padding is
+    exact under the fp32 accumulation). Returns fp32 (M, N) =
+    (x @ qw) * scale."""
+    M, K = x.shape
+    N = qw.shape[1]
+    nk = K // blk_k
+    kernel = functools.partial(_qmm_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // blk_m, N // blk_n, nk),
+        in_specs=[
+            pl.BlockSpec((blk_m, blk_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((blk_k, blk_n), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, blk_n), lambda m, n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((blk_m, blk_n), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, qw, scale)

@@ -1,0 +1,65 @@
+"""Public wrapper for the quantized matmul: backend dispatch + padding.
+
+The same explicit three-backend policy as the other kernel packages
+(DESIGN.md §5):
+
+* ``"pallas"``    — the compiled blocked kernel; the production path on TPU,
+  where the int8/fp8 weight tiles halve/quarter the HBM bytes per eval.
+* ``"interpret"`` — the same kernel under the Pallas interpreter (CI).
+* ``"jnp"``       — the fp32-accumulation oracle in `ref.py`; the right
+  default off-TPU. XLA still reads int8 weight buffers and widens at use, so
+  the HBM-bytes win is real on CPU too even where wall-clock is not.
+
+`quant_matmul` takes a float activation tensor of any leading shape against
+an int8/fp8 weight matrix with per-output-channel fp32 scales. With
+``sa=None`` activations stay floating (W8A16); with a static calibrated
+activation scale the activations are quantized here and `sa` is folded into
+the weight scale, so every backend runs the identical
+``(x_q @ qw) * (sa * ws)`` contraction (W8A8). Arbitrary (M, N, K) is
+zero-padded to the tile lattice and sliced back — exact under fp32
+accumulation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from ..dispatch import (BACKENDS, resolve_backend,  # noqa: F401 (re-export)
+                        platform_select as select_backend)
+from .kernel import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
+                     quant_matmul as _qmm_kernel)
+from .ref import dequantize, quantize, quantize_act  # noqa: F401 (re-export)
+
+
+def quant_matmul(x, qw, ws, *, sa=None, backend=None, force_pallas=False,
+                 blk_m=DEFAULT_BLOCK_M, blk_n=DEFAULT_BLOCK_N,
+                 blk_k=DEFAULT_BLOCK_K):
+    """x: (..., K) float; qw: (K, N) int8/fp8; ws: (N,) fp32 per-output-
+    channel weight scales; sa: optional static activation scale (W8A8).
+    Returns (..., N) in x.dtype. `backend` pins one of BACKENDS;
+    `force_pallas` means "run the kernel even off-TPU" (compiled on TPU,
+    interpreted elsewhere)."""
+    lead, K = x.shape[:-1], x.shape[-1]
+    N = qw.shape[-1]
+    x2 = x.reshape(-1, K)
+    scale = ws.astype(jnp.float32)
+    if sa is not None:
+        x2 = ref.quantize_act(x2, sa)
+        scale = scale * sa
+    backend = resolve_backend(backend, force_pallas, select_backend)
+    if backend == "jnp":
+        out = ref.matmul(x2, qw, scale)
+    else:
+        M = x2.shape[0]
+        # don't tile past tiny slot batches; int8 rows keep the (32, 128)
+        # minimum tile, float rows the fp32 (8, 128) one
+        bm = min(blk_m, max(32 if x2.dtype == jnp.int8 else 8, M))
+        pm, pn, pk = (-M) % bm, (-N) % blk_n, (-K) % blk_k
+        out = _qmm_kernel(
+            jnp.pad(x2, ((0, pm), (0, pk))),
+            jnp.pad(qw, ((0, pk), (0, pn))),
+            jnp.pad(scale.reshape(1, N), ((0, 0), (0, pn))),
+            blk_m=bm, blk_n=blk_n, blk_k=blk_k,
+            interpret=backend == "interpret")[:M, :N]
+    return out.astype(x.dtype).reshape(*lead, N)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracle + quantization helpers for the quantized matmul package.
+
+The quantization scheme (DESIGN.md §14) is symmetric absmax:
+
+* weights — per-output-channel (one fp32 scale per output column, absmax
+  over the contraction axis) or per-tensor (one scale per weight matrix,
+  broadcast to the channel shape so every record looks the same downstream).
+  Stored as an int8 container (int4 tiers clip to +/-7 inside the same
+  container) or fp8 e4m3 when the ``fmt="fp8"`` tier is selected.
+* activations — optional static per-tensor scale calibrated from reference
+  trajectories (models/quant.py); ``sa=None`` leaves activations in floating
+  point (W8A16).
+
+`matmul` is the dequantize-free core every backend agrees on:
+``(x @ qw) * scale`` with both operands widened to fp32 before the dot, so
+the accumulation is fp32 on every path and the Pallas kernel's blocked
+result differs from this oracle only by fp32 summation order.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+GRANULARITIES = ("channel", "tensor")
+
+# symmetric integer ranges; fp8 e4m3 saturates at +/-448
+_QMAX = {8: 127.0, 4: 7.0}
+FP8_MAX = 448.0
+ACT_QMAX = 127.0
+_TINY = 1e-12  # floor for absmax-derived scales (all-zero columns)
+
+
+def quantize(w, *, bits: int = 8, granularity: str = "channel",
+             fmt: str = "int"):
+    """w: (..., K, N) float -> (qw, scale) with scale (..., N) fp32.
+
+    channel: absmax over K, one scale per output column; tensor: absmax over
+    (K, N) per leading batch index, broadcast to (..., N) so records carry a
+    uniform scale shape either way. ``fmt="fp8"`` stores e4m3 weights (bits
+    is ignored); otherwise an int8 container holding ``bits``-bit values.
+    """
+    if granularity not in GRANULARITIES:
+        raise ValueError(f"granularity must be one of {GRANULARITIES}, "
+                         f"got {granularity!r}")
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2)                      # (..., N)
+    if granularity == "tensor":
+        amax = jnp.broadcast_to(
+            jnp.max(amax, axis=-1, keepdims=True), amax.shape)
+    if fmt == "fp8":
+        if not hasattr(jnp, "float8_e4m3fn"):
+            raise ValueError("fp8 weights need a jax build with "
+                             "jnp.float8_e4m3fn")
+        scale = jnp.maximum(amax, _TINY) / FP8_MAX
+        qw = (wf / scale[..., None, :]).astype(jnp.float8_e4m3fn)
+        return qw, scale
+    if bits not in _QMAX:
+        raise ValueError(f"bits must be one of {sorted(_QMAX)}, got {bits}")
+    qmax = _QMAX[bits]
+    scale = jnp.maximum(amax, _TINY) / qmax
+    q = jnp.round(wf / scale[..., None, :])
+    qw = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+    return qw, scale
+
+
+def dequantize(qw, scale):
+    """(qw (..., K, N), scale (..., N)) -> fp32 weights."""
+    return qw.astype(jnp.float32) * scale[..., None, :].astype(jnp.float32)
+
+
+def quantize_act(x, sa):
+    """Static-scale symmetric activation quantization: x float -> int8."""
+    q = jnp.round(x.astype(jnp.float32) / sa)
+    return jnp.clip(q, -ACT_QMAX, ACT_QMAX).astype(jnp.int8)
+
+
+def matmul(x, qw, scale):
+    """The fp32-accumulation core: (x (M, K) @ qw (K, N)) * scale (N,).
+
+    x is float (W8A16) or int8 (W8A8, pre-quantized upstream with the static
+    activation scale already folded into `scale`); qw is int8 or fp8.
+    Returns fp32 (M, N).
+    """
+    acc = jnp.dot(x.astype(jnp.float32), qw.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return acc * scale.astype(jnp.float32)[None, :]
+
+
+def quant_matmul(x, qw, ws, *, sa=None):
+    """Convenience full oracle over a weight record: quantizes activations
+    when `sa` is given, then runs the fp32 core. x: (..., K) -> (..., N)."""
+    lead, K = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, K)
+    scale = ws
+    if sa is not None:
+        x2 = quantize_act(x2, sa)
+        scale = ws * sa
+    out = matmul(x2, qw, scale)
+    return out.astype(x.dtype).reshape(*lead, qw.shape[-1])

@@ -35,7 +35,7 @@ NULL_CLASS_ID = 1000  # init_dit allocates num_classes + 1 embeddings; the
 def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
                  want_cfg: bool = False, per_request_cond: bool = False,
                  eval_dtype: str = "float32",
-                 cache_block: int = 0) -> SamplerEngine:
+                 cache_block: int = 0, quant: str = "none") -> SamplerEngine:
     """Wire the arch's eps-network into a SamplerEngine: the cond branch,
     and — for dit-family conditional sampling — the stacked 2B cond+uncond
     branch that fused CFG serves from, plus the uncond branch for the
@@ -57,12 +57,23 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
     §12, dit only): the engine gets `eps_cached` — the same network with a
     deep-feature cache split at block `cache_block` — plus the matching
     `CacheSpec`, and serves cached plans whose specs carry the same
-    `cache_block`. Incompatible with guidance (see `EngineSpec.resolve`)."""
+    `cache_block`. Incompatible with guidance (see `EngineSpec.resolve`).
+
+    quant != "none" (DESIGN.md §14, dit only) calibrates and installs the
+    tier's quantized param tree (`api.calibrate_and_quantize`, deterministic
+    given `seed`) before wiring, so every eps branch — stacked CFG, cached —
+    routes its dense sites through kernels/quant_matmul. The engine records
+    the tier and `model_fn` rejects specs that disagree, exactly like
+    eval_dtype."""
     import dataclasses
 
     if eval_dtype not in ("float32", "bfloat16"):
         raise ValueError(f"eval_dtype must be 'float32' or 'bfloat16', "
                          f"got {eval_dtype!r}")
+    if quant != "none" and cfg.family != "dit":
+        raise ValueError(f"the quantized denoiser path needs the dit "
+                         f"family; {cfg.arch_id!r} is family "
+                         f"{cfg.family!r}")
     if cache_block:
         if cfg.family != "dit":
             raise ValueError(f"cache_block needs the dit family; "
@@ -77,6 +88,11 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
     if eval_dtype == "bfloat16":
         cfg = dataclasses.replace(cfg, dtype=eval_dtype)
         params = api.cast_params_for_eval(params, eval_dtype)
+    if quant != "none":
+        # quantize after the eval cast: records are derived from the exact
+        # tree the net will otherwise read, scales stay fp32 either way
+        cfg, params, _ = api.calibrate_and_quantize(
+            cfg, params, quant, schedule=schedule, seed=seed)
     net = api.eps_network(cfg)
 
     def eps_with(extra):
@@ -111,7 +127,7 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
             raise ValueError("classifier-free guidance needs the dit family "
                              "(class-conditional eps-net)")
         return SamplerEngine(schedule, eps=eps_with({}),
-                             eval_dtype=eval_dtype)
+                             eval_dtype=eval_dtype, quant=quant)
     null = jnp.full((batch,), NULL_CLASS_ID, jnp.int32)
     if per_request_cond:
         def eps_cond(x, t, class_ids):
@@ -128,14 +144,16 @@ def build_engine(cfg, params, schedule, batch: int, seed: int = 0,
         return SamplerEngine(schedule, eps=jax.jit(eps_cond),
                              eps_stacked=jax.jit(eps_stacked),
                              eps_uncond=eps_with({"class_ids": null}),
-                             eval_dtype=eval_dtype, **cache_kw())
+                             eval_dtype=eval_dtype, quant=quant,
+                             **cache_kw())
     ids = jnp.asarray(class_ids(batch, seed=seed))
     return SamplerEngine(
         schedule,
         eps=eps_with({"class_ids": ids}),
         eps_stacked=eps_with({"class_ids": jnp.concatenate([ids, null])}),
         eps_uncond=eps_with({"class_ids": null}),
-        eval_dtype=eval_dtype, **cache_kw(baked={"class_ids": ids}),
+        eval_dtype=eval_dtype, quant=quant,
+        **cache_kw(baked={"class_ids": ids}),
     )
 
 
@@ -162,7 +180,7 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
            variant="bh2", prediction=None, batch=4, seed=0, params=None,
            loop=False, fused_update=True, cfg_scale=0.0,
            cfg_schedule="constant", thresholding=False, plan=None,
-           eval_dtype="float32"):
+           eval_dtype="float32", quant="none"):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -192,14 +210,17 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
     if loop and eval_dtype != "float32":
         raise ValueError("the python-loop reference is fp32-only; "
                          "eval_dtype rides the engine paths")
+    if loop and quant != "none":
+        raise ValueError("the python-loop reference is fp32-only; "
+                         "quantized tiers ride the engine paths")
     engine = build_engine(cfg, params, schedule, batch, seed,
                           want_cfg=cfg_scale != 0.0, eval_dtype=eval_dtype,
-                          cache_block=cache_block)
+                          cache_block=cache_block, quant=quant)
     spec = EngineSpec(solver=solver, nfe=nfe, order=order, variant=variant,
                       prediction=prediction, cfg_scale=cfg_scale,
                       cfg_schedule=cfg_schedule, thresholding=thresholding,
                       fused_update=fused_update, eval_dtype=eval_dtype,
-                      cache_block=cache_block)
+                      cache_block=cache_block, quant=quant)
     x_T = jax.random.normal(rng, latent_shape(cfg, batch), jnp.float32)
 
     t0 = time.time()
@@ -216,7 +237,8 @@ def sample(arch: str, *, reduced=True, solver="unipc", order=3, nfe=10,
     dt = time.time() - t0
     x0 = np.asarray(x0)
     path = "loop" if loop else "scan"
-    tag = f"{solver}-{order}" + (" [plan]" if plan_tab is not None else "")
+    tag = (f"{solver}-{order}" + (" [plan]" if plan_tab is not None else "")
+           + (f" [{quant}]" if quant != "none" else ""))
     cache_note = (f" evals/latent={plan.eval_cost(cfg.num_layers):.2f} "
                   f"(cache_block={cache_block})" if cache_block else "")
     print(f"{tag} [{path}] nfe={nfe_used}{cache_note} cfg={cfg_scale} "
@@ -257,6 +279,11 @@ def main():
                     help="eps-network eval precision (default fp32); "
                          "bfloat16 is the fast serving eval — solver state "
                          "and combine weights stay fp32 (DESIGN.md §11)")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "w8a16", "w8a8", "fp8a16", "w4a16"],
+                    help="quantized denoiser tier (DESIGN.md §14): int8/fp8 "
+                         "weight matmuls with calibrated scales, fp32 "
+                         "accumulation; dit family only")
     ap.add_argument("--plan", default=None,
                     help="path to a tuned SolverPlan JSON (repro.launch.tune)"
                          "; overrides --solver/--order/--nfe with the plan's "
@@ -274,6 +301,12 @@ def main():
     if args.loop and args.eval_dtype != "float32":
         ap.error("--eval-dtype rides the engine paths; the python-loop "
                  "reference is fp32-only")
+    if args.loop and args.quant != "none":
+        ap.error("--quant rides the engine paths; the python-loop "
+                 "reference is fp32-only")
+    if args.quant != "none" and get_config(args.arch).family != "dit":
+        ap.error(f"--quant needs the dit family; --arch {args.arch} is "
+                 f"family {get_config(args.arch).family!r}")
     params = None
     if args.ckpt:
         tree, _ = ckpt.restore(args.ckpt)
@@ -284,7 +317,7 @@ def main():
            loop=args.loop, fused_update=not args.no_fused_update,
            cfg_scale=args.cfg_scale, cfg_schedule=args.cfg_schedule,
            thresholding=args.thresholding, plan=args.plan,
-           eval_dtype=args.eval_dtype)
+           eval_dtype=args.eval_dtype, quant=args.quant)
 
 
 if __name__ == "__main__":

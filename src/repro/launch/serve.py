@@ -85,7 +85,7 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                     cfg_schedule="constant", thresholding=False, seed=0,
                     arrival_rate=None, trace=None, requests=None,
                     plan_bank=None, tiers=None, eval_dtype="float32",
-                    pipeline_depth=2):
+                    quant="none", pipeline_depth=2):
     """Continuous-batching diffusion serving through the engine's per-slot
     step program (`SamplerEngine.build_step` + `serving.SlotScheduler`):
     `batch` slots, requests admitted the tick a slot frees, per-request
@@ -148,16 +148,36 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                 f"plan bank {plan_bank} schedules feature reuse "
                 f"(cache_block={cache_block}) but --cfg-scale={cfg_scale}; "
                 f"cached programs serve unconditional sampling only")
+        # a quant-tuned bank records its tier in plan meta (launch/tune.py);
+        # one quantized param tree serves the whole program, so the bank
+        # must be uniform and must agree with an explicit --quant
+        bank_quants = sorted({p.meta.get("quant", "none")
+                              for p in plans.values()})
+        if len(bank_quants) > 1:
+            raise ValueError(
+                f"plan bank {plan_bank} mixes quant tiers {bank_quants}; "
+                f"one quantized param tree serves one compiled program — "
+                f"retune the bank with a single --quant")
+        if bank_quants[0] != "none":
+            if quant not in ("none", bank_quants[0]):
+                raise ValueError(
+                    f"plan bank {plan_bank} was tuned for "
+                    f"quant={bank_quants[0]!r} but --quant={quant!r}; a "
+                    f"plan's parity gate only holds for the tier it was "
+                    f"scored against")
+            quant = bank_quants[0]
     engine = build_engine(cfg, params, VPLinear(), batch, seed,
                           want_cfg=cfg_scale != 0.0, per_request_cond=True,
-                          eval_dtype=eval_dtype, cache_block=cache_block)
+                          eval_dtype=eval_dtype, cache_block=cache_block,
+                          quant=quant)
     spec = EngineSpec(solver=solver, nfe=nfe, order=order,
                       cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
                       thresholding=thresholding, fused_update=fused_update,
-                      eval_dtype=eval_dtype)
+                      eval_dtype=eval_dtype, quant=quant)
     common = dict(cfg_scale=cfg_scale, cfg_schedule=cfg_schedule,
                   thresholding=thresholding, fused_update=fused_update,
-                  eval_dtype=eval_dtype, cache_block=cache_block)
+                  eval_dtype=eval_dtype, cache_block=cache_block,
+                  quant=quant)
     tier_names = None
     if plans is not None:
         schedule = engine.schedule
@@ -207,7 +227,8 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     mode = (f"bank[{','.join(tier_names)}]" if tier_names
             else f"{solver} nfe={nfe} order={order}")
     print(f"diffusion slots={batch} {mode} depth={m.pipeline_depth} "
-          f"cfg={cfg_scale} fused_update={fused_update} eval={eval_dtype}: "
+          f"cfg={cfg_scale} fused_update={fused_update} eval={eval_dtype} "
+          f"quant={quant}: "
           f"compile {compile_s:.2f}s (AOT), tick {m.tick_s*1e3:.1f} ms, "
           f"{m.completed}/{m.requests} requests, "
           f"throughput {m.throughput_rps:.2f} req/s, "
@@ -263,6 +284,12 @@ def main():
                          "(default fp32); bfloat16 halves the network's "
                          "serving HBM traffic — solver state and combine "
                          "weights stay fp32 (DESIGN.md §11)")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "w8a16", "w8a8", "fp8a16", "w4a16"],
+                    help="diffusion serving: quantized denoiser tier "
+                         "(DESIGN.md §14); calibrates + installs int8/fp8 "
+                         "weight records before compiling the step program. "
+                         "A quant-tuned plan bank pins its own tier")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="diffusion serving: Poisson request arrivals, in "
                          "requests per tick (one tick = one batched eval); "
@@ -304,6 +331,9 @@ def main():
     if family != "dit" and args.eval_dtype != "float32":
         ap.error(f"--eval-dtype configures the diffusion engine's network "
                  f"eval; --arch {args.arch} is family '{family}'")
+    if family != "dit" and args.quant != "none":
+        ap.error(f"--quant configures the diffusion engine's denoiser; "
+                 f"--arch {args.arch} is family '{family}'")
     if ((args.plan_bank or args.tiers)
             and (args.solver is not None or args.nfe is not None
                  or args.order is not None)):
@@ -331,7 +361,7 @@ def main():
                         arrival_rate=args.arrival_rate, trace=args.trace,
                         requests=args.requests, plan_bank=args.plan_bank,
                         tiers=(args.tiers.split(",") if args.tiers else None),
-                        eval_dtype=args.eval_dtype,
+                        eval_dtype=args.eval_dtype, quant=args.quant,
                         pipeline_depth=args.pipeline_depth)
         return
     serve(args.arch, reduced=not args.full, batch=args.batch,

@@ -31,19 +31,24 @@ from ..diffusion import VPLinear
 from ..engine import EngineSpec
 from ..models import api
 from ..tuning import (SearchConfig, SolverPlan, make_objective,
-                      reference_trajectory, save_bank, tune_cached_plan,
-                      tune_plan)
+                      quant_parity_gate, reference_trajectory, save_bank,
+                      tune_cached_plan, tune_plan)
 from .sample import build_engine, latent_shape
 
 
 def _setup(arch: str, reduced: bool, batch: int, seed: int,
-           train_steps: int = 0, cache_block: int = 0):
+           train_steps: int = 0, cache_block: int = 0, quant: str = "none"):
     """Engine + probe latents for the objective. `train_steps > 0` briefly
     trains the eps-net first (diffusion objective): at random init the
     reduced nets are nearly linear and every solver lands within fp32 noise
     of the reference, so plan rankings are meaningless; ~100 steps makes the
     trajectory curvature real (same reasoning as the tier-1 trained-model
-    solver-ordering test)."""
+    solver-ordering test).
+
+    Returns (engine, x_T, fp32_engine). With `quant != "none"` the primary
+    engine serves the quantized denoiser (DESIGN.md §14) and `fp32_engine`
+    is a second engine over the SAME trained params at fp32 — the parity
+    gate's reference and baseline anchor. Otherwise fp32_engine IS engine."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -57,9 +62,13 @@ def _setup(arch: str, reduced: bool, batch: int, seed: int,
     else:
         params = api.init_params(cfg, rng)
     engine = build_engine(cfg, params, VPLinear(), batch, seed,
-                          cache_block=cache_block)
+                          cache_block=cache_block, quant=quant)
+    fp32_engine = engine
+    if quant != "none":
+        fp32_engine = build_engine(cfg, params, VPLinear(), batch, seed,
+                                   cache_block=cache_block)
     x_T = jax.random.normal(rng, latent_shape(cfg, batch), jnp.float32)
-    return engine, x_T
+    return engine, x_T, fp32_engine
 
 
 def tune(arch: str = "dit-cifar", *, nfe: int = 8, budget: int = 80,
@@ -67,7 +76,8 @@ def tune(arch: str = "dit-cifar", *, nfe: int = 8, budget: int = 80,
          ref_nfe: int = 48, batch: int = 4, seed: int = 0,
          reduced: bool = True, train_steps: int = 100, engine=None,
          x_T=None, x_ref=None, cache_block: int = 0,
-         cache_slack: float = 1.1, verbose: bool = False):
+         cache_slack: float = 1.1, quant: str = "none",
+         quant_slack: float = 1.5, fp32_engine=None, verbose: bool = False):
     """Search one NFE budget; returns (plan, report). The search starts from
     the hand-set UniPC-`baseline_order` plan, so the reported baseline IS the
     paper's default table at this budget. Pass engine/x_T/x_ref (see
@@ -77,12 +87,38 @@ def tune(arch: str = "dit-cifar", *, nfe: int = 8, budget: int = 80,
     (`tune_cached_plan`, DESIGN.md §12): the engine must be cache-wired
     (pass cache_block to `_setup`, or an `engine` built with it), and the
     report gains the no-cache anchor, the discrepancy ratio against it
-    (constrained <= `cache_slack`), and the plan's evals-per-latent."""
+    (constrained <= `cache_slack`), and the plan's evals-per-latent.
+
+    quant != "none" tunes against the quantized denoiser (DESIGN.md §14)
+    but anchors everything to fp32: the reference trajectory AND the
+    baseline anchor come from `fp32_engine` (same trained params, full
+    precision), and the tuned plan is only emitted if its discrepancy stays
+    within `quant_slack` x the fp32 baseline's — `quant_parity_gate` raises
+    `QuantParityError` otherwise. The emitted plan's meta records the tier,
+    so a serving bank pins it (`launch/serve.py --plan-bank`)."""
     if engine is None:
-        engine, x_T = _setup(arch, reduced, batch, seed, train_steps,
-                             cache_block=cache_block)
+        engine, x_T, fp32_engine = _setup(arch, reduced, batch, seed,
+                                          train_steps,
+                                          cache_block=cache_block,
+                                          quant=quant)
+    elif quant != "none" and fp32_engine is None:
+        raise ValueError("tuning a quant tier with a prebuilt engine needs "
+                         "the matching fp32_engine (same params) for the "
+                         "parity gate's reference and baseline anchor")
     spec = EngineSpec(solver="unipc", nfe=nfe, order=baseline_order,
-                      cache_block=cache_block)
+                      cache_block=cache_block, quant=quant)
+    fp32_anchor = None
+    if quant != "none":
+        from dataclasses import replace as _replace
+
+        fp32_spec = _replace(spec, quant="none")
+        if x_ref is None:
+            x_ref = reference_trajectory(fp32_engine, fp32_spec, x_T,
+                                         ref_nfe=ref_nfe)
+        anchor_obj = make_objective(fp32_engine, fp32_spec, x_T,
+                                    ref_nfe=ref_nfe, x_ref=x_ref)
+        fp32_anchor = anchor_obj(SolverPlan.from_spec(fp32_spec),
+                                 fp32_engine.schedule)
     objective = make_objective(engine, spec, x_T, ref_nfe=ref_nfe,
                                x_ref=x_ref)
     init = SolverPlan.from_spec(spec)
@@ -106,16 +142,29 @@ def tune(arch: str = "dit-cifar", *, nfe: int = 8, budget: int = 80,
                                                    1e-12),
                   "nfe_evals": nfe + 1,
                   "evals_per_latent": plan.eval_cost(n_blocks)}
-        return plan, report
-    res = tune_plan(objective, engine.schedule, init, cfg_search,
-                    verbose=verbose)
-    wall = time.perf_counter() - t0
-    plan = res.plan.with_meta(arch=arch, nfe=nfe, ref_nfe=ref_nfe,
-                              baseline_order=baseline_order, seed=seed,
-                              search_wall_s=round(wall, 3))
-    report = {"arch": arch, "nfe": nfe, "baseline": res.baseline,
-              "tuned": res.score, "improvement": res.baseline - res.score,
-              "evals": res.evals, "search_wall_s": wall}
+        tuned = cres.score
+    else:
+        res = tune_plan(objective, engine.schedule, init, cfg_search,
+                        verbose=verbose)
+        wall = time.perf_counter() - t0
+        plan = res.plan.with_meta(arch=arch, nfe=nfe, ref_nfe=ref_nfe,
+                                  baseline_order=baseline_order, seed=seed,
+                                  search_wall_s=round(wall, 3))
+        report = {"arch": arch, "nfe": nfe, "baseline": res.baseline,
+                  "tuned": res.score,
+                  "improvement": res.baseline - res.score,
+                  "evals": res.evals, "search_wall_s": wall}
+        tuned = res.score
+    if quant != "none":
+        # gate BEFORE emitting: raises QuantParityError on an over-quantized
+        # tier, so no plan with an unmet parity budget ever reaches disk
+        ratio = quant_parity_gate(tuned, fp32_anchor, slack=quant_slack,
+                                  quant=quant, context=f"{arch} nfe={nfe}")
+        plan = plan.with_meta(quant=quant, quant_slack=quant_slack,
+                              quant_ratio=round(ratio, 4),
+                              fp32_baseline=fp32_anchor)
+        report.update(quant=quant, quant_slack=quant_slack,
+                      quant_ratio=ratio, fp32_baseline=fp32_anchor)
     return plan, report
 
 
@@ -123,16 +172,20 @@ def tune_bank(arch: str, tiers: dict, *, budget: int = 80, beam: int = 2,
               rounds: int = 3, baseline_order: int = 2, seed: int = 0,
               ref_nfe: int = 48, batch: int = 4, reduced: bool = True,
               train_steps: int = 100, cache_block: int = 0,
-              cache_slack: float = 1.1, verbose: bool = False):
+              cache_slack: float = 1.1, quant: str = "none",
+              quant_slack: float = 1.5, verbose: bool = False):
     """Tune one plan per tier ({name: nfe}) over a shared engine, probe
     batch, and reference trajectory; returns ({name: plan}, [report]).
     `cache_block > 0` tunes every tier jointly with a cache schedule at that
-    shared boundary (a bank serves through ONE compiled program)."""
-    engine, x_T = _setup(arch, reduced, batch, seed, train_steps,
-                         cache_block=cache_block)
+    shared boundary (a bank serves through ONE compiled program). With
+    `quant != "none"` the whole bank is tuned against one quantized param
+    tree — the fp32 reference trajectory is shared, each tier runs its own
+    parity gate, and every plan's meta records the tier so serving pins it."""
+    engine, x_T, fp32_engine = _setup(arch, reduced, batch, seed, train_steps,
+                                      cache_block=cache_block, quant=quant)
     x_ref = reference_trajectory(
-        engine, EngineSpec(solver="unipc", nfe=ref_nfe,
-                           cache_block=cache_block), x_T,
+        fp32_engine, EngineSpec(solver="unipc", nfe=ref_nfe,
+                                cache_block=cache_block), x_T,
         ref_nfe=ref_nfe)
     plans, reports = {}, []
     for name, nfe in tiers.items():
@@ -141,7 +194,8 @@ def tune_bank(arch: str, tiers: dict, *, budget: int = 80, beam: int = 2,
                          ref_nfe=ref_nfe, seed=seed,
                          engine=engine, x_T=x_T, x_ref=x_ref,
                          cache_block=cache_block, cache_slack=cache_slack,
-                         verbose=verbose)
+                         quant=quant, quant_slack=quant_slack,
+                         fp32_engine=fp32_engine, verbose=verbose)
         plans[name] = plan.with_meta(tier=name)
         rep["tier"] = name
         reports.append(rep)
@@ -191,6 +245,15 @@ def main() -> None:
     ap.add_argument("--cache-slack", type=float, default=1.1,
                     help="max tuned-discrepancy ratio vs the no-cache anchor "
                          "the cached search may spend on reuse steps")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "w8a16", "w8a8", "fp8a16", "w4a16"],
+                    help="tune against the quantized denoiser tier "
+                         "(DESIGN.md §14); the plan is only emitted if its "
+                         "discrepancy vs the fp32 reference passes the "
+                         "parity gate (exits nonzero otherwise)")
+    ap.add_argument("--quant-slack", type=float, default=1.5,
+                    help="parity budget: max tuned-discrepancy ratio vs the "
+                         "fp32 baseline a quantized tier may cost")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write the tuned plan (or bank) JSON here")
@@ -223,11 +286,16 @@ def main() -> None:
             seed=args.seed, ref_nfe=args.ref_nfe,
             batch=args.batch, reduced=not args.full,
             train_steps=args.train_steps, cache_block=args.cache_block,
-            cache_slack=args.cache_slack, verbose=args.verbose)
+            cache_slack=args.cache_slack, quant=args.quant,
+            quant_slack=args.quant_slack, verbose=args.verbose)
         for rep in reports:
             print(f"tier {rep['tier']} (nfe={rep['nfe']}): baseline "
                   f"{rep['baseline']:.5f} -> tuned {rep['tuned']:.5f} "
                   f"({rep['evals']} evals, {rep['search_wall_s']:.1f}s)")
+            if args.quant != "none":
+                print(f"    quant {args.quant}: {rep['quant_ratio']:.3f}x "
+                      f"the fp32 baseline {rep['fp32_baseline']:.5f} "
+                      f"(budget {args.quant_slack}x) — parity gate passed")
         if args.out:
             save_bank(args.out, plans)
             print(f"wrote bank ({', '.join(plans)}) to {args.out}")
@@ -239,10 +307,15 @@ def main() -> None:
                         seed=args.seed, reduced=not args.full,
                         train_steps=args.train_steps,
                         cache_block=args.cache_block,
-                        cache_slack=args.cache_slack, verbose=args.verbose)
+                        cache_slack=args.cache_slack, quant=args.quant,
+                        quant_slack=args.quant_slack, verbose=args.verbose)
     print(f"{args.arch} nfe={args.nfe}: baseline {report['baseline']:.5f} "
           f"-> tuned {report['tuned']:.5f} ({report['evals']} evals, "
           f"{report['search_wall_s']:.1f}s)")
+    if args.quant != "none":
+        print(f"  quant {args.quant}: {report['quant_ratio']:.3f}x the fp32 "
+              f"baseline {report['fp32_baseline']:.5f} "
+              f"(budget {args.quant_slack}x) — parity gate passed")
     if args.cache_block:
         print(f"  cached @ block {args.cache_block}: "
               f"{report['evals_per_latent']:.2f} evals/latent vs "

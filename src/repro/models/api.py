@@ -126,6 +126,32 @@ def cast_params_for_eval(params, eval_dtype: str):
         params)
 
 
+def calibrate_and_quantize(cfg: ModelConfig, params, quant, *, schedule=None,
+                           nfe: int = 6, calib_batch: int = 2, seed: int = 0):
+    """Quantized serving path (DESIGN.md §14): calibrate + install records.
+
+    `quant` is a tier name from models.quant.QUANT_MODES ("w8a16", "w8a8",
+    ...) or a QuantSpec. Weight scales come from per-output-channel absmax
+    of the weights themselves; a8 tiers additionally record per-site
+    activation absmax over `calib_batch` deterministic reference
+    trajectories (same seed -> bit-identical scales). Returns
+    (cfg', params', info): cfg' carries the spec (and is what eps_network
+    should be built from), params' the quantized tree.
+    """
+    import dataclasses
+
+    from .quant import calibrate_act_stats, quant_spec, quantize_params
+
+    spec = quant_spec(quant) if isinstance(quant, str) else quant
+    stats = None
+    if spec.act_bits == 8:
+        stats = calibrate_act_stats(cfg, params, schedule=schedule, nfe=nfe,
+                                    batch=calib_batch, seed=seed)
+    qparams = quantize_params(cfg, params, spec, act_stats=stats)
+    cfg = dataclasses.replace(cfg, quant=spec)
+    return cfg, qparams, {"spec": spec, "act_stats": stats}
+
+
 def eps_network(cfg: ModelConfig) -> Callable:
     """(params, x_t (B,S,L), t, batch) -> eps-hat — what UniPC samples from."""
     if cfg.family == "dit":

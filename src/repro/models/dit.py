@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from ..kernels.adaln_modulate import ops as adaln_ops
 from ..parallel.sharding import shard
-from .layers import attention_apply, attention_init, dense_init
+from .layers import attention_apply, attention_init, dense_apply, dense_init
 
 
 def timestep_embedding(t, dim: int, max_period=10000.0):
@@ -84,27 +84,40 @@ def _embed(params, cfg, x_t, t, class_ids):
     return x, c
 
 
-def _block_body(cfg, c, adaln):
-    """Scan body over the stacked block params (fused adaLN, DESIGN.md §11)."""
+def _block_body(cfg, c, adaln, tap=None):
+    """Scan body over the stacked block params (fused adaLN, DESIGN.md §11).
+    Every dense site goes through `dense_apply`, so a quantized param tree
+    (models/quant.py records) routes through kernels/quant_matmul with no
+    change here. `tap` is the calibration hook — None (the default) in every
+    serving/training path, a per-site absmax recorder when models/quant.py
+    replays the forward unrolled."""
 
     def body(h, bp):
-        mod = (jnp.einsum("bd,de->be", c, bp["ada"].astype(h.dtype))
-               + bp["ada_b"].astype(h.dtype))
+        if tap is not None:
+            tap("ada", c)
+        mod = dense_apply(c, bp["ada"], cfg) + bp["ada_b"].astype(h.dtype)
         sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
         hn = adaln_ops.modulate(h, sh1, sc1, backend=adaln)
-        a = attention_apply(bp["attn"], hn, cfg, causal=False, rope=False)
+        a = attention_apply(bp["attn"], hn, cfg, causal=False, rope=False,
+                            tap=tap)
         h = adaln_ops.gate_residual(h, g1, a, backend=adaln)
         hn = adaln_ops.modulate(h, sh2, sc2, backend=adaln)
-        y = jnp.einsum("btd,df->btf", hn, bp["w1"].astype(h.dtype))
-        y = jnp.einsum("btf,fd->btd", jax.nn.gelu(y), bp["w2"].astype(h.dtype))
+        if tap is not None:
+            tap("mlp_in", hn)
+        y = jax.nn.gelu(dense_apply(hn, bp["w1"], cfg))
+        if tap is not None:
+            tap("mlp_mid", y)
+        y = dense_apply(y, bp["w2"], cfg)
         return adaln_ops.gate_residual(h, g2, y, backend=adaln), None
 
     return body
 
 
-def _head(params, x, c, adaln):
+def _head(params, cfg, x, c, adaln, tap=None):
     """Final adaLN + output projection back to latent width."""
-    mod = (jnp.einsum("bd,de->be", c, params["final_ada"].astype(x.dtype))
+    if tap is not None:
+        tap("final_ada", c)
+    mod = (dense_apply(c, params["final_ada"], cfg)
            + params["final_ada_b"].astype(x.dtype))
     sh, sc = jnp.split(mod, 2, axis=-1)
     x = adaln_ops.modulate(x, sh, sc, backend=adaln)
@@ -116,7 +129,7 @@ def dit_apply(params, cfg, x_t, t, class_ids=None):
     adaln = getattr(cfg, "adaln_backend", None)
     x, c = _embed(params, cfg, x_t, t, class_ids)
     x, _ = jax.lax.scan(_block_body(cfg, c, adaln), x, params["blocks"])
-    return _head(params, x, c, adaln)
+    return _head(params, cfg, x, c, adaln)
 
 
 def dit_cache_shape(cfg):
@@ -173,4 +186,4 @@ def dit_apply_cached(params, cfg, x_t, t, class_ids=None, *, cache,
     # slots approximate it as x_k + cached delta and keep their cache
     x_out = jnp.where(r, x_k + cache, x_deep)
     new_cache = jnp.where(r, cache, x_deep - x_k)
-    return _head(params, x_out, c, adaln), new_cache
+    return _head(params, cfg, x_out, c, adaln), new_cache

@@ -26,6 +26,22 @@ def dense_init(rng, d_in, d_out, dtype, scale=None):
     return _normal(rng, (d_in, d_out), scale, dtype)
 
 
+def dense_apply(x, w, cfg=None):
+    """x (..., K) @ w — the one dense contraction every weight site routes
+    through. `w` is either a raw (K, N) array (the unchanged float path) or
+    a quant record ``{"qw", "ws"[, "sa"]}`` installed by
+    `models.quant.quantize_params`, which routes through the
+    kernels/quant_matmul package (DESIGN.md §14). The check is structural
+    and static per trace, so unquantized models pay nothing."""
+    if isinstance(w, dict):
+        from ..kernels.quant_matmul import ops as qmm_ops
+
+        return qmm_ops.quant_matmul(
+            x, w["qw"], w["ws"], sa=w.get("sa"),
+            backend=getattr(cfg, "quant_backend", None))
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
 # ---------------------------------------------------------------------------
 # norms
 # ---------------------------------------------------------------------------
@@ -113,13 +129,13 @@ def mlp_init(rng, cfg, d_ff=None):
 
 def mlp_apply(params, x, cfg):
     if cfg.act == "swiglu":
-        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
-        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+        g = dense_apply(x, params["w_gate"], cfg)
+        u = dense_apply(x, params["w_up"], cfg)
         h = jax.nn.silu(g) * u
     else:
-        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype)))
+        h = jax.nn.gelu(dense_apply(x, params["w_up"], cfg))
     h = shard(h, "batch", "seq", "d_ff")
-    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+    return dense_apply(h, params["w_down"], cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -145,11 +161,13 @@ def attention_init(rng, cfg, d_kv_src: Optional[int] = None):
     return p
 
 
-def _proj_qkv(params, x, kv_src, cfg):
+def _proj_qkv(params, x, kv_src, cfg, tap=None):
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,de->bse", kv_src, params["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,de->bse", kv_src, params["wv"].astype(x.dtype))
+    if tap is not None:  # calibration hook (models/quant.py); None in serving
+        tap("qkv", x)
+    q = dense_apply(x, params["wq"], cfg)
+    k = dense_apply(kv_src, params["wk"], cfg)
+    v = dense_apply(kv_src, params["wv"], cfg)
     if "bq" in params:
         q = q + params["bq"].astype(x.dtype)
         k = k + params["bk"].astype(x.dtype)
@@ -222,10 +240,11 @@ def chunked_sdpa(q, k, v, *, causal, sliding_window=None, chunk=1024):
 
 
 def attention_apply(params, x, cfg, *, kv_src=None, causal=True, positions=None,
-                    kv_positions=None, sliding_window=None, rope=True):
+                    kv_positions=None, sliding_window=None, rope=True,
+                    tap=None):
     """Full-sequence attention (training / prefill without cache)."""
     kv_src = x if kv_src is None else kv_src
-    q, k, v = _proj_qkv(params, x, kv_src, cfg)
+    q, k, v = _proj_qkv(params, x, kv_src, cfg, tap=tap)
     if rope:
         B, S = x.shape[:2]
         pos = positions if positions is not None else jnp.broadcast_to(
@@ -256,7 +275,9 @@ def attention_apply(params, x, cfg, *, kv_src=None, causal=True, positions=None,
         ).transpose(0, 2, 1, 3)
     B, S = x.shape[:2]
     out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
-    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    if tap is not None:
+        tap("wo", out)
+    return dense_apply(out, params["wo"], cfg)
 
 
 def maybe_remat(body, cfg):

@@ -1,0 +1,219 @@
+"""Quantized denoiser path: QuantSpec, calibration, param-tree quantization.
+
+DESIGN.md §14. The flow is
+
+    QuantSpec (a serving tier's precision contract)
+      -> calibrate_act_stats (per-site activation absmax over a few
+         deterministic reference trajectories; only the a8 tiers need it)
+      -> quantize_params (replace each selected weight leaf with a quant
+         record {"qw", "ws"[, "sa"]})
+      -> layers.dense_apply routes records through kernels/quant_matmul
+
+Routing is purely structural: a dense site sees either a raw weight array
+(unchanged fp path) or a record installed here, so the cached feature-reuse
+forward, CFG stacking, and every other eval path quantize for free. Static
+metadata (bits, granularity, families) lives on the spec — the param tree
+carries only arrays, which keeps the stacked block leaves scannable.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..diffusion.schedules import VPLinear
+from ..kernels.quant_matmul import ref as qref
+from . import dit
+
+FAMILIES = ("attn", "mlp", "adaln")
+
+# dense-site -> (family, activation-stat name); per-block sites live inside
+# params["backbone"]["blocks"], final_ada at the backbone top level. wq/wk/wv
+# share one stat: DiT attention is self-attention, all three read the same
+# normed activation.
+_BLOCK_SITES = {
+    "wq": ("attn", "qkv"), "wk": ("attn", "qkv"), "wv": ("attn", "qkv"),
+    "wo": ("attn", "wo"),
+    "w1": ("mlp", "mlp_in"), "w2": ("mlp", "mlp_mid"),
+    "ada": ("adaln", "ada"),
+}
+PER_BLOCK_STATS = ("qkv", "wo", "mlp_in", "mlp_mid", "ada")
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """A quality tier's precision contract (immutable, hashable — lives on
+    the model config and inside EngineSpec validation)."""
+    bits: int = 8               # weight bits: 8 | 4 (int8 container)
+    act_bits: int = 16          # 16 = float activations, 8 = static int8
+    granularity: str = "channel"  # per-output-"channel" | per-"tensor"
+    fmt: str = "int"            # "int" | "fp8" (e4m3 weights)
+    families: Tuple[str, ...] = FAMILIES
+
+
+# the serving-facing tier names (EngineSpec.quant / --quant). "w4a16" is the
+# deliberately harsh tier: per-tensor int4 exists to prove the tuner's
+# parity gate rejects an over-quantized spec, not to ship.
+QUANT_MODES = {
+    "w8a16": QuantSpec(),
+    "w8a8": QuantSpec(act_bits=8),
+    "fp8a16": QuantSpec(fmt="fp8"),
+    "w4a16": QuantSpec(bits=4, granularity="tensor"),
+}
+
+
+def quant_spec(mode: str) -> QuantSpec:
+    if mode not in QUANT_MODES:
+        raise ValueError(f"quant mode must be one of "
+                         f"{('none',) + tuple(QUANT_MODES)}, got {mode!r}")
+    return QUANT_MODES[mode]
+
+
+def _require_dit(cfg):
+    if cfg.family != "dit":
+        raise ValueError(f"the quantized denoiser path needs the dit family "
+                         f"(adaLN block stack); arch {cfg.arch_id!r} is "
+                         f"family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# calibration: per-site activation absmax over reference trajectories
+# ---------------------------------------------------------------------------
+
+def calibrate_act_stats(cfg, params, *, schedule=None, nfe: int = 6,
+                        batch: int = 2, seed: int = 0, class_ids=None):
+    """Record per-dense-site activation absmax along `batch` deterministic
+    DDIM reference trajectories (probe latents from PRNGKey(seed)).
+
+    Runs eagerly with the block scan unrolled in python — inside `lax.scan`
+    the per-block activations are tracers, so the unrolled replay is what
+    makes per-block stats observable. The replay chains the *same*
+    `dit._block_body` the shipped forward scans (tap hooks default to None
+    there), so the recorded activations are exactly the serving ones; a
+    tier-1 test pins replay == `dit_apply` to catch drift.
+
+    Returns {stat_name: np.float32 array}, (num_layers,) per block site and
+    scalar for final_ada. Pure deterministic fp given (params, seed, nfe,
+    batch) — same trajectories, bit-identical stats.
+    """
+    _require_dit(cfg)
+    schedule = schedule or VPLinear()
+    L = int(cfg.num_layers)
+    stats = {name: np.zeros((L,), np.float32) for name in PER_BLOCK_STATS}
+    stats["final_ada"] = np.zeros((), np.float32)
+
+    key = jax.random.PRNGKey(seed)
+    k_x, k_c = jax.random.split(key)
+    x = jax.random.normal(
+        k_x, (batch, cfg.patch_tokens, cfg.latent_dim),
+        jnp.float32).astype(cfg.activation_dtype)
+    bk = params["backbone"]
+    if class_ids is None and "class_embed" in bk:
+        n_cls = bk["class_embed"].shape[0] - 1
+        class_ids = jax.random.randint(k_c, (batch,), 0, n_cls)
+
+    cur = {"i": 0}
+
+    def tap(site, v):
+        m = np.float32(jnp.max(jnp.abs(v.astype(jnp.float32))))
+        if stats[site].ndim:
+            i = cur["i"]
+            stats[site][i] = max(stats[site][i], m)
+        else:
+            stats[site] = np.maximum(stats[site], m)
+
+    def tapped_eps(x_t, t):
+        adaln = getattr(cfg, "adaln_backend", None)
+        h, c = dit._embed(bk, cfg, x_t, t, class_ids)
+        body = dit._block_body(cfg, c, adaln, tap=tap)
+        for i in range(L):
+            cur["i"] = i
+            bp = jax.tree.map(lambda a: a[i], bk["blocks"])
+            h, _ = body(h, bp)
+        return dit._head(bk, cfg, h, c, adaln, tap=tap)
+
+    # coarse DDIM trajectory, T -> t_eps: the probe visits the same noise
+    # levels a served request does, so the absmax covers the serving range
+    ts = np.linspace(schedule.T, schedule.t_eps, nfe + 1)
+    for t, t_next in zip(ts[:-1], ts[1:]):
+        eps = tapped_eps(x, t)
+        a, s = float(schedule.alpha(t)), float(schedule.sigma(t))
+        a_n, s_n = float(schedule.alpha(t_next)), float(schedule.sigma(t_next))
+        x0 = (x - s * eps) / a
+        x = a_n * x0 + s_n * eps
+    tapped_eps(x, ts[-1])  # stats at the final (lowest-noise) state too
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# param-tree quantization
+# ---------------------------------------------------------------------------
+
+def _record(w, spec: QuantSpec, amax=None):
+    qw, ws = qref.quantize(w, bits=spec.bits, granularity=spec.granularity,
+                           fmt=spec.fmt)
+    rec = {"qw": qw, "ws": ws}
+    if spec.act_bits == 8:
+        rec["sa"] = jnp.maximum(
+            jnp.asarray(amax, jnp.float32), 1e-12) / qref.ACT_QMAX
+    return rec
+
+
+def quantize_params(cfg, params, spec: QuantSpec, act_stats=None):
+    """Replace the selected dense weight leaves with quant records.
+
+    Per-block leaves are stacked (L, K, N); quantization reduces over the K
+    axis only, so each block keeps independent per-channel scales and the
+    records stay scannable. `act_stats` (from `calibrate_act_stats`) is
+    required for a8 tiers: the (L,) per-site absmax becomes a stacked static
+    activation scale, unstacked per block by the scan.
+    """
+    _require_dit(cfg)
+    if spec.act_bits == 8 and act_stats is None:
+        raise ValueError("act_bits=8 needs calibrated activation stats — "
+                         "run models.quant.calibrate_act_stats (or go "
+                         "through api.calibrate_and_quantize)")
+    out = jax.tree.map(lambda a: a, params)  # shallow-ish copy of the dicts
+    bk = dict(out["backbone"])
+    blocks = dict(bk["blocks"])
+    for name, (family, stat) in _BLOCK_SITES.items():
+        if family not in spec.families:
+            continue
+        amax = act_stats[stat] if spec.act_bits == 8 else None
+        if name in ("wq", "wk", "wv", "wo"):
+            attn = dict(blocks["attn"])
+            attn[name] = _record(attn[name], spec, amax)
+            blocks["attn"] = attn
+        else:
+            blocks[name] = _record(blocks[name], spec, amax)
+    bk["blocks"] = blocks
+    if "adaln" in spec.families:
+        amax = act_stats["final_ada"] if spec.act_bits == 8 else None
+        bk["final_ada"] = _record(bk["final_ada"], spec, amax)
+    out["backbone"] = bk
+    return out
+
+
+def quant_param_bytes(params) -> dict:
+    """Quantized vs fp32 weight-byte accounting over the installed records
+    (benchmarks): {"quant": bytes actually stored, "fp32": the bytes the
+    same sites would cost unquantized}."""
+    n = {"quant": 0, "fp32": 0}
+
+    def visit(sub):
+        if isinstance(sub, dict) and "qw" in sub:
+            n["quant"] += sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                              for v in sub.values())
+            n["fp32"] += int(np.prod(sub["qw"].shape)) * 4
+            return
+        if isinstance(sub, dict):
+            for v in sub.values():
+                visit(v)
+
+    visit(params)
+    return n

@@ -19,7 +19,8 @@ stack into one row-gatherable table (`core.stack_step_rows`) that a single
 compiled `StepProgram` serves as fast/balanced/quality tiers.
 """
 
-from .objective import PlanObjective, make_objective, reference_trajectory
+from .objective import (PlanObjective, QuantParityError, make_objective,
+                        quant_parity_gate, reference_trajectory)
 from .plans import SolverPlan, load_bank, save_bank
 from .search import (CachedSearchResult, SearchConfig, SearchResult,
                      tune_cached_plan, tune_plan)
@@ -27,6 +28,7 @@ from .search import (CachedSearchResult, SearchConfig, SearchResult,
 __all__ = [
     "SolverPlan", "save_bank", "load_bank",
     "PlanObjective", "make_objective", "reference_trajectory",
+    "QuantParityError", "quant_parity_gate",
     "SearchConfig", "SearchResult", "tune_plan",
     "CachedSearchResult", "tune_cached_plan",
 ]

@@ -100,6 +100,36 @@ class PlanObjective:
         return jax.jit(run)
 
 
+class QuantParityError(RuntimeError):
+    """A tuned quantized plan failed its parity budget (DESIGN.md §14).
+
+    Raised by `quant_parity_gate` when the tuned plan's trajectory
+    discrepancy — measured against the *fp32* reference trajectory — exceeds
+    `slack` times what the fp32 hand-set baseline achieves at the same NFE
+    budget. The tier is over-quantized for this arch/budget; the plan must
+    not be emitted."""
+
+
+def quant_parity_gate(tuned: float, fp32_anchor: float, *, slack: float,
+                      quant: str, context: str = "") -> float:
+    """Enforce the quantized tier's parity budget; returns the ratio.
+
+    `tuned` is the tuned quantized plan's discrepancy vs the fp32
+    reference; `fp32_anchor` is the fp32 baseline plan's discrepancy vs the
+    same reference (same probe latents, same budget). Both are measured
+    against the SAME x_ref, so the ratio isolates what quantization costs
+    on top of the solver's own truncation error."""
+    where = f" ({context})" if context else ""
+    ratio = tuned / max(fp32_anchor, 1e-12)
+    if ratio > slack:
+        raise QuantParityError(
+            f"quant tier {quant!r} failed its parity gate{where}: tuned "
+            f"discrepancy {tuned:.6f} is {ratio:.2f}x the fp32 baseline "
+            f"{fp32_anchor:.6f} (budget {slack}x) — the tier is "
+            f"over-quantized for this arch/budget; not emitting the plan")
+    return ratio
+
+
 def reference_trajectory(engine, spec, x_T, *, ref_nfe: int = 64,
                          ref_order: int = 3) -> np.ndarray:
     """Terminal states of the high-NFE UniPC-`ref_order` reference run from

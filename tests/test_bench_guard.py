@@ -138,6 +138,73 @@ def test_guard_fails_when_cache_stops_paying(bench_root):
     assert "below its NFE floor" in r.stderr
 
 
+def test_guard_fails_when_quant_runs_are_dropped(bench_root):
+    """The quantized-eval trajectory (DESIGN.md §14) is load-bearing:
+    stripping quant_runs from an otherwise valid BENCH_model.json must fail
+    the guard by name."""
+    path = bench_root / "BENCH_model.json"
+    data = json.loads(path.read_text())
+    data.pop("quant_runs")
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "quant_runs" in r.stderr and "BENCH_model.json" in r.stderr
+
+
+def test_guard_fails_when_w8_tier_disappears(bench_root):
+    """Each arch must keep a w8 row — an artifact that only carries some
+    other tier predates (or silently dropped) the acceptance criterion."""
+    path = bench_root / "BENCH_model.json"
+    data = json.loads(path.read_text())
+    arch = data["quant_runs"][0]["arch"]
+    data["quant_runs"] = [run for run in data["quant_runs"]
+                          if run["arch"] != arch
+                          or not str(run["mode"]).startswith("w8")]
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "no w8 tier" in r.stderr and arch in r.stderr
+
+
+def test_guard_fails_when_quant_stops_shrinking_params(bench_root):
+    """Param-bytes is the platform-independent win, so it is enforced even
+    on cpu-stamped artifacts: a quant tier whose packed bytes match fp32
+    quantized nothing."""
+    path = bench_root / "BENCH_model.json"
+    data = json.loads(path.read_text())
+    for run in data["quant_runs"]:
+        run["quant_param_bytes"] = run["fp32_param_bytes"]
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "shrinks param" in r.stderr
+
+
+def test_guard_warns_but_passes_without_env_stamp(bench_root):
+    """A pre-stamp artifact is treated as cpu-produced: low-precision
+    wall-clock rules go informational rather than failing spuriously."""
+    path = bench_root / "BENCH_model.json"
+    data = json.loads(path.read_text())
+    data.pop("env")
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode == 0, r.stderr
+    assert "no env stamp" in r.stdout
+
+
+def test_guard_enforces_lowp_wallclock_on_accelerator_stamp(bench_root):
+    """The same committed cpu numbers re-stamped as gpu-produced must fail:
+    on an accelerator the bf16/quant wall-clock and HBM wins are enforced,
+    not informational."""
+    path = bench_root / "BENCH_model.json"
+    data = json.loads(path.read_text())
+    data["env"]["backend"] = "gpu"
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "bf16" in r.stderr or "quant tier" in r.stderr
+
+
 def test_summarize_ok_then_fatal_on_empty_root(bench_root, tmp_path):
     r = _summarize(bench_root)
     assert r.returncode == 0, r.stderr
@@ -161,3 +228,15 @@ def test_summarize_fatal_on_schema_drift(bench_root):
     r = _summarize(bench_root)
     assert r.returncode != 0
     assert "BENCH_serve.json" in r.stderr and "'runs'" in r.stderr
+
+
+def test_summarize_fatal_when_quant_runs_are_dropped(bench_root):
+    """run.py's artifact-integrity pass mirrors the guard: BENCH_model.json
+    without its quant_runs section is a hole in the tracked trajectory."""
+    path = bench_root / "BENCH_model.json"
+    data = json.loads(path.read_text())
+    data["quant_runs"] = []
+    path.write_text(json.dumps(data))
+    r = _summarize(bench_root)
+    assert r.returncode != 0
+    assert "quant_runs" in r.stderr and "BENCH_model.json" in r.stderr

@@ -1,0 +1,311 @@
+"""Quantized denoiser path (DESIGN.md §14): kernel parity, calibration,
+structural routing, the serving handshake, and the tuner's parity gate.
+
+The tiers under test are the shipped QUANT_MODES: w8a16 (per-channel int8
+weights, float activations), w8a8 (static calibrated int8 activations),
+fp8a16 (e4m3 weights), and w4a16 — the deliberately harsh per-tensor int4
+tier whose only job is to prove the parity gate rejects an over-quantized
+spec.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.diffusion import VPLinear
+from repro.engine import EngineSpec
+from repro.kernels.quant_matmul import ops as qops
+from repro.kernels.quant_matmul import ref as qref
+from repro.models import api
+from repro.models.quant import (QUANT_MODES, calibrate_act_stats,
+                                quant_param_bytes, quant_spec,
+                                quantize_params)
+
+# ---------------------------------------------------------------------------
+# kernel package
+# ---------------------------------------------------------------------------
+
+# deliberately not tile multiples: remainder tiles on every axis
+ODD_SHAPES = ((5, 37, 130), (1, 7, 3))
+
+
+@pytest.mark.parametrize("granularity", qref.GRANULARITIES)
+@pytest.mark.parametrize("M,K,N", ODD_SHAPES)
+def test_kernel_interpret_matches_jnp_oracle(M, K, N, granularity):
+    """The blocked Pallas kernel (interpreted) must agree with the fp32
+    oracle at non-tile-multiple shapes — zero-padding is exact under fp32
+    accumulation, so only summation order may differ."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    qw, ws = qref.quantize(w, granularity=granularity)
+    ref = qops.quant_matmul(x, qw, ws, backend="jnp")
+    ker = qops.quant_matmul(x, qw, ws, backend="interpret")
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_interpret_matches_jnp_oracle_a8():
+    """Same agreement on the W8A8 path: activations quantized with a static
+    scale, sa folded into the weight scale on both backends."""
+    M, K, N = 5, 37, 130
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    qw, ws = qref.quantize(w)
+    sa = float(jnp.max(jnp.abs(x))) / qref.ACT_QMAX
+    ref = qops.quant_matmul(x, qw, ws, sa=sa, backend="jnp")
+    ker = qops.quant_matmul(x, qw, ws, sa=sa, backend="interpret")
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", (8, 4))
+@pytest.mark.parametrize("granularity", qref.GRANULARITIES)
+def test_roundtrip_error_bounded_by_half_step(bits, granularity):
+    """Symmetric absmax round-to-nearest: |w - deq(q(w))| <= scale/2
+    elementwise, with scale broadcast per output channel."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (23, 17), jnp.float32)
+    qw, ws = qref.quantize(w, bits=bits, granularity=granularity)
+    deq = qref.dequantize(qw, ws)
+    bound = np.asarray(ws)[None, :] * 0.5 + 1e-7
+    assert (np.abs(np.asarray(deq) - np.asarray(w)) <= bound).all()
+    if granularity == "tensor":
+        assert np.unique(np.asarray(ws)).size == 1
+
+
+@pytest.mark.skipif(not hasattr(jnp, "float8_e4m3fn"),
+                    reason="no fp8 dtype in this jax build")
+def test_fp8_quantize_roundtrip_bounded():
+    w = jax.random.normal(jax.random.PRNGKey(3), (31, 9), jnp.float32)
+    qw, ws = qref.quantize(w, fmt="fp8")
+    assert qw.dtype == jnp.float8_e4m3fn
+    deq = np.asarray(qref.dequantize(qw, ws))
+    # e4m3 carries a ~2^-3 relative mantissa step after per-channel scaling
+    err = np.abs(deq - np.asarray(w))
+    tol = np.maximum(np.abs(np.asarray(w)) * 0.0725,
+                     np.asarray(ws)[None, :] * 0.5)
+    assert (err <= tol + 1e-7).all()
+
+
+def test_quantize_act_static_scale_range():
+    x = 3.0 * jax.random.normal(jax.random.PRNGKey(4), (11, 5), jnp.float32)
+    sa = float(jnp.max(jnp.abs(x))) / qref.ACT_QMAX
+    q = np.asarray(qref.quantize_act(x, sa))
+    assert q.dtype == np.int8
+    assert np.abs(q).max() <= qref.ACT_QMAX
+    np.testing.assert_allclose(q * sa, np.asarray(x), atol=sa * 0.5 + 1e-7)
+
+
+def test_quantize_rejects_bad_args():
+    w = jnp.ones((4, 4))
+    with pytest.raises(ValueError, match="granularity"):
+        qref.quantize(w, granularity="row")
+    with pytest.raises(ValueError, match="bits"):
+        qref.quantize(w, bits=3)
+
+
+# ---------------------------------------------------------------------------
+# model-level: calibration + param-tree quantization
+# ---------------------------------------------------------------------------
+
+
+def _tiny_dit(seed=0, perturb=0.0, **overrides):
+    cfg = get_config("dit-cifar").reduced(num_layers=2, **overrides)
+    params = api.init_params(cfg, jax.random.PRNGKey(seed))
+    if perturb:
+        leaves, td = jax.tree.flatten(params)
+        ks = jax.random.split(jax.random.PRNGKey(9), len(leaves))
+        params = jax.tree.unflatten(td, [
+            a + perturb * jax.random.normal(k, a.shape, a.dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a
+            for a, k in zip(leaves, ks)])
+    return cfg, params
+
+
+def test_calibration_bit_deterministic():
+    cfg, params = _tiny_dit(perturb=0.05)
+    s1 = calibrate_act_stats(cfg, params, nfe=2, batch=1, seed=0)
+    s2 = calibrate_act_stats(cfg, params, nfe=2, batch=1, seed=0)
+    assert sorted(s1) == sorted(s2)
+    for k in s1:
+        np.testing.assert_array_equal(s1[k], s2[k])
+        assert (np.asarray(s1[k]) > 0).all()
+
+
+def test_quantize_params_structural_routing():
+    """Records land exactly at the configured families; everything else is
+    untouched; a8 without calibration stats is an error."""
+    cfg, params = _tiny_dit()
+    spec = quant_spec("w8a16")
+    qp = quantize_params(cfg, params, spec)
+    blocks = qp["backbone"]["blocks"]
+    for name in ("wq", "wk", "wv", "wo"):
+        rec = blocks["attn"][name]
+        assert set(rec) == {"qw", "ws"} and rec["qw"].dtype == jnp.int8
+    for name in ("w1", "w2", "ada"):
+        assert set(blocks[name]) == {"qw", "ws"}
+    assert set(qp["backbone"]["final_ada"]) == {"qw", "ws"}
+    # stacked block leaves keep per-block leading axis (scannable)
+    assert blocks["w1"]["qw"].shape[0] == cfg.num_layers
+    # non-selected leaves: same arrays, no records
+    np.testing.assert_array_equal(np.asarray(qp["backbone"]["out_proj"]),
+                                  np.asarray(params["backbone"]["out_proj"]))
+    with pytest.raises(ValueError, match="act_bits=8"):
+        quantize_params(cfg, params, quant_spec("w8a8"))
+
+
+def test_quant_param_bytes_shrink():
+    cfg, params = _tiny_dit()
+    qp = quantize_params(cfg, params, quant_spec("w8a16"))
+    n = quant_param_bytes(qp)
+    assert 0 < n["quant"] < 0.3 * n["fp32"]
+
+
+@pytest.mark.parametrize("mode", sorted(QUANT_MODES))
+def test_quantized_eval_tracks_fp32(mode):
+    """Every shipped tier's eval stays within its documented band of the
+    fp32 eval on a perturbed tiny DiT; the band ordering (w8 < fp8 < w4) is
+    what makes w4a16 the gate-tripping tier."""
+    if mode == "fp8a16" and not hasattr(jnp, "float8_e4m3fn"):
+        pytest.skip("no fp8 dtype in this jax build")
+    tol = {"w8a16": 2e-2, "w8a8": 5e-2, "fp8a16": 5e-2, "w4a16": 3e-1}[mode]
+    cfg, params = _tiny_dit(perturb=0.05)
+    net = api.eps_network(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5),
+                          (2, cfg.patch_tokens, cfg.latent_dim), jnp.float32)
+    t = jnp.full((2,), 0.4, jnp.float32)
+    batch = {"class_ids": jnp.zeros((2,), jnp.int32)}
+    ref = np.asarray(net(params, x, t, batch))
+    assert np.abs(ref).max() > 0
+    qcfg, qparams, info = api.calibrate_and_quantize(cfg, params, mode,
+                                                     nfe=2, calib_batch=1)
+    assert info["spec"] is QUANT_MODES[mode]
+    q = np.asarray(api.eps_network(qcfg)(qparams, x, t, batch))
+    rel = np.linalg.norm(q - ref) / np.linalg.norm(ref)
+    assert rel < tol, f"{mode}: rel err {rel:.3e} >= {tol}"
+
+
+def test_cached_eval_bitwise_matches_plain_under_quant():
+    """Feature reuse composes with quantization structurally: the
+    cache-wired eval with reuse=0 is BITWISE the plain quantized eval, and
+    a shallow (reuse=1) eval runs the quantized records and stays finite."""
+    cfg, params = _tiny_dit(perturb=0.05)
+    qcfg, qparams, _ = api.calibrate_and_quantize(cfg, params, "w8a16")
+    x = jax.random.normal(jax.random.PRNGKey(6),
+                          (2, cfg.patch_tokens, cfg.latent_dim), jnp.float32)
+    t = jnp.full((2,), 0.6, jnp.float32)
+    batch = {"class_ids": jnp.zeros((2,), jnp.int32)}
+    plain = np.asarray(api.eps_network(qcfg)(qparams, x, t, batch))
+    cached_net = api.eps_network_cached(qcfg, cache_block=1)
+    cache0 = jnp.zeros((2, qcfg.patch_tokens, qcfg.d_model), x.dtype)
+    full, cache = cached_net(qparams, x, t, batch, cache0,
+                             jnp.zeros((2,), jnp.bool_))
+    np.testing.assert_array_equal(np.asarray(full), plain)
+    shallow, _ = cached_net(qparams, x, t, batch, cache,
+                            jnp.ones((2,), jnp.bool_))
+    assert np.isfinite(np.asarray(shallow)).all()
+
+
+# ---------------------------------------------------------------------------
+# serving boundary: spec validation + engine handshake
+# ---------------------------------------------------------------------------
+
+
+def test_spec_rejects_unknown_quant_tier():
+    with pytest.raises(ValueError, match="quant mode"):
+        EngineSpec(solver="unipc", quant="w2a2").resolve()
+    EngineSpec(solver="unipc", quant="w8a16").resolve()  # known tier is fine
+
+
+def test_engine_rejects_mismatched_quant_wiring():
+    """`model_fn` must reject a spec whose quant tier differs from what the
+    engine's eps-net was wired for — the contract mirrors eval_dtype."""
+    from repro.launch.sample import build_engine
+
+    cfg, params = _tiny_dit()
+    engine = build_engine(cfg, params, VPLinear(), 2, 0)
+    spec = EngineSpec(solver="unipc", nfe=4, quant="w8a16")
+    with pytest.raises(ValueError, match="quant"):
+        engine.build(spec)
+
+
+def test_bank_rejects_mixed_quant_tiers():
+    from repro.launch.sample import build_engine
+
+    cfg, params = _tiny_dit()
+    engine = build_engine(cfg, params, VPLinear(), 2, 0, quant="w8a16")
+    specs = {"a": EngineSpec(solver="unipc", nfe=4, quant="w8a16"),
+             "b": EngineSpec(solver="unipc", nfe=5, quant="none")}
+    with pytest.raises(ValueError, match="agree on quant"):
+        engine.build_bank(specs)
+
+
+def test_quantized_engine_runs_and_tracks_fp32():
+    """End-to-end: the same probe latents through the fp32 engine and a
+    w8a16 engine land close; the quantized run is the real scan path."""
+    from repro.launch.sample import build_engine, latent_shape
+
+    cfg, params = _tiny_dit(perturb=0.05)
+    x_T = jax.random.normal(jax.random.PRNGKey(7), latent_shape(cfg, 2),
+                            jnp.float32)
+    fp = build_engine(cfg, params, VPLinear(), 2, 0)
+    qe = build_engine(cfg, params, VPLinear(), 2, 0, quant="w8a16")
+    ref = np.asarray(fp.build(EngineSpec(solver="unipc", nfe=4))(x_T))
+    out = np.asarray(qe.build(
+        EngineSpec(solver="unipc", nfe=4, quant="w8a16"))(x_T))
+    assert np.isfinite(out).all()
+    rel = np.linalg.norm(out - ref) / max(np.linalg.norm(ref), 1e-12)
+    assert rel < 5e-2
+
+
+# ---------------------------------------------------------------------------
+# tuner parity gate
+# ---------------------------------------------------------------------------
+
+
+def test_quant_parity_gate_unit():
+    from repro.tuning import QuantParityError, quant_parity_gate
+
+    assert quant_parity_gate(0.11, 0.10, slack=1.5,
+                             quant="w8a16") == pytest.approx(1.1)
+    with pytest.raises(QuantParityError, match="over-quantized"):
+        quant_parity_gate(0.20, 0.10, slack=1.5, quant="w4a16")
+
+
+def test_tuner_emits_w8_and_rejects_overquantized_w4():
+    """The acceptance pair on one shared setup: a w8a16 tier passes the
+    default parity budget and the emitted plan records its tier; the
+    per-tensor int4 tier trips the gate and no plan is emitted."""
+    from repro.launch.sample import build_engine, latent_shape
+    from repro.launch.tune import tune
+    from repro.tuning import QuantParityError
+
+    cfg, params = _tiny_dit(perturb=0.2)
+    x_T = jax.random.normal(jax.random.PRNGKey(0), latent_shape(cfg, 2),
+                            jnp.float32)
+    fp = build_engine(cfg, params, VPLinear(), 2, 0)
+    kw = dict(nfe=12, budget=4, rounds=1, ref_nfe=24, batch=2, x_T=x_T,
+              fp32_engine=fp)
+    w8 = build_engine(cfg, params, VPLinear(), 2, 0, quant="w8a16")
+    plan, report = tune("dit-cifar", engine=w8, quant="w8a16", **kw)
+    assert plan.meta["quant"] == "w8a16"
+    assert report["quant_ratio"] <= 1.5
+    assert report["fp32_baseline"] > 0
+    w4 = build_engine(cfg, params, VPLinear(), 2, 0, quant="w4a16")
+    with pytest.raises(QuantParityError, match="w4a16"):
+        tune("dit-cifar", engine=w4, quant="w4a16", **kw)
+
+
+def test_tune_with_engine_requires_fp32_anchor():
+    from repro.launch.sample import build_engine, latent_shape
+    from repro.launch.tune import tune
+
+    cfg, params = _tiny_dit()
+    engine = build_engine(cfg, params, VPLinear(), 2, 0, quant="w8a16")
+    x_T = jax.random.normal(jax.random.PRNGKey(0), latent_shape(cfg, 2),
+                            jnp.float32)
+    with pytest.raises(ValueError, match="fp32_engine"):
+        tune("dit-cifar", engine=engine, x_T=x_T, quant="w8a16")

@@ -1,0 +1,78 @@
+"""Property-based checks for the quant_matmul package (hypothesis).
+
+Complements the fixed-shape tests in test_quant.py: random weight
+distributions exercise the absmax/round-to-nearest bound, determinism, and
+interpret-vs-jnp kernel parity across arbitrary small odd shapes instead of
+a handful of hand-picked ones.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.kernels.quant_matmul import ops as qops  # noqa: E402
+from repro.kernels.quant_matmul import ref as qref  # noqa: E402
+
+# small bounded shapes keep each example fast; remainder-tile coverage comes
+# from the shapes being arbitrary, not multiples of anything
+dims = st.integers(min_value=1, max_value=40)
+
+
+def _arr(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape,
+                                     jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=dims, n=dims,
+       bits=st.sampled_from((8, 4)),
+       granularity=st.sampled_from(qref.GRANULARITIES),
+       scale=st.floats(1e-3, 1e3))
+def test_roundtrip_bound_holds_for_random_weights(seed, k, n, bits,
+                                                  granularity, scale):
+    """|w - deq(q(w))| <= scale/2 for any weight magnitude and granularity;
+    per-tensor uses one global step so its bound is the single shared
+    scale."""
+    w = _arr(seed, (k, n), scale)
+    qw, ws = qref.quantize(w, bits=bits, granularity=granularity)
+    err = np.abs(np.asarray(qref.dequantize(qw, ws)) - np.asarray(w))
+    bound = np.asarray(ws)[None, :] * 0.5
+    assert (err <= bound + 1e-6 * scale).all()
+    assert np.asarray(qw).dtype == np.int8
+    assert np.abs(np.asarray(qw)).max() <= qref._QMAX[bits]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=dims, n=dims,
+       granularity=st.sampled_from(qref.GRANULARITIES))
+def test_quantize_is_deterministic(seed, k, n, granularity):
+    """Same weights in, bit-identical (qw, scale) out — the property the
+    calibration cache and plan reproducibility rest on."""
+    w = _arr(seed, (k, n))
+    qw1, ws1 = qref.quantize(w, granularity=granularity)
+    qw2, ws2 = qref.quantize(w, granularity=granularity)
+    np.testing.assert_array_equal(np.asarray(qw1), np.asarray(qw2))
+    np.testing.assert_array_equal(np.asarray(ws1), np.asarray(ws2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=dims, k=dims, n=dims,
+       a8=st.booleans())
+def test_interpret_kernel_matches_jnp_at_arbitrary_shapes(seed, m, k, n, a8):
+    """The blocked kernel's padding/masking is exact: interpret backend
+    agrees with the jnp oracle at every (M, K, N), including shapes far
+    below one tile."""
+    x = _arr(seed, (m, k))
+    w = _arr(seed + 1, (k, n))
+    qw, ws = qref.quantize(w)
+    sa = float(jnp.max(jnp.abs(x))) / qref.ACT_QMAX + 1e-9 if a8 else None
+    ref = qops.quant_matmul(x, qw, ws, sa=sa, backend="jnp")
+    ker = qops.quant_matmul(x, qw, ws, sa=sa, backend="interpret")
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
