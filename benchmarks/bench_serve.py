@@ -20,7 +20,15 @@ A second section, ``async_runs``, benchmarks the pipelined serving loop
 capacity, so the scheduler never idles and throughput is device-bound) served
 synchronously (pipeline depth 1) and pipelined (depth 2). The async/sync
 throughput ratio and the host-overhead fraction of tick time are the numbers
-`guard.py` enforces.
+`guard.py` enforces. Each async row also carries the host_us_per_tick split
+by tick phase (``host_phase_us_per_tick``: admission / dispatch / readback /
+bookkeeping, DESIGN.md §15) — the measured "where a tick goes" table.
+
+A third section, ``obs_runs``, measures observability overhead: the same
+saturating depth-2 trace served untraced and with a `repro.obs.Tracer`
+attached, compared on the scheduler's own host-nanosecond counters. The
+committed ``obs_overhead_frac`` (extra host µs per tick over the untraced
+baseline, as a fraction of tick wall) is guard-capped at 5%.
 """
 
 from __future__ import annotations
@@ -54,12 +62,14 @@ def _program(arch: str, cfg_scale: float, seed: int = 0):
 
 def _serve(arch: str, cfg_scale: float, gang: bool,
            pipeline_depth: int = 1, rate_x: float = 2.0, prebuilt=None,
-           warmup: bool = False, n_requests: int = 0):
+           warmup: bool = False, n_requests: int = 0, traced: bool = False):
+    from repro.obs import Tracer
     from repro.serving import SlotScheduler, poisson_requests, run_trace
 
     program, sample_shape = prebuilt or _program(arch, cfg_scale)
     sched = SlotScheduler(program, SLOTS, sample_shape, gang=gang,
-                          pipeline_depth=pipeline_depth)
+                          pipeline_depth=pipeline_depth,
+                          tracer=Tracer() if traced else None)
     compile_s = sched.aot_compile()
     if warmup:
         # a short throwaway trace so first-call dispatch paths (random-draw
@@ -136,10 +146,41 @@ def bench_serve(out_path: str = "BENCH_serve.json"):
              f"host_us_per_tick={asyn['host_us_per_tick']:.0f}")
         emit(f"serve/{arch}/async_over_sync", 0.0,
              f"throughput_ratio={ratio:.3f}")
+    # observability overhead (DESIGN.md §15): the same saturating depth-2
+    # trace untraced vs with a Tracer attached. dit-cifar only — the
+    # smallest tick, so tracing overhead is proportionally at its worst.
+    # The comparison uses the scheduler's own host_us_per_tick counters
+    # (the host_ns methodology), not the wall clock: on CPU the device step
+    # executes inline in the dispatch call, so total tick wall is dominated
+    # by the model eval and would hide any host-side regression.
+    obs_rows = []
+    prebuilt = _program("dit-cifar", 0.0)
+    obs_reps = {False: [], True: []}
+    for rep in range(3):
+        for traced in (False, True):
+            obs_reps[traced].append(_serve(
+                "dit-cifar", 0.0, gang=False, pipeline_depth=2, rate_x=4.0,
+                prebuilt=prebuilt, warmup=rep == 0,
+                n_requests=2 * REQUESTS, traced=traced))
+    def _median_host(rows):
+        return sorted(rows, key=lambda r: r["host_us_per_tick"])[1]
+    base, traced = _median_host(obs_reps[False]), _median_host(obs_reps[True])
+    base["traced"], traced["traced"] = False, True
+    tick_us = base["tick_s"] * 1e6
+    overhead_frac = ((traced["host_us_per_tick"] - base["host_us_per_tick"])
+                     / max(tick_us, 1e-9))
+    traced["obs_overhead_frac"] = overhead_frac
+    obs_rows += [base, traced]
+    emit("serve/dit-cifar/obs_untraced_depth2", base["tick_s"] * 1e6,
+         f"host_us_per_tick={base['host_us_per_tick']:.0f}")
+    emit("serve/dit-cifar/obs_traced_depth2", traced["tick_s"] * 1e6,
+         f"host_us_per_tick={traced['host_us_per_tick']:.0f};"
+         f"overhead_frac={overhead_frac:.4f}")
     with open(out_path, "w") as f:
         json.dump({"slots": SLOTS, "nfe": NFE, "requests": REQUESTS,
                    "env": bench_header(), "runs": rows,
-                   "async_runs": async_rows}, f, indent=1)
+                   "async_runs": async_rows, "obs_runs": obs_rows},
+                  f, indent=1)
     return rows
 
 

@@ -12,7 +12,13 @@ Checks:
   (DESIGN.md §13) must be present, with pipelined (depth-2) throughput
   >= --min-async-ratio x the synchronous depth-1 throughput per arch, and
   the synchronous host bookkeeping overhead <= --max-host-frac of the
-  measured tick wall (the pipelined-serving acceptance criteria). The
+  measured tick wall (the pipelined-serving acceptance criteria). Every
+  async run must also carry the per-phase host split
+  (`host_phase_us_per_tick`: admission/dispatch/readback/bookkeeping,
+  DESIGN.md §15) with admission + bookkeeping matching the aggregate
+  host_us_per_tick. The obs_runs section must commit the tracing-overhead
+  comparison, with `obs_overhead_frac` <= --max-obs-overhead (default
+  0.05: tracing is built to stay off the hot path). The
   async floor defaults to 0.95: on runtimes without async dispatch (CPU,
   where the step executes inline in the dispatch call) the expectation is
   parity within noise, and a real pipelining regression (a sync added to
@@ -53,7 +59,8 @@ def fail(msg: str) -> None:
 def check_serve(path: str = "BENCH_serve.json",
                 min_ratio: float = 1.1,
                 min_async_ratio: float = 0.95,
-                max_host_frac: float = 0.5) -> int:
+                max_host_frac: float = 0.5,
+                max_obs_overhead: float = 0.05) -> int:
     try:
         with open(path) as f:
             data = json.load(f)
@@ -131,7 +138,56 @@ def check_serve(path: str = "BENCH_serve.json",
             fail(f"host bookkeeping overhead at {arch} is {frac:.3f} of "
                  f"tick time > {max_host_frac} — the scheduler's host path "
                  f"regressed")
+        # per-phase host split (DESIGN.md §15): every async row must carry
+        # the measured "where a tick goes" columns, with admission +
+        # bookkeeping matching the aggregate host_us_per_tick (the two are
+        # derived from the same nanosecond counters — any gap is drift)
+        for run in (sync, asyn):
+            phases = run.get("host_phase_us_per_tick")
+            if not isinstance(phases, dict):
+                fail(f"{path} async_runs {arch} depth "
+                     f"{run.get('pipeline_depth')}: missing "
+                     f"host_phase_us_per_tick — the per-phase host split "
+                     f"must stay committed")
+            missing = ({"admission", "dispatch", "readback", "bookkeeping"}
+                       - set(phases))
+            if missing:
+                fail(f"{path} async_runs {arch}: host_phase_us_per_tick "
+                     f"missing phases {sorted(missing)}")
+            if any(not isinstance(v, (int, float)) or v < 0
+                   for v in phases.values()):
+                fail(f"{path} async_runs {arch}: non-numeric or negative "
+                     f"phase times ({phases})")
+            split = phases["admission"] + phases["bookkeeping"]
+            agg = run.get("host_us_per_tick", 0.0)
+            if abs(split - agg) > max(1e-6 * max(agg, 1.0), 1e-9):
+                fail(f"{path} async_runs {arch}: admission + bookkeeping "
+                     f"({split:.3f}us) != host_us_per_tick ({agg:.3f}us) — "
+                     f"the phase split drifted from the aggregate")
         checked += 1
+    # observability overhead (DESIGN.md §15): tracing a depth-2 run must add
+    # under max_obs_overhead of tick wall in host time vs untraced
+    obs_runs = data.get("obs_runs")
+    if not obs_runs:
+        fail(f"{path} carries no obs_runs — the tracing-overhead trajectory "
+             f"must stay committed (run `python -m benchmarks.run --only "
+             f"serve`)")
+    traced = next((r for r in obs_runs if r.get("traced")), None)
+    untraced = next((r for r in obs_runs if r.get("traced") is False), None)
+    if traced is None or untraced is None:
+        fail(f"{path} obs_runs: needs a traced and an untraced run, has "
+             f"traced={[r.get('traced') for r in obs_runs]}")
+    frac = traced.get("obs_overhead_frac")
+    if not isinstance(frac, (int, float)):
+        fail(f"{path} obs_runs: traced run carries no obs_overhead_frac — "
+             f"artifact schema drift?")
+    status = "ok" if frac <= max_obs_overhead else "FAIL"
+    print(f"serve obs: tracing overhead {frac:.4f} of tick wall "
+          f"(cap {max_obs_overhead}) {status}")
+    if frac > max_obs_overhead:
+        fail(f"tracing overhead is {frac:.4f} of tick wall > "
+             f"{max_obs_overhead} — the tracer left the cheap path")
+    checked += 1
     return checked
 
 
@@ -318,12 +374,16 @@ def main() -> None:
     ap.add_argument("--max-host-frac", type=float, default=0.5,
                     help="cap on synchronous host bookkeeping as a fraction "
                          "of measured tick wall time")
+    ap.add_argument("--max-obs-overhead", type=float, default=0.05,
+                    help="cap on the tracing-enabled host overhead as a "
+                         "fraction of tick wall (obs_runs, DESIGN.md §15)")
     ap.add_argument("--root", default=".")
     args = ap.parse_args()
     os.chdir(args.root)
     n = check_serve(min_ratio=args.min_serve_ratio,
                     min_async_ratio=args.min_async_ratio,
-                    max_host_frac=args.max_host_frac)
+                    max_host_frac=args.max_host_frac,
+                    max_obs_overhead=args.max_obs_overhead)
     n += check_tuning()
     n += check_model()
     print(f"bench guard ok ({n} checks)")

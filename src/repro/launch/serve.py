@@ -85,7 +85,9 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                     cfg_schedule="constant", thresholding=False, seed=0,
                     arrival_rate=None, trace=None, requests=None,
                     plan_bank=None, tiers=None, eval_dtype="float32",
-                    quant="none", pipeline_depth=2):
+                    quant="none", pipeline_depth=2, trace_out=None,
+                    metrics_out=None, metrics_every=None,
+                    probe_fraction=0.0, probe_ref_nfe=64):
     """Continuous-batching diffusion serving through the engine's per-slot
     step program (`SamplerEngine.build_step` + `serving.SlotScheduler`):
     `batch` slots, requests admitted the tick a slot frees, per-request
@@ -115,9 +117,22 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     `StepProgram` serving every tier — requests tagged fast/balanced/quality
     coexist in the same batch with per-slot row offsets. Untagged generated
     traffic cycles through the tiers.
+
+    Observability (DESIGN.md §15): `trace_out` records per-tick / per-request
+    spans into a Chrome trace_event JSON (opens in chrome://tracing);
+    `metrics_out` writes the metrics artifact (registry snapshot delta +
+    derived ServeMetrics + Prometheus exposition, with periodic rows every
+    `metrics_every` ticks); `probe_fraction` > 0 replays that fraction of
+    completions against a `probe_ref_nfe`-step fp32 UniPC reference and
+    records per-tier trajectory-discrepancy gauges. All three are off by
+    default — the untraced path is byte-for-byte the old serving loop.
+    Render the artifacts with `python -m repro.launch.obsreport`.
     """
     from ..engine import EngineSpec, default_tier_specs
     from ..diffusion import VPLinear
+    from ..obs import QualityProbe, Tracer, build_reference_fn
+    from ..obs import metrics as obsm
+    from ..obs.report import write_metrics_artifact
     from ..serving import Request, SlotScheduler, load_trace, poisson_requests, run_trace
     from .sample import NULL_CLASS_ID, build_engine
 
@@ -202,10 +217,30 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     # idle slots are conditioned on the null class; every request carries its
     # own class id (drawn from its seed), so conditioning is reproducible
     # regardless of which slot the scheduler admits it into
+    tracer = None
+    if trace_out is not None:
+        tracer = Tracer(meta={"arch": arch, "slots": batch,
+                              "pipeline_depth": pipeline_depth,
+                              "eval_dtype": eval_dtype, "quant": quant,
+                              "cache_block": cache_block,
+                              "cfg_scale": cfg_scale,
+                              "tiers": tier_names})
+    probe = None
+    if probe_fraction > 0.0:
+        # the reference engine is deliberately plain — fp32, unquantized,
+        # uncached — so the probe measures what the SERVING tier's precision
+        # tricks cost, against the converged solver trajectory
+        ref_engine = build_engine(cfg, params, VPLinear(), batch, seed,
+                                  want_cfg=cfg_scale != 0.0,
+                                  per_request_cond=True)
+        probe = QualityProbe(
+            build_reference_fn(ref_engine, spec, ref_nfe=probe_ref_nfe),
+            probe_fraction)
     sched = SlotScheduler(program, batch,
                           (cfg.patch_tokens, cfg.latent_dim),
                           extras_init={"class_ids": NULL_CLASS_ID},
-                          pipeline_depth=pipeline_depth)
+                          pipeline_depth=pipeline_depth,
+                          tracer=tracer, probe=probe)
     compile_s = sched.aot_compile()
     if trace is not None:
         reqs = load_trace(trace)
@@ -223,7 +258,32 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
         if r.extras is None or "class_ids" not in r.extras:
             r.extras = {**(r.extras or {}),
                         "class_ids": int(class_ids(1, seed=r.seed)[0])}
-    m = run_trace(sched, reqs)
+    snap0 = sched.registry.snapshot()
+    snapshot_log = [] if metrics_out is not None else None
+    if metrics_out is not None and not metrics_every:
+        metrics_every = 8
+    m = run_trace(sched, reqs, snapshot_every=metrics_every,
+                  snapshot_log=snapshot_log)
+    if trace_out is not None:
+        exported = tracer.export(trace_out)
+        print(f"trace: {len(exported['traceEvents'])} events "
+              f"({tracer.dropped} dropped) -> {trace_out}")
+    if metrics_out is not None:
+        write_metrics_artifact(
+            metrics_out,
+            metrics=obsm.delta(snap0, sched.registry.snapshot()),
+            serve_metrics=m.row(),
+            static={"mode": m.mode, "slots": m.slots, "n_rows": m.n_rows,
+                    "pipeline_depth": m.pipeline_depth},
+            exposition=sched.registry.exposition(),
+            rows=snapshot_log,
+            probe=probe.summary() if probe is not None else None)
+        print(f"metrics: {len(snapshot_log)} periodic rows -> {metrics_out}")
+    if probe is not None:
+        for t, row in sorted(probe.summary().items()):
+            print(f"  probe tier {t}: {row['count']} replayed, "
+                  f"discrepancy mean {row['mean']:.3e} max {row['max']:.3e} "
+                  f"(vs fp32 unipc-3 nfe={probe_ref_nfe})")
     mode = (f"bank[{','.join(tier_names)}]" if tier_names
             else f"{solver} nfe={nfe} order={order}")
     print(f"diffusion slots={batch} {mode} depth={m.pipeline_depth} "
@@ -305,6 +365,25 @@ def main():
                          "(DESIGN.md §13); 1 = synchronous loop, >= 2 "
                          "overlaps host bookkeeping with device execution; "
                          "finished latents are bit-identical at any depth")
+    ap.add_argument("--trace-out", default=None,
+                    help="diffusion serving: write a Chrome trace_event JSON "
+                         "of per-tick and per-request spans (open in "
+                         "chrome://tracing; DESIGN.md §15)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="diffusion serving: write the metrics artifact "
+                         "(registry snapshot + derived ServeMetrics + "
+                         "Prometheus exposition); render with "
+                         "python -m repro.launch.obsreport")
+    ap.add_argument("--metrics-every", type=int, default=None,
+                    help="periodic snapshot row cadence in executed ticks "
+                         "for --metrics-out (default 8)")
+    ap.add_argument("--probe-fraction", type=float, default=0.0,
+                    help="diffusion serving: replay this fraction of "
+                         "completed requests against a high-NFE fp32 "
+                         "reference and record per-tier trajectory-"
+                         "discrepancy gauges (0 = off)")
+    ap.add_argument("--probe-ref-nfe", type=int, default=64,
+                    help="NFE of the probe's UniPC-3 reference run")
     bank = ap.add_mutually_exclusive_group()
     bank.add_argument("--plan-bank", default=None,
                       help="diffusion serving: JSON bank of tuned SolverPlans"
@@ -351,6 +430,14 @@ def main():
                  f"--arch {args.arch} is family '{family}'")
     if args.pipeline_depth < 1:
         ap.error(f"--pipeline-depth must be >= 1, got {args.pipeline_depth}")
+    if family != "dit" and (args.trace_out or args.metrics_out
+                            or args.probe_fraction):
+        ap.error(f"--trace-out/--metrics-out/--probe-fraction instrument the "
+                 f"diffusion serving loop; --arch {args.arch} is family "
+                 f"'{family}'")
+    if not 0.0 <= args.probe_fraction <= 1.0:
+        ap.error(f"--probe-fraction must be in [0, 1], "
+                 f"got {args.probe_fraction}")
     if family == "dit":
         serve_diffusion(args.arch, reduced=not args.full, batch=args.batch,
                         nfe=nfe, order=order, solver=solver,
@@ -362,7 +449,12 @@ def main():
                         requests=args.requests, plan_bank=args.plan_bank,
                         tiers=(args.tiers.split(",") if args.tiers else None),
                         eval_dtype=args.eval_dtype, quant=args.quant,
-                        pipeline_depth=args.pipeline_depth)
+                        pipeline_depth=args.pipeline_depth,
+                        trace_out=args.trace_out,
+                        metrics_out=args.metrics_out,
+                        metrics_every=args.metrics_every,
+                        probe_fraction=args.probe_fraction,
+                        probe_ref_nfe=args.probe_ref_nfe)
         return
     serve(args.arch, reduced=not args.full, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,

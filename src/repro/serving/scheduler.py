@@ -47,6 +47,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..engine.engine import StepProgram
+from ..obs.metrics import MetricsRegistry
+
+# fixed upper-bound buckets for the scheduler's streaming histograms
+# (DESIGN.md §15): tick-denominated and depth-invariant, so the bucket
+# counts are part of the deterministic metrics slice
+QUEUE_DEPTH_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128)
+BUSY_SLOT_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64)
+OCCUPANCY_BUCKETS = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
+LATENCY_TICK_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+EVAL_COST_BUCKETS = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64)
+HOST_PHASES = ("admission", "dispatch", "readback", "bookkeeping")
 
 
 @partial(jax.jit, static_argnames=("has_cache", "uses_cfg"))
@@ -177,7 +188,9 @@ class SlotScheduler:
                  sample_shape: Tuple[int, ...], dtype=jnp.float32,
                  gang: bool = False, step_override=None,
                  extras_init: Optional[dict] = None,
-                 pipeline_depth: int = 1):
+                 pipeline_depth: int = 1,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None, probe=None):
         if pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1, "
                              f"got {pipeline_depth}")
@@ -222,13 +235,63 @@ class SlotScheduler:
                                             # None -> clock follows ticks
         self.completions: List[Completion] = []
         self._inflight: Deque[_Flight] = deque()
-        # host-overhead accounting (benchmarks/bench_serve.py): _host_ns is
-        # tick() wall time minus time blocked on device readbacks and minus
-        # the step dispatch call itself (on runtimes without async dispatch
-        # the call executes inline, which is device time, not bookkeeping)
-        self._host_ns = 0
+        # host-overhead accounting (benchmarks/bench_serve.py), split by tick
+        # phase (DESIGN.md §15): admission = the _admit() call, dispatch = the
+        # step call itself (inline device execution on runtimes without async
+        # dispatch — device time, not bookkeeping), readback = time blocked
+        # on device readbacks in _consume, bookkeeping = everything else in
+        # tick(). The legacy `host_ns` (what the bench guard's host-fraction
+        # cap is defined over) is admission + bookkeeping — tick wall minus
+        # the dispatch call minus blocked readback, exactly as before.
+        self._admission_ns = 0
         self._blocked_ns = 0
         self._dispatch_ns = 0
+        self._bookkeeping_ns = 0
+        self._probe_ns = 0  # quality-probe replays (excluded from phases)
+        # observability (DESIGN.md §15): the registry is always on — it is
+        # the one accounting substrate ServeMetrics is derived from — while
+        # the tracer and quality probe are opt-in (None = zero work: every
+        # call site is `if self.tracer is not None`-guarded).
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        self.probe = probe
+        if probe is not None:
+            if probe.registry is None:
+                probe.registry = self.registry
+            if probe.tracer is None:
+                probe.tracer = tracer
+        r = self.registry
+        self._m_ticks = r.counter(
+            "serve_ticks", help="executed batched step calls")
+        self._m_evals = r.counter(
+            "serve_evals", help="batched model evals (== serve_ticks)")
+        self._m_active = r.counter(
+            "serve_active_slot_ticks", help="busy-slot ticks")
+        self._m_submitted = r.counter(
+            "serve_submitted", help="requests submitted")
+        self._m_admitted = r.counter(
+            "serve_admitted", help="requests admitted into slots")
+        self._m_completed = r.counter(
+            "serve_completed", help="requests completed")
+        self._m_queue = r.histogram(
+            "queue_depth", QUEUE_DEPTH_BUCKETS,
+            help="queued requests per executed tick (post-admission)")
+        self._m_busy = r.histogram(
+            "busy_slots", BUSY_SLOT_BUCKETS,
+            help="busy slots per executed tick")
+        self._m_occ = r.histogram(
+            "occupancy_frac", OCCUPANCY_BUCKETS,
+            help="busy-slot fraction per executed tick")
+        self._m_latency = r.histogram(
+            "latency_ticks", LATENCY_TICK_BUCKETS,
+            help="request latency (queue wait + service) in ticks")
+        self._m_cost = r.histogram(
+            "request_eval_cost", EVAL_COST_BUCKETS,
+            help="evals-per-latent (full-eval units) per completion")
+        self._m_phase = {p: r.counter("host_phase_ns", {"phase": p},
+                                      wall=True,
+                                      help="host ns per tick phase")
+                         for p in HOST_PHASES}
         # step_override replaces the dispatched flight step — signature
         # step(state, meta, g, extras) -> (state, meta, done), and the done
         # mask must be consistent with the meta counters (it is verified
@@ -255,6 +318,11 @@ class SlotScheduler:
                 f"matching keys")
         self.program.resolve_tier(req.tier)  # reject bad tier tags at submit
         self.queue.append(req)
+        self._m_submitted.inc()
+        if self.tracer is not None:
+            self.tracer.async_begin("request", req.rid,
+                                    args={"tier": req.tier,
+                                          "arrival": req.arrival})
 
     @property
     def active(self) -> int:
@@ -269,8 +337,17 @@ class SlotScheduler:
     def host_ns(self) -> int:
         """Accumulated host-side bookkeeping time across tick() calls,
         excluding time spent blocked on device readbacks and the step
-        dispatch call itself."""
-        return self._host_ns
+        dispatch call itself (== the admission + bookkeeping phases)."""
+        return self._admission_ns + self._bookkeeping_ns
+
+    @property
+    def phase_ns(self) -> dict:
+        """Per-phase host time (DESIGN.md §15): {phase: ns} over the
+        HOST_PHASES split. admission + bookkeeping == `host_ns`."""
+        return {"admission": self._admission_ns,
+                "dispatch": self._dispatch_ns,
+                "readback": self._blocked_ns,
+                "bookkeeping": self._bookkeeping_ns}
 
     @property
     def occupancy(self) -> float:
@@ -309,6 +386,16 @@ class SlotScheduler:
         self.slot_off[taken] = offs
         self.slot_budget[taken] = budgets
         self.slot_admit[taken] = self.ticks
+        self._m_admitted.inc(n)
+        if self.tracer is not None:
+            # the admit instant opens the request's step segment: rows
+            # [offset, offset + budget) execute over the next `budget` ticks
+            for j, r in enumerate(reqs):
+                self.tracer.async_instant(
+                    "admit", r.rid,
+                    args={"slot": int(taken[j]), "tick": self.ticks,
+                          "offset": int(offs[j]), "budget": int(budgets[j]),
+                          "tier": r.tier})
         # full-width masked update buffers, built host-side in numpy; the
         # jitted apply folds latents + meta counters + guidance + extras into
         # the device state in ONE fixed-shape dispatch per tick
@@ -347,15 +434,28 @@ class SlotScheduler:
         ago (its readback has had N-1 device ticks to land)."""
         t0 = time.perf_counter_ns()
         b0 = self._blocked_ns
+        p0 = self._probe_ns
         self._admit()
+        a1 = time.perf_counter_ns()
+        adm_ns = a1 - t0
+        self._admission_ns += adm_ns
         busy = self._busy
         if not busy.any():
-            self._host_ns += (time.perf_counter_ns() - t0
-                              - (self._blocked_ns - b0))
+            book_ns = time.perf_counter_ns() - a1
+            self._bookkeeping_ns += book_ns
+            self._m_phase["admission"].inc(adm_ns)
+            self._m_phase["bookkeeping"].inc(book_ns)
             return []
         self.ticks += 1
         self.evals += 1
-        self.active_slot_ticks += int(busy.sum())
+        n_busy = int(busy.sum())
+        self.active_slot_ticks += n_busy
+        self._m_ticks.inc()
+        self._m_evals.inc()
+        self._m_active.inc(n_busy)
+        self._m_queue.observe(len(self.queue))
+        self._m_busy.observe(n_busy)
+        self._m_occ.observe(n_busy / self.slots)
         # dispatch: idx construction and row advance happen on device
         # (StepProgram.step_flight); nothing tick-varying crosses the host
         # boundary here. Timed separately — the call is device time (inline
@@ -364,7 +464,6 @@ class SlotScheduler:
         self.state, self.meta, mask = self._flight(self.state, self.meta,
                                                    *self._step_tail())
         d1 = time.perf_counter_ns()
-        self._dispatch_ns += d1 - d0
         flight = _Flight(
             tick=self.ticks,
             clock=(float(self.ticks) if self.clock is None else self.clock))
@@ -404,8 +503,25 @@ class SlotScheduler:
         done: List[Completion] = []
         while len(self._inflight) > self.pipeline_depth - 1:
             done.extend(self._consume(self._inflight.popleft()))
-        self._host_ns += (time.perf_counter_ns() - t0 - (d1 - d0)
-                          - (self._blocked_ns - b0))
+        t1 = time.perf_counter_ns()
+        book_ns = (t1 - t0 - adm_ns - (d1 - d0)
+                   - (self._blocked_ns - b0) - (self._probe_ns - p0))
+        self._dispatch_ns += d1 - d0
+        self._bookkeeping_ns += book_ns
+        self._m_phase["admission"].inc(adm_ns)
+        self._m_phase["dispatch"].inc(d1 - d0)
+        self._m_phase["readback"].inc(self._blocked_ns - b0)
+        self._m_phase["bookkeeping"].inc(book_ns)
+        if self.tracer is not None:
+            tr = self.tracer
+            tr.complete("admission", t0, a1)
+            tr.complete("dispatch", d0, d1)
+            tr.complete("tick", t0, t1,
+                        args={"tick": self.ticks, "busy": n_busy,
+                              "queue": len(self.queue),
+                              "emitted": len(done)})
+            tr.counter("slots", {"busy": n_busy, "queue": len(self.queue)},
+                       ts_ns=t0)
         return done
 
     def _consume(self, f: _Flight) -> List[Completion]:
@@ -416,7 +532,8 @@ class SlotScheduler:
         tb = time.perf_counter_ns()
         mask_np = np.asarray(f.mask)       # blocks until the tick executed
         lat_np = np.asarray(f.lat)         # ONE batched device_get per tick
-        self._blocked_ns += time.perf_counter_ns() - tb
+        te = time.perf_counter_ns()
+        self._blocked_ns += te - tb
         got = np.flatnonzero(mask_np)
         if not np.array_equal(got, f.slots):
             raise RuntimeError(
@@ -432,6 +549,43 @@ class SlotScheduler:
                                              int(f.budgets[j])))
             for j, req in enumerate(f.reqs)]
         self.completions.extend(done)
+        reg = self.registry
+        for c in done:
+            self._m_completed.inc()
+            self._m_latency.observe(c.latency_ticks)
+            self._m_cost.observe(c.eval_cost)
+            if c.tier is not None:
+                lbl = {"tier": c.tier}
+                reg.counter("tier_completed", lbl,
+                            help="completions per quality tier").inc()
+                reg.gauge("tier_evals", lbl,
+                          help="evals per request of this tier").set(c.evals)
+                reg.gauge("tier_eval_cost", lbl,
+                          help="evals-per-latent (full-eval units) of this "
+                               "tier").set(c.eval_cost)
+                reg.histogram("tier_latency_ticks", LATENCY_TICK_BUCKETS,
+                              lbl, help="per-tier request latency in "
+                                        "ticks").observe(c.latency_ticks)
+        if self.tracer is not None:
+            for c in done:
+                self.tracer.async_end(
+                    "request", c.rid,
+                    args={"tier": c.tier, "evals": c.evals,
+                          "eval_cost": c.eval_cost,
+                          "latency_ticks": c.latency_ticks,
+                          "admit_tick": c.admit_tick,
+                          "finish_tick": c.finish_tick})
+            self.tracer.complete("readback", tb, te)
+            self.tracer.complete("emit", te, time.perf_counter_ns())
+        if self.probe is not None:
+            # replay a sampled fraction against the high-NFE reference; the
+            # replay is device work, not scheduler bookkeeping — timed apart
+            # so it never pollutes the per-phase host accounting
+            pp0 = time.perf_counter_ns()
+            for req, c in zip(f.reqs, done):
+                if self.probe.selected(c.rid):
+                    self.probe.observe(req, c, self._draw(req))
+            self._probe_ns += time.perf_counter_ns() - pp0
         return done
 
     def flush(self) -> List[Completion]:

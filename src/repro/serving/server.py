@@ -26,7 +26,10 @@ from typing import List, Optional, Sequence
 import jax
 import numpy as np
 
+from ..obs import metrics as obsm
 from .scheduler import Completion, Request, SlotScheduler
+
+TICK_WALL_BUCKETS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0)
 
 
 def poisson_requests(n: int, rate: float, seed: int = 0,
@@ -112,13 +115,102 @@ class ServeMetrics:
     wall_s: float = 0.0       # measured wall seconds for the whole trace
     host_us_per_tick: float = 0.0  # host bookkeeping µs per tick, excluding
                                    # time blocked on device readbacks
+    # the host_us_per_tick split by tick phase (DESIGN.md §15):
+    # {admission, dispatch, readback, bookkeeping} µs per executed tick —
+    # admission + bookkeeping == host_us_per_tick; dispatch and readback are
+    # device-facing time, reported for the "where a tick goes" breakdown
+    host_phase_us_per_tick: Optional[dict] = None
 
     def row(self) -> dict:
         return asdict(self)
 
 
+def _counter_val(delta: dict, name: str, default=0):
+    row = delta.get(name)
+    return row["value"] if row else default
+
+
+def serve_metrics_from_snapshot(delta: dict, *, mode: str, slots: int,
+                                n_rows: int,
+                                pipeline_depth: int = 1) -> ServeMetrics:
+    """Re-derive `ServeMetrics` from a metrics-registry snapshot delta.
+
+    `delta` is `obs.metrics.delta(before, after)` over the scheduler's
+    registry around one run (`MetricsRegistry.snapshot` with samples). This
+    is THE code path `run_trace` reports through — the live registry and the
+    end-of-run aggregate cannot drift — and it is a pure function of
+    JSON-able data, so `launch/obsreport.py --check` re-runs it on a saved
+    metrics artifact and compares against the artifact's embedded metrics.
+
+    Percentiles come from the histograms' exact retained samples; an empty
+    histogram (zero-completion run) reports 0.0 — the np.percentile
+    empty-list crash cannot happen by construction. `occupancy` likewise
+    guards ticks == 0."""
+    ticks = _counter_val(delta, "serve_ticks")
+    n_done = _counter_val(delta, "serve_completed")
+    makespan = float(_counter_val(delta, "serve_makespan_ticks", 0.0))
+    wall_s = float(_counter_val(delta, "serve_wall_s", 0.0))
+    lat_row = delta.get("latency_ticks") or {}
+    lat_p50 = obsm.snapshot_percentile(lat_row, 50)
+    lat_p95 = obsm.snapshot_percentile(lat_row, 95)
+    tw_row = delta.get("tick_wall_s") or {}
+    tick_s = (obsm.snapshot_percentile(tw_row, 50) if tw_row.get("count")
+              else (wall_s / ticks if ticks else 0.0))
+    phases = {}
+    for full, row in delta.items():
+        name, labels = obsm.parse_fullname(full)
+        if name == "host_phase_ns" and "phase" in labels:
+            phases[labels["phase"]] = row["value"]
+    host_ns = phases.get("admission", 0) + phases.get("bookkeeping", 0)
+    tiers = sorted({obsm.parse_fullname(full)[1].get("tier")
+                    for full in delta
+                    if obsm.parse_fullname(full)[0] == "tier_completed"})
+    per_tier = None
+    if tiers:
+        per_tier = {}
+        for t in tiers:
+            lbl = f'{{tier="{t}"}}'
+            per_tier[t] = {
+                "completed": _counter_val(delta, f"tier_completed{lbl}"),
+                "evals": int(_counter_val(delta, f"tier_evals{lbl}", 0)),
+                # full-eval units: < evals when the tier's plan schedules
+                # shallow feature-reuse steps (DESIGN.md §12)
+                "eval_cost": float(_counter_val(delta,
+                                                f"tier_eval_cost{lbl}", 0.0)),
+                "latency_ticks_p50": obsm.snapshot_percentile(
+                    delta.get(f"tier_latency_ticks{lbl}") or {}, 50),
+            }
+    return ServeMetrics(
+        mode=mode,
+        requests=_counter_val(delta, "serve_submitted"),
+        completed=n_done, slots=slots, n_rows=n_rows,
+        ticks=ticks, evals=_counter_val(delta, "serve_evals"),
+        makespan_ticks=makespan,
+        throughput_per_tick=n_done / max(makespan, 1.0),
+        latency_ticks_p50=lat_p50,
+        latency_ticks_p95=lat_p95,
+        occupancy=(_counter_val(delta, "serve_active_slot_ticks")
+                   / (ticks * slots) if ticks else 0.0),
+        evals_per_latent=ticks * slots / max(n_done, 1),
+        tick_s=tick_s,
+        throughput_rps=n_done / max(wall_s, 1e-12),
+        latency_s_p50=lat_p50 * tick_s,
+        latency_s_p95=lat_p95 * tick_s,
+        per_tier=per_tier,
+        pipeline_depth=pipeline_depth,
+        wall_s=wall_s,
+        host_us_per_tick=host_ns / ticks / 1e3 if ticks else 0.0,
+        host_phase_us_per_tick={p: (phases.get(p, 0) / ticks / 1e3
+                                    if ticks else 0.0)
+                                for p in ("admission", "dispatch",
+                                          "readback", "bookkeeping")},
+    )
+
+
 def run_trace(sched: SlotScheduler, requests: Sequence[Request],
-              mode: Optional[str] = None) -> ServeMetrics:
+              mode: Optional[str] = None,
+              snapshot_every: Optional[int] = None,
+              snapshot_log: Optional[list] = None) -> ServeMetrics:
     """Drive a scheduler through an arrival trace to completion.
 
     The clock advances one tick per step call; when nothing is queued or
@@ -132,16 +224,34 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
     so only the whole-trace `wall_s` is meaningful and `tick_s` is reported
     as its per-tick mean. Completion clocks are stamped at dispatch time, so
     tick-denominated latency metrics are identical at every depth.
+
+    Metrics are derived from the scheduler's registry: the run brackets a
+    registry snapshot (so a reused scheduler reports THIS run's numbers) and
+    `serve_metrics_from_snapshot` turns the delta into the ServeMetrics
+    aggregate — one code path for live and final numbers (DESIGN.md §15).
+    `snapshot_every`, with a `snapshot_log` list, additionally appends a
+    compact (sample-free) registry snapshot row every N executed ticks —
+    the periodic streaming view the metrics artifact records.
     """
     pending = sorted(requests, key=lambda r: r.arrival)
     sync = sched.pipeline_depth == 1
-    # snapshot the counters so a reused scheduler reports THIS run's metrics
-    ticks0, evals0 = sched.ticks, sched.evals
-    done0, ast0 = len(sched.completions), sched.active_slot_ticks
-    host0 = sched.host_ns
+    reg = sched.registry
+    snap0 = reg.snapshot()
+    ticks0 = sched.ticks
+    # wall-clock metrics ride the registry too, flagged wall=True so the
+    # deterministic snapshot slice (the cross-depth equality) excludes them
+    h_tick_wall = reg.histogram("tick_wall_s", TICK_WALL_BUCKETS, wall=True,
+                                help="fenced per-tick wall seconds (pipeline "
+                                     "depth 1 runs only)")
+    g_wall = reg.gauge("serve_wall_s", wall=True,
+                       help="whole-trace wall seconds of the last run")
+    # counters, not gauges: the snapshot delta of a reused scheduler must
+    # isolate this run's value, and gauges don't subtract
+    c_makespan = reg.counter("serve_makespan_ticks",
+                             help="clock when the run's last request "
+                                  "finished (per-run delta)")
     i = 0
     now = 0.0
-    tick_walls: List[float] = []
     wall0 = time.perf_counter()
     try:
         while i < len(pending) or sched.queue or sched.active:
@@ -158,58 +268,29 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
                 # block per tick: JAX dispatch is async, and ticks without a
                 # completion fetch would otherwise clock only dispatch cost
                 jax.block_until_ready(sched.state)
-                tick_walls.append(time.perf_counter() - t0)
+                h_tick_wall.observe(time.perf_counter() - t0)
             now += 1.0
+            if (snapshot_every and snapshot_log is not None
+                    and (sched.ticks - ticks0) % snapshot_every == 0):
+                snapshot_log.append({
+                    "tick": sched.ticks - ticks0, "clock": now,
+                    "metrics": obsm.delta(
+                        snap0, reg.snapshot(include_samples=False))})
         sched.flush()  # consume the trailing readbacks still in flight
         jax.block_until_ready(sched.state)
     finally:
         sched.clock = None  # later direct tick()s fall back to the tick clock
     wall_s = time.perf_counter() - wall0
-    latencies = [c.latency_ticks for c in sched.completions[done0:]]
-    lat = np.asarray(latencies) if latencies else np.zeros(1)
-    n_done = len(sched.completions) - done0
-    ticks = sched.ticks - ticks0
-    tick_s = (float(np.median(tick_walls)) if tick_walls
-              else (wall_s / ticks if ticks else 0.0))
-    run_done = sched.completions[done0:]
-    per_tier = None
-    if any(c.tier is not None for c in run_done):
-        per_tier = {}
-        for t in sorted({c.tier for c in run_done}):
-            cs = [c for c in run_done if c.tier == t]
-            per_tier[t] = {
-                "completed": len(cs),
-                "evals": int(cs[0].evals) if cs else 0,
-                # full-eval units: < evals when the tier's plan schedules
-                # shallow feature-reuse steps (DESIGN.md §12)
-                "eval_cost": float(cs[0].eval_cost) if cs else 0.0,
-                "latency_ticks_p50": float(np.percentile(
-                    [c.latency_ticks for c in cs], 50)) if cs else 0.0,
-            }
+    g_wall.set(wall_s)
+    c_makespan.inc(now)
     prog = sched.program
     budget = (max(n for _, n in prog.tiers.values()) if prog.tiers
               else prog.n_rows)
-    return ServeMetrics(
+    return serve_metrics_from_snapshot(
+        obsm.delta(snap0, reg.snapshot()),
         mode=mode or ("gang" if sched.gang else "continuous"),
-        requests=len(pending), completed=n_done, slots=sched.slots,
-        n_rows=budget, ticks=ticks, evals=sched.evals - evals0,
-        makespan_ticks=now,
-        throughput_per_tick=n_done / max(now, 1.0),
-        latency_ticks_p50=float(np.percentile(lat, 50)),
-        latency_ticks_p95=float(np.percentile(lat, 95)),
-        occupancy=((sched.active_slot_ticks - ast0) / (ticks * sched.slots)
-                   if ticks else 0.0),
-        evals_per_latent=ticks * sched.slots / max(n_done, 1),
-        tick_s=tick_s,
-        throughput_rps=n_done / max(wall_s, 1e-12),
-        latency_s_p50=float(np.percentile(lat, 50)) * tick_s,
-        latency_s_p95=float(np.percentile(lat, 95)) * tick_s,
-        per_tier=per_tier,
-        pipeline_depth=sched.pipeline_depth,
-        wall_s=wall_s,
-        host_us_per_tick=((sched.host_ns - host0) / ticks / 1e3
-                          if ticks else 0.0),
-    )
+        slots=sched.slots, n_rows=budget,
+        pipeline_depth=sched.pipeline_depth)
 
 
 # ---------------------------------------------------------------------------

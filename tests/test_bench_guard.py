@@ -112,6 +112,60 @@ def test_guard_fails_when_host_overhead_blows_the_cap(bench_root):
     assert "host bookkeeping overhead" in r.stderr
 
 
+def test_guard_fails_when_phase_split_is_dropped(bench_root):
+    """The per-phase host split (DESIGN.md §15) is part of the committed
+    serving trajectory: an async run without host_phase_us_per_tick must
+    fail the guard by name."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    for run in data["async_runs"]:
+        run.pop("host_phase_us_per_tick", None)
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "host_phase_us_per_tick" in r.stderr
+
+
+def test_guard_fails_when_phase_split_drifts_from_aggregate(bench_root):
+    """admission + bookkeeping must equal host_us_per_tick — both come from
+    the same nanosecond counters, so a gap means the split and the aggregate
+    are computed by divergent code paths."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    for run in data["async_runs"]:
+        run["host_phase_us_per_tick"]["admission"] += 1000.0
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "phase split drifted" in r.stderr
+
+
+def test_guard_fails_when_obs_runs_are_dropped(bench_root):
+    """The tracing-overhead comparison (DESIGN.md §15) is load-bearing:
+    stripping obs_runs from BENCH_serve.json must fail the guard by name."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    data.pop("obs_runs")
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "obs_runs" in r.stderr and "BENCH_serve.json" in r.stderr
+
+
+def test_guard_fails_when_tracing_overhead_blows_the_cap(bench_root):
+    """Tracing leaving the cheap path (e.g. formatting events at record time
+    instead of at export) must trip the obs-overhead cap."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    for run in data["obs_runs"]:
+        if run.get("traced"):
+            run["obs_overhead_frac"] = 0.5
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "tracing overhead" in r.stderr
+
+
 def test_guard_fails_when_cached_runs_are_dropped(bench_root):
     """The feature-reuse acceptance trajectory (DESIGN.md §12) is load-
     bearing: stripping cached_runs from an otherwise valid BENCH_tuning.json
