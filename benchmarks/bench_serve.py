@@ -29,6 +29,15 @@ saturating depth-2 trace served untraced and with a `repro.obs.Tracer`
 attached, compared on the scheduler's own host-nanosecond counters. The
 committed ``obs_overhead_frac`` (extra host µs per tick over the untraced
 baseline, as a fraction of tick wall) is guard-capped at 5%.
+
+A fourth section, ``fault_runs``, prices the resilience layer (DESIGN.md
+§16) on the same saturating depth-2 trace: ``plain`` (no resilience config)
+vs ``armed`` (queue bound + retry budget configured, nothing fires) gives
+the committed ``fault_free_overhead_frac`` — extra host µs per tick as a
+fraction of tick wall, guard-capped at 2% because an idle policy layer must
+be nearly free — and ``faulted`` (a NaN poisoning + a forced meta desync
+under the armed config) must still complete EVERY request, with the extra
+ticks recovery spent committed as ``recovery_overhead_frac``.
 """
 
 from __future__ import annotations
@@ -62,14 +71,16 @@ def _program(arch: str, cfg_scale: float, seed: int = 0):
 
 def _serve(arch: str, cfg_scale: float, gang: bool,
            pipeline_depth: int = 1, rate_x: float = 2.0, prebuilt=None,
-           warmup: bool = False, n_requests: int = 0, traced: bool = False):
+           warmup: bool = False, n_requests: int = 0, traced: bool = False,
+           resilience=None, faults=None):
     from repro.obs import Tracer
     from repro.serving import SlotScheduler, poisson_requests, run_trace
 
     program, sample_shape = prebuilt or _program(arch, cfg_scale)
     sched = SlotScheduler(program, SLOTS, sample_shape, gang=gang,
                           pipeline_depth=pipeline_depth,
-                          tracer=Tracer() if traced else None)
+                          tracer=Tracer() if traced else None,
+                          resilience=resilience, faults=faults)
     compile_s = sched.aot_compile()
     if warmup:
         # a short throwaway trace so first-call dispatch paths (random-draw
@@ -176,10 +187,65 @@ def bench_serve(out_path: str = "BENCH_serve.json"):
     emit("serve/dit-cifar/obs_traced_depth2", traced["tick_s"] * 1e6,
          f"host_us_per_tick={traced['host_us_per_tick']:.0f};"
          f"overhead_frac={overhead_frac:.4f}")
+    # resilience pricing (DESIGN.md §16): plain vs armed-but-idle vs faulted
+    # on the saturating depth-2 dit-cifar trace. Armed-vs-plain is compared
+    # on the host nanosecond counters (same methodology as obs_runs: on CPU
+    # the tick wall is eval-dominated and would hide a host-path regression);
+    # the faulted run must complete every request despite a NaN poisoning
+    # and a forced desync, and commits the extra ticks recovery cost.
+    from repro.serving import FaultPlan, MetaFault, NanFault, ResilienceConfig
+
+    armed_cfg = ResilienceConfig(max_queue=256, max_retries=2)
+    # the NaN fires in the first wave, the meta corruption several waves
+    # later — decoupled so the desync recovery can't requeue the poisoned
+    # request before its non-finite completion is consumed (which would
+    # repair it without spending a retry, leaving the retry path untested)
+    fault_plan = FaultPlan(nans=(NanFault(rid=1, step=1),),
+                           metas=(MetaFault(tick=3 * NFE),))
+    fault_rows = []
+    prebuilt = _program("dit-cifar", 0.0)
+    fault_reps = {"plain": [], "armed": []}
+    for rep in range(3):
+        for kind in ("plain", "armed"):
+            fault_reps[kind].append(_serve(
+                "dit-cifar", 0.0, gang=False, pipeline_depth=2, rate_x=4.0,
+                prebuilt=prebuilt, warmup=rep == 0,
+                n_requests=2 * REQUESTS,
+                resilience=armed_cfg if kind == "armed" else None))
+    plain, armed = (_median_host(fault_reps["plain"]),
+                    _median_host(fault_reps["armed"]))
+    faulted = _serve("dit-cifar", 0.0, gang=False, pipeline_depth=2,
+                     rate_x=4.0, prebuilt=prebuilt,
+                     n_requests=2 * REQUESTS,
+                     resilience=armed_cfg, faults=fault_plan)
+    plain["resilience"], armed["resilience"], faulted["resilience"] = \
+        "plain", "armed", "faulted"
+    tick_us = plain["tick_s"] * 1e6
+    ff_frac = ((armed["host_us_per_tick"] - plain["host_us_per_tick"])
+               / max(tick_us, 1e-9))
+    armed["fault_free_overhead_frac"] = ff_frac
+    faulted["recovery_overhead_frac"] = (
+        (faulted["ticks"] - plain["ticks"]) / max(plain["ticks"], 1))
+    fault_rows += [plain, armed, faulted]
+    emit("serve/dit-cifar/resilience_plain_depth2", plain["tick_s"] * 1e6,
+         f"host_us_per_tick={plain['host_us_per_tick']:.0f}")
+    emit("serve/dit-cifar/resilience_armed_depth2", armed["tick_s"] * 1e6,
+         f"host_us_per_tick={armed['host_us_per_tick']:.0f};"
+         f"fault_free_overhead_frac={ff_frac:.4f}")
+    emit("serve/dit-cifar/resilience_faulted_depth2",
+         faulted["tick_s"] * 1e6,
+         f"completed={faulted['completed']}/{faulted['requests']};"
+         f"retries={faulted['retries']};"
+         f"recoveries={faulted['recoveries']};"
+         f"recovery_overhead_frac={faulted['recovery_overhead_frac']:.4f}")
+    assert faulted["completed"] == faulted["requests"], (
+        f"the faulted run must recover every request; completed "
+        f"{faulted['completed']}/{faulted['requests']}")
     with open(out_path, "w") as f:
         json.dump({"slots": SLOTS, "nfe": NFE, "requests": REQUESTS,
                    "env": bench_header(), "runs": rows,
-                   "async_runs": async_rows, "obs_runs": obs_rows},
+                   "async_runs": async_rows, "obs_runs": obs_rows,
+                   "fault_runs": fault_rows},
                   f, indent=1)
     return rows
 

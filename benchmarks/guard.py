@@ -24,7 +24,13 @@ Checks:
   parity within noise, and a real pipelining regression (a sync added to
   the hot loop) lands far below it. The host-frac cap defaults to 0.5,
   sized for the reduced-scale CPU tick (~2 ms at dit-cifar, where fixed
-  bookkeeping is proportionally largest; dit-i256 sits under 0.1).
+  bookkeeping is proportionally largest; dit-i256 sits under 0.1). The
+  fault_runs section (DESIGN.md §16) must commit the resilience pricing:
+  an armed-but-idle policy layer must cost <= --max-fault-overhead of tick
+  wall in extra host time (default 0.02 — checks that never fire must be
+  nearly free), and the faulted run — a NaN poisoning plus a forced desync
+  — must still have completed EVERY request, with at least one recovery
+  and one retry on the ledger.
 * BENCH_tuning.json — must be present (the tuning acceptance trajectory is
   committed alongside the serving one); every tuned plan must score <= its
   baseline, and NFE <= 8 rows must improve strictly.
@@ -60,7 +66,8 @@ def check_serve(path: str = "BENCH_serve.json",
                 min_ratio: float = 1.1,
                 min_async_ratio: float = 0.95,
                 max_host_frac: float = 0.5,
-                max_obs_overhead: float = 0.05) -> int:
+                max_obs_overhead: float = 0.05,
+                max_fault_overhead: float = 0.02) -> int:
     try:
         with open(path) as f:
             data = json.load(f)
@@ -187,6 +194,49 @@ def check_serve(path: str = "BENCH_serve.json",
     if frac > max_obs_overhead:
         fail(f"tracing overhead is {frac:.4f} of tick wall > "
              f"{max_obs_overhead} — the tracer left the cheap path")
+    checked += 1
+    # resilience pricing (DESIGN.md §16): an armed-but-idle policy layer
+    # must be nearly free, and the chaos run must have recovered everything
+    fault_runs = data.get("fault_runs")
+    if not fault_runs:
+        fail(f"{path} carries no fault_runs — the resilience pricing "
+             f"trajectory must stay committed (run `python -m benchmarks."
+             f"run --only serve`)")
+    by_kind = {r.get("resilience"): r for r in fault_runs}
+    missing = {"plain", "armed", "faulted"} - set(by_kind)
+    if missing:
+        fail(f"{path} fault_runs: missing rows {sorted(missing)} — needs "
+             f"plain, armed and faulted")
+    ff = by_kind["armed"].get("fault_free_overhead_frac")
+    if not isinstance(ff, (int, float)):
+        fail(f"{path} fault_runs: armed run carries no "
+             f"fault_free_overhead_frac — artifact schema drift?")
+    status = "ok" if ff <= max_fault_overhead else "FAIL"
+    print(f"serve resilience: fault-free overhead {ff:.4f} of tick wall "
+          f"(cap {max_fault_overhead}) {status}")
+    if ff > max_fault_overhead:
+        fail(f"the armed-but-idle resilience layer costs {ff:.4f} of tick "
+             f"wall > {max_fault_overhead} — policy checks that never fire "
+             f"left the cheap path")
+    faulted = by_kind["faulted"]
+    comp, reqs_n = faulted.get("completed"), faulted.get("requests")
+    if (not isinstance(comp, int) or not isinstance(reqs_n, int)
+            or reqs_n <= 0 or comp != reqs_n):
+        fail(f"{path} fault_runs: the faulted run must complete every "
+             f"request (completed={comp}, requests={reqs_n}) — recovery "
+             f"stopped recovering")
+    recov, retr = faulted.get("recoveries"), faulted.get("retries")
+    rof = faulted.get("recovery_overhead_frac")
+    if not all(isinstance(v, (int, float)) for v in (recov, retr, rof)):
+        fail(f"{path} fault_runs: faulted run missing recoveries/retries/"
+             f"recovery_overhead_frac — artifact schema drift?")
+    if recov < 1 or retr < 1:
+        fail(f"{path} fault_runs: the faulted run fired no "
+             f"recovery/retry (recoveries={recov}, retries={retr}) — the "
+             f"injected faults stopped exercising the paths they exist for")
+    print(f"serve resilience: faulted run {comp}/{reqs_n} completed, "
+          f"{recov} recoveries, {retr} retries, recovery overhead "
+          f"{rof:.4f} of ticks ok")
     checked += 1
     return checked
 
@@ -377,13 +427,18 @@ def main() -> None:
     ap.add_argument("--max-obs-overhead", type=float, default=0.05,
                     help="cap on the tracing-enabled host overhead as a "
                          "fraction of tick wall (obs_runs, DESIGN.md §15)")
+    ap.add_argument("--max-fault-overhead", type=float, default=0.02,
+                    help="cap on the armed-but-idle resilience layer's "
+                         "extra host time as a fraction of tick wall "
+                         "(fault_runs, DESIGN.md §16)")
     ap.add_argument("--root", default=".")
     args = ap.parse_args()
     os.chdir(args.root)
     n = check_serve(min_ratio=args.min_serve_ratio,
                     min_async_ratio=args.min_async_ratio,
                     max_host_frac=args.max_host_frac,
-                    max_obs_overhead=args.max_obs_overhead)
+                    max_obs_overhead=args.max_obs_overhead,
+                    max_fault_overhead=args.max_fault_overhead)
     n += check_tuning()
     n += check_model()
     print(f"bench guard ok ({n} checks)")

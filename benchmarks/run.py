@@ -32,7 +32,7 @@ BENCH_ARTIFACTS = {
 # extra sections an artifact must carry beyond 'runs' — a bench that stopped
 # writing one of these silently dropped part of the tracked trajectory
 REQUIRED_SECTIONS = {
-    "BENCH_serve.json": ("async_runs", "obs_runs"),
+    "BENCH_serve.json": ("async_runs", "obs_runs", "fault_runs"),
     "BENCH_model.json": ("quant_runs",),
 }
 

@@ -476,3 +476,40 @@ def _loop_dpm_singlestep(spec: EngineSpec, noise_schedule, model_fn):
 register(SolverDef(
     name="dpm", prediction="noise", fixed_prediction=False, singlestep=True,
     compile=_compile_dpm_singlestep, loop=_loop_dpm_singlestep))
+
+
+# --------------------------------------------------------------------------
+# Flight done-mask contract (DESIGN.md §16).
+#
+# `StepProgram.step_flight` reports per-slot completion as an int32 *code*,
+# not a boolean: the extra state distinguishes a slot that finished with a
+# usable latent from one whose latent went non-finite somewhere in the
+# stacked approximation layers (bf16 eval, quantized matmuls, cache reuse,
+# aggressive low-NFE plans). The finiteness reduction runs on device inside
+# the compiled step — one elementwise pass fused by XLA, negligible next to
+# the denoiser eval — so validation costs the host nothing and survives
+# `python -O` (it is program output, not an assert). The serving scheduler
+# treats any nonzero code as "done" and routes DONE_NONFINITE completions
+# into the degraded-tier retry path (serving/resilience.py).
+
+DONE_IDLE = 0        # slot not finishing this tick (idle or mid-flight)
+DONE_OK = 1          # slot finished; latent is finite
+DONE_NONFINITE = 2   # slot finished; latent contains NaN/Inf
+
+
+def finite_slots(x):
+    """Per-slot finiteness mask for a (B, ...) latent batch: True where
+    every element of slot b is finite. Traced inside `step_flight`."""
+    import jax.numpy as jnp
+
+    return jnp.isfinite(x).reshape(x.shape[0], -1).all(axis=1)
+
+
+def flag_done(done, x):
+    """Fold the per-slot finite check into a boolean done mask, producing
+    the coded int32 mask `step_flight` returns (DONE_* above)."""
+    import jax.numpy as jnp
+
+    ok = finite_slots(x)
+    return jnp.where(done, jnp.where(ok, DONE_OK, DONE_NONFINITE),
+                     DONE_IDLE).astype(jnp.int32)

@@ -43,7 +43,7 @@ from ..diffusion.process import eps_to_x0
 from ..diffusion.schedules import NoiseSchedule
 from ..parallel.sharding import shard
 from .compiler import (apply_model_cols, build_loop, compile_table,
-                       step_guidance_profile)
+                       flag_done, step_guidance_profile)
 from .specs import EngineSpec, SOLVERS
 
 
@@ -92,7 +92,11 @@ class StepProgram:
     rows (`init_meta`). The program derives each slot's table index from its
     own counters (`offset + row` while busy, the parked init row otherwise),
     advances them, and emits the per-slot `done` mask — the tick a busy slot
-    executes its last budgeted row. The host never rebuilds `idx`: it only
+    executes its last budgeted row. The mask is a coded int32 per slot
+    (`compiler.DONE_IDLE` / `DONE_OK` / `DONE_NONFINITE`): completion folds
+    an on-device finite-check of the slot's latent, so the serving layer
+    learns at emission — not from a host-side scan — whether the request's
+    output is usable (DESIGN.md §16). The host never rebuilds `idx`: it only
     scatters admissions into `meta` and reads the tiny done mask back, which
     is what lets the serving scheduler keep several ticks in flight.
     """
@@ -496,7 +500,11 @@ class SamplerEngine:
             meta = jnp.stack([jnp.where(live, row, 0),
                               jnp.where(live, off, 0),
                               budget, live.astype(jnp.int32)])
-            return state, meta, done
+            # the done mask carries the on-device output validation: a coded
+            # int32 per slot (DONE_IDLE / DONE_OK / DONE_NONFINITE, see
+            # compiler.flag_done) so a non-finite latent is flagged the tick
+            # it finishes, inside the compiled step, at no host cost
+            return state, meta, flag_done(done, state[0])
 
         if jit:
             # donate the slot state (arg 0): the tick's (x, E) update writes

@@ -87,7 +87,8 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                     plan_bank=None, tiers=None, eval_dtype="float32",
                     quant="none", pipeline_depth=2, trace_out=None,
                     metrics_out=None, metrics_every=None,
-                    probe_fraction=0.0, probe_ref_nfe=64):
+                    probe_fraction=0.0, probe_ref_nfe=64,
+                    resilience=None, faults=None):
     """Continuous-batching diffusion serving through the engine's per-slot
     step program (`SamplerEngine.build_step` + `serving.SlotScheduler`):
     `batch` slots, requests admitted the tick a slot frees, per-request
@@ -117,6 +118,15 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
     `StepProgram` serving every tier — requests tagged fast/balanced/quality
     coexist in the same batch with per-slot row offsets. Untagged generated
     traffic cycles through the tiers.
+
+    Resilience (DESIGN.md §16): `resilience` (a `serving.ResilienceConfig`)
+    bounds the admission queue with a shed policy, expires queued requests
+    past their TTL, re-admits requests whose latent came back non-finite
+    (walking a degraded-tier fallback chain), and recovers from host/device
+    desync instead of raising. `faults` (a `serving.FaultPlan`, CLI
+    `--inject-faults`) deterministically injects NaN latents, meta-counter
+    corruption, and admission clock skew to exercise those paths — requests
+    no fault touched still finish bit-identical to a clean run.
 
     Observability (DESIGN.md §15): `trace_out` records per-tick / per-request
     spans into a Chrome trace_event JSON (opens in chrome://tracing);
@@ -240,7 +250,8 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
                           (cfg.patch_tokens, cfg.latent_dim),
                           extras_init={"class_ids": NULL_CLASS_ID},
                           pipeline_depth=pipeline_depth,
-                          tracer=tracer, probe=probe)
+                          tracer=tracer, probe=probe,
+                          resilience=resilience, faults=faults)
     compile_s = sched.aot_compile()
     if trace is not None:
         reqs = load_trace(trace)
@@ -295,6 +306,15 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
           f"latency p50/p95 {m.latency_s_p50*1e3:.0f}/"
           f"{m.latency_s_p95*1e3:.0f} ms, occupancy {m.occupancy:.2f}, "
           f"evals/latent {m.evals_per_latent:.1f}")
+    if (m.rejected or m.retries or m.failed or m.recoveries
+            or m.faults_injected):
+        print(f"  resilience: {m.rejected} rejected "
+              f"({m.expired} expired), {m.degraded} shed-degraded, "
+              f"{m.retries} retries, {m.failed} failed, "
+              f"{m.recoveries} desync recoveries, "
+              f"{m.faults_injected} faults injected")
+        for ev in sched.events:
+            print(f"    event {ev}")
     if m.per_tier:
         for t, row in m.per_tier.items():
             cost = (f" ({row['eval_cost']:.2f} full-eval units)"
@@ -303,7 +323,10 @@ def serve_diffusion(arch: str, *, reduced=True, batch=4, nfe=10, order=3,
             print(f"  tier {t}: {row['completed']} done, "
                   f"{row['evals']} evals/request{cost}, "
                   f"p50 latency {row['latency_ticks_p50']:.0f} ticks")
-    order_by_rid = sorted(sched.completions, key=lambda c: c.rid)
+    # failed completions (retry budget exhausted on a non-finite latent)
+    # carry poisoned arrays; never ship those
+    order_by_rid = sorted((c for c in sched.completions if c.ok),
+                          key=lambda c: c.rid)
     if not order_by_rid:  # e.g. an empty trace
         return np.zeros((0, cfg.patch_tokens, cfg.latent_dim), np.float32)
     return np.stack([c.latent for c in order_by_rid], axis=0)
@@ -384,6 +407,42 @@ def main():
                          "discrepancy gauges (0 = off)")
     ap.add_argument("--probe-ref-nfe", type=int, default=64,
                     help="NFE of the probe's UniPC-3 reference run")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="diffusion serving resilience (DESIGN.md §16): "
+                         "bound on queued requests; past it new submissions "
+                         "are shed per --shed-policy (default unbounded)")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=["reject", "degrade"],
+                    help="what happens to submissions past --max-queue: "
+                         "'reject' returns a typed Rejection, 'degrade' "
+                         "remaps them to --degrade-tier first")
+    ap.add_argument("--degrade-tier", default=None,
+                    help="tier shed requests are remapped to under "
+                         "--shed-policy degrade (needs --plan-bank/--tiers)")
+    ap.add_argument("--ttl", type=float, default=None,
+                    help="diffusion serving resilience: admission deadline "
+                         "in tick-clock units past arrival; queued requests "
+                         "whose deadline passes before a slot frees are "
+                         "expired, not served late")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="diffusion serving resilience: re-admissions after "
+                         "a non-finite latent (same seed) before emitting a "
+                         "failed completion (default 0)")
+    ap.add_argument("--retry-fallback", default=None,
+                    help="comma-separated safer-tier chain walked on retry "
+                         "(needs --plan-bank/--tiers); omit to retry on the "
+                         "same tier")
+    ap.add_argument("--recovery", default="recover",
+                    choices=["recover", "raise"],
+                    help="host/device desync handling: 'recover' drains the "
+                         "pipeline, resyncs from device state and requeues "
+                         "(the default); 'raise' keeps the legacy hard "
+                         "RuntimeError")
+    ap.add_argument("--inject-faults", default=None,
+                    help="diffusion serving chaos (DESIGN.md §16): "
+                         "semicolon-separated fault clauses, e.g. "
+                         "'nan:rid=2,step=1;meta:tick=6;skew:tick=3,delta=9' "
+                         "or 'seed:7,requests=8,nfe=4' for a seeded plan")
     bank = ap.add_mutually_exclusive_group()
     bank.add_argument("--plan-bank", default=None,
                       help="diffusion serving: JSON bank of tuned SolverPlans"
@@ -438,6 +497,28 @@ def main():
     if not 0.0 <= args.probe_fraction <= 1.0:
         ap.error(f"--probe-fraction must be in [0, 1], "
                  f"got {args.probe_fraction}")
+    wants_resilience = (args.max_queue is not None or args.ttl is not None
+                        or args.max_retries or args.retry_fallback
+                        or args.degrade_tier or args.shed_policy != "reject"
+                        or args.recovery != "recover")
+    if family != "dit" and (wants_resilience or args.inject_faults):
+        ap.error(f"--max-queue/--ttl/--max-retries/--inject-faults and "
+                 f"friends configure the diffusion serving scheduler; "
+                 f"--arch {args.arch} is family '{family}'")
+    resilience = None
+    if wants_resilience:
+        from ..serving import ResilienceConfig
+        resilience = ResilienceConfig(
+            max_queue=args.max_queue, shed_policy=args.shed_policy,
+            degrade_tier=args.degrade_tier, default_ttl=args.ttl,
+            max_retries=args.max_retries,
+            fallback=(tuple(args.retry_fallback.split(","))
+                      if args.retry_fallback else ()),
+            recovery=args.recovery)
+    faults = None
+    if args.inject_faults:
+        from ..serving import parse_fault_spec
+        faults = parse_fault_spec(args.inject_faults)
     if family == "dit":
         serve_diffusion(args.arch, reduced=not args.full, batch=args.batch,
                         nfe=nfe, order=order, solver=solver,
@@ -454,7 +535,8 @@ def main():
                         metrics_out=args.metrics_out,
                         metrics_every=args.metrics_every,
                         probe_fraction=args.probe_fraction,
-                        probe_ref_nfe=args.probe_ref_nfe)
+                        probe_ref_nfe=args.probe_ref_nfe,
+                        resilience=resilience, faults=faults)
         return
     serve(args.arch, reduced=not args.full, batch=args.batch,
           prompt_len=args.prompt_len, gen=args.gen,

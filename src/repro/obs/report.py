@@ -105,6 +105,39 @@ def render_serve_summary(serve_metrics: dict) -> str:
     return "\n".join(lines)
 
 
+def render_resilience(serve_metrics: dict,
+                      metrics: Optional[Dict[str, dict]] = None) -> str:
+    """The fault/resilience ledger (DESIGN §16): what was shed, retried,
+    failed and recovered, with the per-label breakdown (rejection reasons,
+    injected fault kinds) read back out of the registry delta. Returns ""
+    when the run saw no resilience event at all — fault-free reports are
+    unchanged."""
+    m = serve_metrics
+    keys = ("rejected", "expired", "degraded", "retries", "failed",
+            "recoveries", "faults_injected")
+    if not any(int(m.get(k) or 0) for k in keys):
+        return ""
+    lines = ["resilience ledger (DESIGN §16):",
+             f"  rejected {int(m.get('rejected') or 0)} "
+             f"(expired {int(m.get('expired') or 0)})  "
+             f"shed-degraded {int(m.get('degraded') or 0)}  "
+             f"retries {int(m.get('retries') or 0)}  "
+             f"failed {int(m.get('failed') or 0)}",
+             f"  desync recoveries {int(m.get('recoveries') or 0)}  "
+             f"faults injected {int(m.get('faults_injected') or 0)}"]
+    if metrics:
+        breakdown = []
+        for fullname, row in sorted(metrics.items()):
+            name, labels = parse_fullname(fullname)
+            if (name in ("serve_rejected", "fault_injected", "serve_retries",
+                         "serve_requeued") and row.get("type") == "counter"):
+                tag = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+                breakdown.append(f"  {name}{{{tag}}} = "
+                                 f"{int(row.get('value') or 0)}")
+        lines.extend(breakdown)
+    return "\n".join(lines)
+
+
 def render_probe_summary(probe: Dict[str, dict]) -> str:
     lines = ["quality probe (trajectory discrepancy vs high-NFE reference):",
              f"  {'tier':<10} {'probed':>6} {'mean':>12} {'max':>12}"]
@@ -167,6 +200,10 @@ def render_report(trace: Optional[dict] = None,
         sm = metrics.get("serve_metrics") or {}
         parts.append(render_serve_summary(sm))
         parts.append(render_tick_table(sm))
+        resil = render_resilience(
+            sm, (metrics.get("run") or {}).get("metrics"))
+        if resil:
+            parts.append(resil)
         if metrics.get("probe"):
             parts.append(render_probe_summary(metrics["probe"]))
         if metrics.get("rows"):

@@ -6,8 +6,17 @@ solver table, and emit their latent the tick they finish — no request ever
 waits for a whole batch to drain. `server` adds synthetic Poisson / trace
 request generators and the serving metrics (throughput, p50/p95 latency, slot
 occupancy, evals-per-latent).
+
+`resilience` + `faults` make the loop survivable (DESIGN.md §16): bounded
+admission with typed rejections and TTL expiry, on-device output validation
+with degraded-tier retry, host/device desync recovery, and a deterministic
+fault-injection harness that proves all of it under chaos.
 """
 
+from .faults import (FaultInjector, FaultPlan, MetaFault, NanFault,
+                     SkewFault, parse_fault_spec)
+from .resilience import (DEFAULT_RESILIENCE, Rejection, ResilienceConfig,
+                         fallback_tier, validate_resilience)
 from .scheduler import Completion, Request, SlotScheduler
 from .server import (ServeMetrics, load_trace, poisson_requests, run_trace,
                      save_trace)
@@ -16,4 +25,8 @@ __all__ = [
     "Request", "Completion", "SlotScheduler",
     "ServeMetrics", "poisson_requests", "load_trace", "save_trace",
     "run_trace",
+    "ResilienceConfig", "DEFAULT_RESILIENCE", "Rejection",
+    "fallback_tier", "validate_resilience",
+    "FaultPlan", "FaultInjector", "NanFault", "MetaFault", "SkewFault",
+    "parse_fault_spec",
 ]

@@ -38,16 +38,22 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from functools import partial
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..engine.compiler import DONE_NONFINITE
 from ..engine.engine import StepProgram
 from ..obs.metrics import MetricsRegistry
+from .faults import FaultInjector, FaultPlan
+from .resilience import (DEFAULT_RESILIENCE, FAIL_NONFINITE,
+                         REJECT_EXPIRED, REJECT_QUEUE_FULL, Rejection,
+                         ResilienceConfig, fallback_tier,
+                         validate_resilience)
 
 # fixed upper-bound buckets for the scheduler's streaming histograms
 # (DESIGN.md §15): tick-denominated and depth-invariant, so the bucket
@@ -58,6 +64,19 @@ OCCUPANCY_BUCKETS = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
 LATENCY_TICK_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 EVAL_COST_BUCKETS = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64)
 HOST_PHASES = ("admission", "dispatch", "readback", "bookkeeping")
+
+# resilience / fault-injection event counters (DESIGN.md §16). Registered
+# lazily — on the first event of each kind — so a fault-free run's metrics
+# snapshot is exactly the pre-resilience snapshot.
+EVENT_COUNTER_HELP = {
+    "serve_rejected": "requests shed before admission (by reason)",
+    "serve_shed_degraded": "requests remapped to the shed tier at submit",
+    "serve_retries": "non-finite completions re-admitted on a fallback tier",
+    "serve_failed": "failed completions emitted (retry budget exhausted)",
+    "serve_desync_recoveries": "host/device desync recoveries",
+    "serve_requeued": "in-flight requests requeued by desync recovery",
+    "fault_injected": "injected faults that fired (by kind)",
+}
 
 
 @partial(jax.jit, static_argnames=("has_cache", "uses_cfg"))
@@ -99,6 +118,19 @@ def _gather_rows(x, idx):
     return x[idx]
 
 
+@jax.jit
+def _poison_slot(x, slot):
+    """Overwrite one slot's latent with NaN — fault injection only
+    (serving/faults.py); never on the clean path."""
+    return x.at[slot].set(jnp.nan)
+
+
+@jax.jit
+def _bump_row(meta, slot, delta):
+    """Corrupt one slot's on-device row counter — fault injection only."""
+    return meta.at[0, slot].add(delta)
+
+
 @dataclass
 class Request:
     """One sampling request: a latent to generate under per-request knobs.
@@ -124,6 +156,12 @@ class Request:
     # selects which tuned plan's row span this request steps through. Must
     # name a tier of the program's bank; None on single-plan programs.
     tier: Optional[str] = None
+    # admission deadline in tick-clock units past `arrival`: a request still
+    # queued when its deadline passes is expired at admission time instead
+    # of served late (None = the scheduler's ResilienceConfig.default_ttl,
+    # itself None = no deadline). Already-admitted requests always run to
+    # completion — the deadline bounds queue wait, not service.
+    ttl: Optional[float] = None
 
 
 @dataclass
@@ -143,6 +181,17 @@ class Completion:
     # below it when the request's row span scheduled shallow feature-reuse
     # evals (StepProgram.span_cost, DESIGN.md §12)
     eval_cost: float = 0.0
+    # resilience provenance (DESIGN.md §16): ok=False marks a latent that
+    # failed the on-device finite check with the retry budget exhausted
+    # (fail_reason says why); retries counts non-finite re-admissions,
+    # requeues counts desync-recovery re-admissions; first_tier is the
+    # originally requested tier when retry fallback or shed-degrade moved
+    # the request off it (None when it was served as requested).
+    ok: bool = True
+    retries: int = 0
+    requeues: int = 0
+    first_tier: Optional[str] = None
+    fail_reason: Optional[str] = None
 
     @property
     def latency_ticks(self) -> float:
@@ -190,7 +239,9 @@ class SlotScheduler:
                  extras_init: Optional[dict] = None,
                  pipeline_depth: int = 1,
                  registry: Optional[MetricsRegistry] = None,
-                 tracer=None, probe=None):
+                 tracer=None, probe=None,
+                 resilience: Optional[ResilienceConfig] = None,
+                 faults: Optional[FaultPlan] = None):
         if pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1, "
                              f"got {pipeline_depth}")
@@ -235,6 +286,21 @@ class SlotScheduler:
                                             # None -> clock follows ticks
         self.completions: List[Completion] = []
         self._inflight: Deque[_Flight] = deque()
+        # resilience policy (DESIGN.md §16): the default config is inert —
+        # unbounded queue, no TTL, no retries — so a scheduler built without
+        # one behaves bit-identically to the pre-resilience loop until a
+        # fault actually fires. `rejections` partitions submissions together
+        # with `completions`; `events` is the deterministic resilience /
+        # fault ledger (plain tuples, compared across chaos runs).
+        self.resilience = validate_resilience(
+            resilience if resilience is not None else DEFAULT_RESILIENCE,
+            program)
+        self.rejections: List[Rejection] = []
+        self.events: List[tuple] = []
+        self._injector = (FaultInjector(faults, ledger=self.events)
+                          if faults else None)
+        self._rstate: Dict[int, dict] = {}  # rid -> retry/requeue provenance
+        self._recoveries = 0
         # host-overhead accounting (benchmarks/bench_serve.py), split by tick
         # phase (DESIGN.md §15): admission = the _admit() call, dispatch = the
         # step call itself (inline device execution on runtimes without async
@@ -303,7 +369,20 @@ class SlotScheduler:
                            for k, v in self.extras.items()}
 
     # -- queue / slots -------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def _count_event(self, name: str, labels: Optional[dict] = None,
+                     n: int = 1) -> None:
+        """Bump a lazily-registered resilience/fault counter."""
+        self.registry.counter(name, labels,
+                              help=EVENT_COUNTER_HELP[name]).inc(n)
+
+    def submit(self, req: Request) -> Optional[Rejection]:
+        """Queue a request, or shed it under overload control.
+
+        Returns None when the request was accepted, or the typed
+        `Rejection` handed back to the traffic source when the bounded
+        queue shed it (also appended to `self.rejections`). Malformed
+        requests — bad tier tag, unknown extras, guidance on an unguided
+        program — still raise: those are programmer errors, not load."""
         if (req.cfg_scale is not None and float(req.cfg_scale) != 0.0
                 and not self.program.uses_cfg):
             raise ValueError(
@@ -317,12 +396,54 @@ class SlotScheduler:
                 f"scheduler was not constructed for; pass extras_init with "
                 f"matching keys")
         self.program.resolve_tier(req.tier)  # reject bad tier tags at submit
-        self.queue.append(req)
         self._m_submitted.inc()
+        cfg = self.resilience
+        if (cfg.max_queue is not None
+                and len(self.queue) >= cfg.max_queue):
+            return self._reject(req, REJECT_QUEUE_FULL)
+        if (cfg.shed_policy == "degrade"
+                and cfg.degrade_watermark is not None
+                and len(self.queue) >= cfg.degrade_watermark
+                and req.tier != cfg.degrade_tier):
+            # shed by degrading instead of dropping: past the watermark new
+            # requests are remapped to the cheap tier, recording provenance
+            self._rprov(req.rid)["first_tier"] = req.tier
+            req = dc_replace(req, tier=cfg.degrade_tier)
+            self.events.append(("shed_degrade", req.arrival, req.rid))
+            self._count_event("serve_shed_degraded")
+        self.queue.append(req)
         if self.tracer is not None:
             self.tracer.async_begin("request", req.rid,
                                     args={"tier": req.tier,
                                           "arrival": req.arrival})
+        return None
+
+    def _rprov(self, rid: int) -> dict:
+        """This rid's resilience provenance record (created on first use;
+        stamped onto its Completion and dropped at emission)."""
+        return self._rstate.setdefault(
+            rid, {"retries": 0, "requeues": 0, "first_tier": None})
+
+    def _reject(self, req: Request, reason: str,
+                clock: Optional[float] = None) -> Rejection:
+        rej = Rejection(rid=req.rid, reason=reason, arrival=req.arrival,
+                        clock=req.arrival if clock is None else clock,
+                        tier=req.tier)
+        self.rejections.append(rej)
+        self.events.append(("reject", rej.clock, req.rid, reason))
+        self._rstate.pop(req.rid, None)
+        self._count_event("serve_rejected", {"reason": reason})
+        if self.tracer is not None:
+            if reason == REJECT_EXPIRED:
+                # the lifecycle span opened at submit: close it as expired
+                self.tracer.async_end("request", req.rid,
+                                      args={"rejected": reason,
+                                            "tier": req.tier})
+            else:
+                # queue_full sheds before the span opens: a lone instant
+                self.tracer.instant("reject", cat="request",
+                                    args={"rid": req.rid, "reason": reason})
+        return rej
 
     @property
     def active(self) -> int:
@@ -364,17 +485,44 @@ class SlotScheduler:
         return np.asarray(jax.random.normal(key, self.sample_shape,
                                             self.dtype))
 
+    def _expired(self, req: Request, admit_now: float) -> bool:
+        """Deadline check at admission time (DESIGN.md §16): a queued
+        request whose TTL elapsed before a slot freed is expired, never
+        served late. Admitted requests are exempt by construction — this
+        is only consulted on the queue->slot edge."""
+        ttl = req.ttl if req.ttl is not None else self.resilience.default_ttl
+        return ttl is not None and admit_now - req.arrival > ttl
+
     def _admit(self) -> None:
         if self.gang and self._busy.any():
             return  # sequential full-batch baseline: drain before refilling
         if not self.queue:
             return
         free = np.flatnonzero(~self._busy)
-        n = min(free.size, len(self.queue))
+        if free.size == 0:
+            return
+        # the admission clock: the simulated time this tick's admissions
+        # happen at (the trace driver advances `clock` to now+1 pre-tick).
+        # A skew fault shifts it — the chaos stand-in for a stalled host.
+        admit_now = (float(self.ticks) if self.clock is None
+                     else self.clock - 1.0)
+        if self._injector is not None:
+            skew = self._injector.take_skew(self.ticks + 1)
+            if skew:
+                admit_now += skew
+                self.events.append(("fault_skew", self.ticks + 1, skew))
+                self._count_event("fault_injected", {"kind": "skew"})
+        reqs: List[Request] = []
+        while self.queue and len(reqs) < free.size:
+            r = self.queue.popleft()
+            if self._expired(r, admit_now):
+                self._reject(r, REJECT_EXPIRED, clock=admit_now)
+                continue
+            reqs.append(r)
+        n = len(reqs)
         if n == 0:
             return
         taken = free[:n]
-        reqs = [self.queue.popleft() for _ in range(n)]
         offs = np.empty(n, np.int64)
         budgets = np.empty(n, np.int64)
         for j, r in enumerate(reqs):
@@ -456,6 +604,8 @@ class SlotScheduler:
         self._m_queue.observe(len(self.queue))
         self._m_busy.observe(n_busy)
         self._m_occ.observe(n_busy / self.slots)
+        if self._injector is not None:
+            self._inject()
         # dispatch: idx construction and row advance happen on device
         # (StepProgram.step_flight); nothing tick-varying crosses the host
         # boundary here. Timed separately — the call is device time (inline
@@ -524,6 +674,45 @@ class SlotScheduler:
                        ts_ns=t0)
         return done
 
+    def _inject(self) -> None:
+        """Fire the armed faults due this tick (serving/faults.py), after
+        admission and before dispatch, directly on device state — the
+        compiled step program itself is never altered, so chaos tests
+        exercise the real serving path. `self.ticks` already names the tick
+        about to dispatch; `slot_row` still holds the row about to run."""
+        inj = self._injector
+        for s in np.flatnonzero(self._busy):
+            req = self.slot_req[int(s)]
+            fault = inj.take_nan(req.rid, int(self.slot_row[s]))
+            if fault is not None:
+                x = _poison_slot(self.state[0], jnp.int32(int(s)))
+                self.state = (x,) + tuple(self.state[1:])
+                self.events.append(("fault_nan", self.ticks, req.rid,
+                                    int(self.slot_row[s])))
+                self._count_event("fault_injected", {"kind": "nan"})
+                if self.tracer is not None:
+                    self.tracer.async_instant(
+                        "fault_nan", req.rid,
+                        args={"tick": self.ticks,
+                              "step": int(self.slot_row[s])})
+        mf = inj.take_meta(self.ticks)
+        if mf is not None:
+            slot = mf.slot
+            if slot is None:
+                busy = np.flatnonzero(self._busy)
+                slot = int(busy[0]) if busy.size else None
+            if slot is not None:
+                self.meta = _bump_row(self.meta, jnp.int32(slot),
+                                      jnp.int32(mf.delta))
+                self.events.append(("fault_meta", self.ticks, slot,
+                                    mf.delta))
+                self._count_event("fault_injected", {"kind": "meta"})
+                if self.tracer is not None:
+                    self.tracer.instant("fault_meta", cat="tick",
+                                        args={"tick": self.ticks,
+                                              "slot": slot,
+                                              "delta": mf.delta})
+
     def _consume(self, f: _Flight) -> List[Completion]:
         """Materialize one flight's readback: verify the on-device done mask
         against the host prediction and emit the finished latents."""
@@ -536,18 +725,45 @@ class SlotScheduler:
         self._blocked_ns += te - tb
         got = np.flatnonzero(mask_np)
         if not np.array_equal(got, f.slots):
-            raise RuntimeError(
-                f"on-device done mask {got.tolist()} disagrees with the "
-                f"host completion prediction {f.slots.tolist()} at tick "
-                f"{f.tick} — scheduler bookkeeping desynchronized from the "
-                f"compiled step program")
-        done = [Completion(
-            rid=req.rid, latent=lat_np[j], arrival=req.arrival,
-            admit_tick=int(f.admits[j]), finish_tick=f.tick,
-            finish_clock=f.clock, evals=int(f.budgets[j]), tier=req.tier,
-            eval_cost=self.program.span_cost(int(f.offs[j]),
-                                             int(f.budgets[j])))
-            for j, req in enumerate(f.reqs)]
+            if self.resilience.recovery == "raise":
+                raise RuntimeError(
+                    f"on-device done mask {got.tolist()} disagrees with the "
+                    f"host completion prediction {f.slots.tolist()} at tick "
+                    f"{f.tick} — scheduler bookkeeping desynchronized from "
+                    f"the compiled step program")
+            return self._recover(f, got)
+        # on-device output validation (DESIGN.md §16): the done mask is
+        # coded, and DONE_NONFINITE marks a finished slot whose latent
+        # failed the finite check inside the compiled step. Those requests
+        # re-admit on the fallback chain while retry budget remains; only
+        # exhaustion emits a (marked-failed) completion.
+        bad = mask_np[f.slots] == DONE_NONFINITE
+        cfg = self.resilience
+        emitted: List[Tuple[Request, Completion]] = []
+        for j, req in enumerate(f.reqs):
+            if bad[j]:
+                prov = self._rprov(req.rid)
+                if prov["retries"] < cfg.max_retries:
+                    self._retry(req, f, prov)
+                    continue
+            prov = self._rstate.pop(req.rid, None) or {}
+            c = Completion(
+                rid=req.rid, latent=lat_np[j], arrival=req.arrival,
+                admit_tick=int(f.admits[j]), finish_tick=f.tick,
+                finish_clock=f.clock, evals=int(f.budgets[j]),
+                tier=req.tier,
+                eval_cost=self.program.span_cost(int(f.offs[j]),
+                                                 int(f.budgets[j])),
+                ok=not bool(bad[j]),
+                retries=int(prov.get("retries", 0)),
+                requeues=int(prov.get("requeues", 0)),
+                first_tier=prov.get("first_tier"),
+                fail_reason=FAIL_NONFINITE if bad[j] else None)
+            if not c.ok:
+                self.events.append(("failed", f.tick, c.rid))
+                self._count_event("serve_failed")
+            emitted.append((req, c))
+        done = [c for _, c in emitted]
         self.completions.extend(done)
         reg = self.registry
         for c in done:
@@ -568,42 +784,136 @@ class SlotScheduler:
                                         "ticks").observe(c.latency_ticks)
         if self.tracer is not None:
             for c in done:
-                self.tracer.async_end(
-                    "request", c.rid,
-                    args={"tier": c.tier, "evals": c.evals,
-                          "eval_cost": c.eval_cost,
-                          "latency_ticks": c.latency_ticks,
-                          "admit_tick": c.admit_tick,
-                          "finish_tick": c.finish_tick})
+                args = {"tier": c.tier, "evals": c.evals,
+                        "eval_cost": c.eval_cost,
+                        "latency_ticks": c.latency_ticks,
+                        "admit_tick": c.admit_tick,
+                        "finish_tick": c.finish_tick}
+                if not c.ok or c.retries or c.requeues:
+                    args.update(ok=c.ok, retries=c.retries,
+                                requeues=c.requeues,
+                                fail_reason=c.fail_reason)
+                self.tracer.async_end("request", c.rid, args=args)
             self.tracer.complete("readback", tb, te)
             self.tracer.complete("emit", te, time.perf_counter_ns())
         if self.probe is not None:
             # replay a sampled fraction against the high-NFE reference; the
             # replay is device work, not scheduler bookkeeping — timed apart
-            # so it never pollutes the per-phase host accounting
+            # so it never pollutes the per-phase host accounting. Failed
+            # completions are never probed (their latent is non-finite).
             pp0 = time.perf_counter_ns()
-            for req, c in zip(f.reqs, done):
-                if self.probe.selected(c.rid):
+            for req, c in emitted:
+                if c.ok and self.probe.selected(c.rid):
                     self.probe.observe(req, c, self._draw(req))
             self._probe_ns += time.perf_counter_ns() - pp0
         return done
 
+    def _retry(self, req: Request, f: _Flight, prov: dict) -> None:
+        """Re-admit a request whose finished latent failed validation:
+        seed and x_T preserved (the retry re-draws the identical initial
+        latent), tier advanced along the fallback chain, and the request
+        put at the queue FRONT — it has waited longest. Bookkept as a
+        re-admission, not a new submission."""
+        nxt = fallback_tier(self.resilience, req.tier)
+        if nxt != req.tier and prov["first_tier"] is None:
+            prov["first_tier"] = req.tier
+        prov["retries"] += 1
+        self.events.append(("retry", f.tick, req.rid, req.tier, nxt))
+        self._count_event("serve_retries")
+        if self.tracer is not None:
+            self.tracer.async_instant(
+                "retry", req.rid,
+                args={"tick": f.tick, "from": req.tier, "to": nxt,
+                      "attempt": prov["retries"]})
+        self.queue.appendleft(req if nxt == req.tier
+                              else dc_replace(req, tier=nxt))
+
+    def _recover(self, f: _Flight, got: np.ndarray) -> List[Completion]:
+        """Desync recovery (DESIGN.md §16): the device done mask disagreed
+        with the host's predicted completion schedule. Drain the pipeline
+        (every in-flight readback is suspect), re-derive the host slot
+        mirrors from the authoritative device `meta` counters — slots whose
+        host and device bookkeeping still agree keep running untouched —
+        and requeue every affected request to re-serve from scratch (seed
+        preserved, so a recovered request's latent still reproduces the
+        clean run). Returns no completions; the requeued work re-emits
+        through the normal path."""
+        self._recoveries += 1
+        if self._recoveries > self.resilience.max_recoveries:
+            raise RuntimeError(
+                f"desync recovery limit ({self.resilience.max_recoveries}) "
+                f"exhausted: on-device done mask {got.tolist()} still "
+                f"disagrees with the host completion prediction "
+                f"{f.slots.tolist()} at tick {f.tick} — the step program "
+                f"and scheduler bookkeeping cannot re-synchronize")
+        affected: List[Request] = list(f.reqs)
+        while self._inflight:
+            affected.extend(self._inflight.popleft().reqs)
+        meta_dev = np.asarray(self.meta)  # authoritative device counters
+        nr = self.program.n_rows
+        for s in range(self.slots):
+            host_busy = bool(self._busy[s])
+            dev_busy = bool(meta_dev[3, s])
+            if not host_busy and not dev_busy:
+                continue
+            if (host_busy and dev_busy
+                    and int(meta_dev[0, s]) == int(self.slot_row[s])
+                    and int(meta_dev[1, s]) == int(self.slot_off[s])
+                    and int(meta_dev[2, s]) == int(self.slot_budget[s])):
+                continue  # mirrors agree: the slot keeps running
+            req = self.slot_req[s]
+            if req is not None:
+                affected.append(req)
+            self.slot_req[s] = None
+            self._busy[s] = False
+            self.slot_row[s] = 0
+            self.slot_off[s] = 0
+            self.slot_budget[s] = nr
+            meta_dev[:, s] = (0, 0, nr, 0)
+        self.meta = jnp.asarray(meta_dev)
+        # requeue at the queue front in original arrival order: recovered
+        # requests were in service before anything still queued
+        affected.sort(key=lambda r: (r.arrival, r.rid))
+        for r in reversed(affected):
+            self._rprov(r.rid)["requeues"] += 1
+            self.queue.appendleft(r)
+        self.events.append(("desync", f.tick,
+                            tuple(r.rid for r in affected)))
+        self._count_event("serve_desync_recoveries")
+        if affected:
+            self._count_event("serve_requeued", n=len(affected))
+        if self.tracer is not None:
+            self.tracer.instant(
+                "desync_recover", cat="tick",
+                args={"tick": f.tick, "got": got.tolist(),
+                      "predicted": f.slots.tolist(),
+                      "requeued": [r.rid for r in affected]})
+            for r in affected:
+                self.tracer.async_instant("requeue", r.rid,
+                                          args={"tick": f.tick})
+        return []
+
     def flush(self) -> List[Completion]:
         """Consume every in-flight readback (blocking). A no-op at
         pipeline_depth=1; the async trace driver calls it once the arrival
-        stream is exhausted."""
+        stream is exhausted. May leave work REQUEUED (a consumed readback
+        can trigger a retry or a desync recovery) — drivers must re-check
+        `queue`/`active` after flushing, as `drain` and `run_trace` do."""
         done: List[Completion] = []
         while self._inflight:
             done.extend(self._consume(self._inflight.popleft()))
         return done
 
     def drain(self) -> List[Completion]:
-        """Tick until every queued and in-flight request has finished."""
+        """Tick until every queued and in-flight request has finished —
+        including requests the resilience layer requeued mid-drain."""
         out: List[Completion] = []
-        while self.queue or self.active:
-            out.extend(self.tick())
-        out.extend(self.flush())
-        return out
+        while True:
+            while self.queue or self.active:
+                out.extend(self.tick())
+            out.extend(self.flush())
+            if not (self.queue or self.active):
+                return out
 
     def _step_tail(self):
         """Trailing step args after (state, meta) — identical for every tick

@@ -27,6 +27,8 @@ import jax
 import numpy as np
 
 from ..obs import metrics as obsm
+from .faults import FaultPlan, MetaFault, NanFault
+from .resilience import ResilienceConfig
 from .scheduler import Completion, Request, SlotScheduler
 
 TICK_WALL_BUCKETS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0)
@@ -58,7 +60,8 @@ def poisson_requests(n: int, rate: float, seed: int = 0,
 
 def save_trace(path: str, requests: Sequence[Request]) -> None:
     rows = [{"rid": r.rid, "seed": r.seed, "arrival": r.arrival,
-             "cfg_scale": r.cfg_scale, "extras": r.extras, "tier": r.tier}
+             "cfg_scale": r.cfg_scale, "extras": r.extras, "tier": r.tier,
+             "ttl": r.ttl}
             for r in requests]
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
@@ -77,7 +80,9 @@ def load_trace(path: str) -> List[Request]:
                                else float(r["cfg_scale"])),
                     extras=r.get("extras"),
                     tier=(None if r.get("tier") is None
-                          else str(r["tier"])))
+                          else str(r["tier"])),
+                    ttl=(None if r.get("ttl") is None
+                         else float(r["ttl"])))
             for r in rows]
 
 
@@ -120,6 +125,16 @@ class ServeMetrics:
     # admission + bookkeeping == host_us_per_tick; dispatch and readback are
     # device-facing time, reported for the "where a tick goes" breakdown
     host_phase_us_per_tick: Optional[dict] = None
+    # resilience accounting (DESIGN.md §16). Completions and rejections
+    # partition every submission: requests == completed + rejected, the
+    # invariant run_trace metrics hold under overload and faults.
+    rejected: int = 0         # shed before admission (queue_full + expired)
+    expired: int = 0          # the TTL/deadline subset of `rejected`
+    degraded: int = 0         # submissions remapped to the shed tier
+    retries: int = 0          # non-finite re-admissions (validation retry)
+    failed: int = 0           # completions with ok=False (retry exhausted)
+    recoveries: int = 0       # host/device desync recoveries
+    faults_injected: int = 0  # chaos-harness faults that fired (faults.py)
 
     def row(self) -> dict:
         return asdict(self)
@@ -157,10 +172,17 @@ def serve_metrics_from_snapshot(delta: dict, *, mode: str, slots: int,
     tick_s = (obsm.snapshot_percentile(tw_row, 50) if tw_row.get("count")
               else (wall_s / ticks if ticks else 0.0))
     phases = {}
+    rejected = expired = faults = 0
     for full, row in delta.items():
         name, labels = obsm.parse_fullname(full)
         if name == "host_phase_ns" and "phase" in labels:
             phases[labels["phase"]] = row["value"]
+        elif name == "serve_rejected":
+            rejected += int(row["value"])
+            if labels.get("reason") == "expired":
+                expired += int(row["value"])
+        elif name == "fault_injected":
+            faults += int(row["value"])
     host_ns = phases.get("admission", 0) + phases.get("bookkeeping", 0)
     tiers = sorted({obsm.parse_fullname(full)[1].get("tier")
                     for full in delta
@@ -204,6 +226,12 @@ def serve_metrics_from_snapshot(delta: dict, *, mode: str, slots: int,
                                     if ticks else 0.0)
                                 for p in ("admission", "dispatch",
                                           "readback", "bookkeeping")},
+        rejected=rejected, expired=expired,
+        degraded=int(_counter_val(delta, "serve_shed_degraded")),
+        retries=int(_counter_val(delta, "serve_retries")),
+        failed=int(_counter_val(delta, "serve_failed")),
+        recoveries=int(_counter_val(delta, "serve_desync_recoveries")),
+        faults_injected=faults,
     )
 
 
@@ -232,6 +260,13 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
     `snapshot_every`, with a `snapshot_log` list, additionally appends a
     compact (sample-free) registry snapshot row every N executed ticks —
     the periodic streaming view the metrics artifact records.
+
+    Submissions need not all complete (DESIGN.md §16): a bounded-queue
+    scheduler sheds under overload, TTLs expire queued requests, and the
+    resilience layer can requeue in-flight work (validation retry, desync
+    recovery). The driver keeps serving until queue, slots, AND the
+    readback pipeline are empty, and the derived metrics partition every
+    submission: `requests == completed + rejected`.
     """
     pending = sorted(requests, key=lambda r: r.arrival)
     sync = sched.pipeline_depth == 1
@@ -254,13 +289,21 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
     now = 0.0
     wall0 = time.perf_counter()
     try:
-        while i < len(pending) or sched.queue or sched.active:
+        while True:
             while i < len(pending) and pending[i].arrival <= now:
                 sched.submit(pending[i])
                 i += 1
             if not sched.queue and not sched.active:
-                now = pending[i].arrival  # idle: jump to the next arrival
-                continue
+                if sched.in_flight:
+                    # drain the trailing readbacks before declaring idle: a
+                    # consumed flight can REQUEUE work (validation retry,
+                    # desync recovery), in which case serving resumes
+                    sched.flush()
+                    continue
+                if i < len(pending):
+                    now = pending[i].arrival  # idle: jump to the next arrival
+                    continue
+                break
             sched.clock = now + 1.0  # this tick's completions land at now+1
             t0 = time.perf_counter()
             sched.tick()
@@ -276,7 +319,6 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
                     "tick": sched.ticks - ticks0, "clock": now,
                     "metrics": obsm.delta(
                         snap0, reg.snapshot(include_samples=False))})
-        sched.flush()  # consume the trailing readbacks still in flight
         jax.block_until_ready(sched.state)
     finally:
         sched.clock = None  # later direct tick()s fall back to the tick clock
@@ -294,17 +336,21 @@ def run_trace(sched: SlotScheduler, requests: Sequence[Request],
 
 
 # ---------------------------------------------------------------------------
-# CI smoke: short Poisson trace on CPU against the reduced dit backbone
+# CI smokes: short Poisson traces on CPU against the reduced dit backbone
 # ---------------------------------------------------------------------------
 
 
-def smoke(arch: str = "dit-cifar", slots: int = 2, nfe: int = 4,
-          n_requests: int = 5, rate: float = 0.5, cfg_scale: float = 2.0,
-          seed: int = 0, pipeline_depth: int = 1) -> ServeMetrics:
-    """Serve a short Poisson trace end to end and assert the scheduler
-    invariants: every request completes, one batched eval per tick,
-    per-request eval bookkeeping adds up, and the completion clock is
-    monotonic (dispatch-stamped even when readbacks trail the pipeline)."""
+def _require(cond: bool, msg: str) -> None:
+    """Always-on invariant check for the CI smokes: unlike `assert`, it
+    survives `python -O` — an invariant violation must fail loudly no
+    matter how the interpreter was invoked."""
+    if not cond:
+        raise RuntimeError(f"serving invariant violated: {msg}")
+
+
+def _build_smoke_sched(arch: str, slots: int, nfe: int, cfg_scale: float,
+                       seed: int, pipeline_depth: int, **sched_kw):
+    """One reduced-backbone scheduler for the smoke/chaos drivers."""
     import jax
 
     from ..configs.registry import get_config
@@ -321,19 +367,147 @@ def smoke(arch: str = "dit-cifar", slots: int = 2, nfe: int = 4,
     program = engine.build_step(spec)
     sched = SlotScheduler(program, slots,
                           (cfg.patch_tokens, cfg.latent_dim),
-                          pipeline_depth=pipeline_depth)
+                          pipeline_depth=pipeline_depth, **sched_kw)
+    return sched, program
+
+
+def smoke(arch: str = "dit-cifar", slots: int = 2, nfe: int = 4,
+          n_requests: int = 5, rate: float = 0.5, cfg_scale: float = 2.0,
+          seed: int = 0, pipeline_depth: int = 1) -> ServeMetrics:
+    """Serve a short Poisson trace end to end and check the scheduler
+    invariants: every request completes with a validated-finite latent
+    (the on-device done-mask check, surfaced as `Completion.ok`), one
+    batched eval per tick, per-request eval bookkeeping adds up, the
+    completion clock is monotonic (dispatch-stamped even when readbacks
+    trail the pipeline), and completions + rejections partition the
+    submissions."""
+    sched, program = _build_smoke_sched(arch, slots, nfe, cfg_scale, seed,
+                                        pipeline_depth)
     reqs = poisson_requests(n_requests, rate, seed=seed,
                             cfg_scales=[1.5, cfg_scale, 4.0])
     m = run_trace(sched, reqs)
-    assert m.completed == n_requests, (m.completed, n_requests)
-    assert m.evals == m.ticks, (m.evals, m.ticks)
-    assert sched.in_flight == 0, sched.in_flight
-    assert all(c.evals == program.n_rows for c in sched.completions)
-    assert all(np.isfinite(c.latent).all() for c in sched.completions)
+    _require(m.completed == n_requests,
+             f"{m.completed} of {n_requests} requests completed")
+    _require(m.evals == m.ticks, f"{m.evals} evals != {m.ticks} ticks")
+    _require(sched.in_flight == 0,
+             f"{sched.in_flight} readbacks left in flight")
+    _require(all(c.evals == program.n_rows for c in sched.completions),
+             "per-request eval bookkeeping does not add up")
+    # the always-on output validation path: ok mirrors the on-device
+    # finite check folded into the step program's done mask
+    _require(all(c.ok for c in sched.completions),
+             "a completion failed the on-device finite check")
+    _require(m.requests == m.completed + m.rejected,
+             f"submissions not partitioned: {m.requests} != "
+             f"{m.completed} + {m.rejected}")
     clocks = [c.finish_clock for c in sched.completions]
-    assert clocks == sorted(clocks), clocks
-    assert all(c.finish_clock > c.arrival for c in sched.completions)
+    _require(clocks == sorted(clocks),
+             f"completion clock not monotonic: {clocks}")
+    _require(all(c.finish_clock > c.arrival for c in sched.completions),
+             "a completion finished before it arrived")
     return m
+
+
+def chaos(arch: str = "dit-cifar", slots: int = 2, nfe: int = 4,
+          n_requests: int = 8, rate: float = 1.0, cfg_scale: float = 2.0,
+          seed: int = 0, depths: Sequence[int] = (1, 2, 3)) -> None:
+    """The chaos smoke (DESIGN.md §16): serve the same seeded Poisson trace
+    clean and fault-injected, at pipeline depths 1/2/3, and check the
+    resilience acceptance properties end to end:
+
+    * NaN fault + forced desync (scenario A): the scheduler never raises,
+      every request still completes ok, and every latent — including the
+      retried and requeued ones, whose seeds are preserved — is
+      bit-identical to the clean run's.
+    * Queue-bound shed under ~2x overload (scenario B): submissions are
+      partitioned into completions + typed rejections, FIFO order is
+      preserved among the accepted, the shed set is identical across
+      depths, and every accepted latent is bit-identical to the clean run.
+    * Determinism: a repeated run of the same seeded FaultPlan produces an
+      identical event ledger and identical completion bookkeeping.
+    """
+    def requests():
+        return poisson_requests(n_requests, rate, seed=seed,
+                                cfg_scales=[1.5, cfg_scale, 4.0])
+
+    def run(depth, resilience=None, faults=None):
+        sched, _ = _build_smoke_sched(arch, slots, nfe, cfg_scale, seed,
+                                      depth, resilience=resilience,
+                                      faults=faults)
+        m = run_trace(sched, requests())
+        return sched, m
+
+    # the clean reference: fault-free, resilience at inert defaults
+    sched0, m0 = run(1)
+    _require(m0.completed == n_requests and all(c.ok for c in
+                                                sched0.completions),
+             "clean reference run did not complete cleanly")
+    clean = {c.rid: np.asarray(c.latent) for c in sched0.completions}
+
+    # scenario A: poisoned eval + corrupted device counter, every depth
+    plan = FaultPlan(nans=(NanFault(rid=2, step=1),),
+                     metas=(MetaFault(tick=2 * nfe),))
+    armed = ResilienceConfig(max_retries=2)
+    ledgers = {}
+    for depth in depths:
+        sched, m = run(depth, resilience=armed, faults=plan)
+        _require(m.completed == n_requests,
+                 f"[chaos A depth {depth}] {m.completed}/{n_requests} "
+                 f"completed under faults")
+        _require(all(c.ok for c in sched.completions),
+                 f"[chaos A depth {depth}] a failed completion leaked")
+        _require(m.faults_injected >= 2 and m.recoveries >= 1,
+                 f"[chaos A depth {depth}] faults did not fire "
+                 f"(injected={m.faults_injected}, "
+                 f"recoveries={m.recoveries})")
+        _require(m.requests == m.completed + m.rejected,
+                 f"[chaos A depth {depth}] partition broken")
+        for c in sched.completions:
+            np.testing.assert_array_equal(
+                np.asarray(c.latent), clean[c.rid],
+                err_msg=f"[chaos A depth {depth}] rid {c.rid} latent "
+                        f"differs from the clean run")
+        ledgers[depth] = list(sched.events)
+    # determinism: same plan, same trace -> identical ledger + bookkeeping
+    sched_r, _ = run(depths[0], resilience=armed, faults=plan)
+    _require(sched_r.events == ledgers[depths[0]],
+             "[chaos A] seeded fault ledger not deterministic across runs")
+
+    # scenario B: bounded queue under ~2x overload, every depth
+    bound = ResilienceConfig(max_queue=2)
+
+    def over_requests():
+        return poisson_requests(2 * n_requests, 2 * rate, seed=seed + 1,
+                                cfg_scales=[1.5, cfg_scale, 4.0])
+
+    sched_c, _ = _build_smoke_sched(arch, slots, nfe, cfg_scale, seed, 1)
+    run_trace(sched_c, over_requests())
+    clean_b = {c.rid: np.asarray(c.latent) for c in sched_c.completions}
+    shed_sets = []
+    for depth in depths:
+        sched, _ = _build_smoke_sched(arch, slots, nfe, cfg_scale, seed,
+                                      depth, resilience=bound)
+        m = run_trace(sched, over_requests())
+        _require(m.rejected > 0,
+                 f"[chaos B depth {depth}] 2x overload shed nothing")
+        _require(m.requests == m.completed + m.rejected,
+                 f"[chaos B depth {depth}] partition broken: "
+                 f"{m.requests} != {m.completed} + {m.rejected}")
+        admits = [c.admit_tick for c in sched.completions]
+        _require(admits == sorted(admits),
+                 f"[chaos B depth {depth}] FIFO admission order broken")
+        for c in sched.completions:
+            np.testing.assert_array_equal(
+                np.asarray(c.latent), clean_b[c.rid],
+                err_msg=f"[chaos B depth {depth}] rid {c.rid} latent "
+                        f"differs from the unbounded run")
+        shed_sets.append(frozenset(r.rid for r in sched.rejections))
+    _require(len(set(shed_sets)) == 1,
+             f"[chaos B] shed set differs across depths: {shed_sets}")
+    print(f"chaos ok: {len(depths)} depths, "
+          f"A: {n_requests} requests bit-identical under NaN+desync, "
+          f"B: {len(shed_sets[0])} shed of {2 * n_requests} under "
+          f"2x overload, ledgers deterministic")
 
 
 def main() -> None:
@@ -341,6 +515,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="run the CI scheduler smoke and exit nonzero on "
                          "any invariant violation")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the CI chaos smoke (DESIGN.md §16): the same "
+                         "trace clean and fault-injected at pipeline depths "
+                         "1/2/3, checking recovery, shed determinism, and "
+                         "bit-identical untouched latents")
     ap.add_argument("--arch", default="dit-cifar")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--nfe", type=int, default=4)
@@ -354,9 +533,15 @@ def main() -> None:
                          ">= 2 overlaps host bookkeeping with device "
                          "execution (DESIGN.md §13)")
     args = ap.parse_args()
-    if not args.smoke:
-        ap.error("this entry point runs the CI scheduler smoke; pass "
-                 "--smoke (real serving lives in repro.launch.serve)")
+    if not (args.smoke or args.chaos):
+        ap.error("this entry point runs the CI scheduler smokes; pass "
+                 "--smoke or --chaos (real serving lives in "
+                 "repro.launch.serve)")
+    if args.chaos:
+        chaos(args.arch, slots=args.slots, nfe=args.nfe,
+              n_requests=args.requests, rate=args.arrival_rate,
+              cfg_scale=args.cfg_scale, seed=args.seed)
+        return
     m = smoke(args.arch, slots=args.slots, nfe=args.nfe,
               n_requests=args.requests, rate=args.arrival_rate,
               cfg_scale=args.cfg_scale, seed=args.seed,

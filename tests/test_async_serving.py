@@ -35,7 +35,8 @@ def _metric_key(m):
 
 def _completion_key(c):
     return (c.rid, c.arrival, c.admit_tick, c.finish_tick, c.finish_clock,
-            c.evals, c.tier, c.eval_cost)
+            c.evals, c.tier, c.eval_cost,
+            c.ok, c.retries, c.requeues, c.first_tier, c.fail_reason)
 
 
 def _run_at_depth(make_sched, reqs, depth):
@@ -182,8 +183,12 @@ def test_simultaneous_completions_ride_one_flight(gaussian_dpm):
 
 def test_done_mask_desync_raises(gaussian_dpm):
     """The device done mask is cross-checked against the host prediction at
-    consumption: a step override whose mask disagrees must raise, naming the
-    desync — never silently emit wrong latents."""
+    consumption: under recovery='raise' (the pre-resilience escape hatch,
+    DESIGN.md §16) a step override whose mask disagrees must raise
+    immediately, naming the desync — never silently emit wrong latents.
+    The default recovery='recover' path is covered in test_resilience.py."""
+    from repro.serving import ResilienceConfig
+
     eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
     program = eng.build_step(EngineSpec(solver="unipc", order=2, nfe=4))
 
@@ -191,7 +196,8 @@ def test_done_mask_desync_raises(gaussian_dpm):
         state, meta, done = program.step_flight(state, meta, g, extras)
         return state, meta, jnp.zeros_like(done)  # device says: nobody done
 
-    sched = SlotScheduler(program, 2, (8,), step_override=lying_step)
+    sched = SlotScheduler(program, 2, (8,), step_override=lying_step,
+                          resilience=ResilienceConfig(recovery="raise"))
     sched.submit(Request(rid=0, x_T=_x_T(0)))
     with pytest.raises(RuntimeError, match="done mask"):
         sched.drain()

@@ -166,6 +166,61 @@ def test_guard_fails_when_tracing_overhead_blows_the_cap(bench_root):
     assert "tracing overhead" in r.stderr
 
 
+def test_guard_fails_when_fault_runs_are_dropped(bench_root):
+    """The resilience pricing (DESIGN.md §16) is load-bearing: stripping
+    fault_runs from BENCH_serve.json must fail the guard by name."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    data.pop("fault_runs")
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "fault_runs" in r.stderr and "BENCH_serve.json" in r.stderr
+
+
+def test_guard_fails_when_fault_free_overhead_blows_the_cap(bench_root):
+    """The armed-but-idle resilience layer creeping onto the hot path (a
+    policy check that allocates, a counter registered eagerly) must trip
+    the fault-free overhead cap."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    for run in data["fault_runs"]:
+        if run.get("resilience") == "armed":
+            run["fault_free_overhead_frac"] = 0.5
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "armed-but-idle" in r.stderr
+
+
+def test_guard_fails_when_faulted_run_drops_requests(bench_root):
+    """Recovery that stops recovering — the faulted run completing fewer
+    requests than were submitted — must fail the guard."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    for run in data["fault_runs"]:
+        if run.get("resilience") == "faulted":
+            run["completed"] = run["requests"] - 1
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "complete every request" in r.stderr
+
+
+def test_guard_fails_when_faults_stop_firing(bench_root):
+    """A faulted row with no recovery/retry on the ledger means the
+    injected faults silently stopped exercising the resilience paths."""
+    path = bench_root / "BENCH_serve.json"
+    data = json.loads(path.read_text())
+    for run in data["fault_runs"]:
+        if run.get("resilience") == "faulted":
+            run["recoveries"] = 0
+    path.write_text(json.dumps(data))
+    r = _guard(bench_root)
+    assert r.returncode != 0
+    assert "injected faults" in r.stderr
+
+
 def test_guard_fails_when_cached_runs_are_dropped(bench_root):
     """The feature-reuse acceptance trajectory (DESIGN.md §12) is load-
     bearing: stripping cached_runs from an otherwise valid BENCH_tuning.json

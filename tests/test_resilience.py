@@ -1,0 +1,345 @@
+"""Resilient serving (DESIGN.md §16): overload control, TTL expiry,
+degraded-tier retry on non-finite output, and host/device desync recovery,
+all driven by the deterministic fault-injection harness.
+
+The chaos acceptance property: a seeded `FaultPlan` produces the same event
+ledger every run, and every request a fault never touched finishes
+bit-identical (assert_array_equal) to the clean run — at pipeline depths
+1, 2 and 3. Re-admitted requests carry their seed, so even the POISONED
+request reproduces the clean latent once its retry lands.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import EngineSpec, SamplerEngine
+from repro.serving import (FaultPlan, MetaFault, NanFault, Rejection,
+                           Request, ResilienceConfig, SkewFault,
+                           SlotScheduler, fallback_tier, parse_fault_spec,
+                           poisson_requests, run_trace, validate_resilience)
+from repro.serving.resilience import (FAIL_NONFINITE, REJECT_EXPIRED,
+                                      REJECT_QUEUE_FULL)
+
+from test_serving import _eps_jx, _tier_specs, _x_T
+
+DEPTHS = (1, 2, 3)
+
+
+def _program(gaussian_dpm, nfe=7, order=3):
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    return eng.build_step(EngineSpec(solver="unipc", order=order, nfe=nfe))
+
+
+def _reqs(n=9, rate=0.5, seed=5, **kw):
+    return [Request(rid=r.rid, arrival=r.arrival, x_T=_x_T(r.rid), **kw)
+            for r in poisson_requests(n, rate=rate, seed=seed)]
+
+
+def _clean_latents(program, slots=3):
+    sched = SlotScheduler(program, slots, (8,))
+    run_trace(sched, _reqs())
+    return {c.rid: c.latent for c in sched.completions}
+
+
+# ---------------------------------------------------------------------------
+# overload control: bounded queue, typed rejections, TTL expiry
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_rejects_fifo(gaussian_dpm):
+    """Past max_queue, submit() returns a typed Rejection and the LATER
+    submissions are the ones shed — admission order stays FIFO."""
+    program = _program(gaussian_dpm, nfe=4, order=2)
+    sched = SlotScheduler(program, 1, (8,),
+                          resilience=ResilienceConfig(max_queue=2))
+    outcomes = [sched.submit(Request(rid=r, x_T=_x_T(r))) for r in range(6)]
+    assert outcomes[:2] == [None, None]  # fit the bound
+    assert all(isinstance(o, Rejection) for o in outcomes[2:])
+    assert [o.rid for o in outcomes[2:]] == [2, 3, 4, 5]  # shed in order
+    assert all(o.reason == REJECT_QUEUE_FULL for o in outcomes[2:])
+    done = sched.drain()
+    assert [c.rid for c in done] == [0, 1]  # FIFO survivors
+    # completions + rejections partition every submission
+    assert len(done) + len(sched.rejections) == 6
+
+
+def test_partition_invariant_in_metrics(gaussian_dpm):
+    """run_trace's derived metrics hold submitted == completed + rejected
+    under shed + expiry — no request is silently dropped or double-counted."""
+    program = _program(gaussian_dpm, nfe=4, order=2)
+    sched = SlotScheduler(program, 2, (8,),
+                          resilience=ResilienceConfig(max_queue=2,
+                                                      default_ttl=3.0))
+    m = run_trace(sched, _reqs(n=14, rate=2.0, seed=7))
+    assert m.rejected > 0
+    assert m.requests == 14
+    assert m.requests == m.completed + m.rejected
+    assert m.expired <= m.rejected
+    assert len(sched.completions) + len(sched.rejections) == 14
+
+
+def test_ttl_bounds_queue_wait_not_service(gaussian_dpm):
+    """TTL is an ADMISSION deadline: a request still queued past it expires,
+    but a request admitted in time runs to completion even when service ends
+    long after the deadline."""
+    program = _program(gaussian_dpm, nfe=7)  # service >> ttl
+    sched = SlotScheduler(program, 1, (8,),
+                          resilience=ResilienceConfig(default_ttl=3.0))
+    run_trace(sched, [Request(rid=0, arrival=0.0, x_T=_x_T(0)),
+                      Request(rid=1, arrival=0.0, x_T=_x_T(1))])
+    done = {c.rid: c for c in sched.completions}
+    # rid 0 admitted tick 1, finished ~n_rows ticks later — way past its
+    # deadline, served anyway
+    assert list(done) == [0]
+    assert done[0].finish_clock - done[0].arrival > 3.0
+    [rej] = sched.rejections
+    assert (rej.rid, rej.reason) == (1, REJECT_EXPIRED)
+
+
+def test_request_ttl_overrides_default(gaussian_dpm):
+    """Request.ttl beats ResilienceConfig.default_ttl per request."""
+    program = _program(gaussian_dpm, nfe=7)
+    sched = SlotScheduler(program, 1, (8,),
+                          resilience=ResilienceConfig(default_ttl=3.0))
+    run_trace(sched, [Request(rid=0, arrival=0.0, x_T=_x_T(0)),
+                      Request(rid=1, arrival=0.0, x_T=_x_T(1), ttl=100.0)])
+    assert sorted(c.rid for c in sched.completions) == [0, 1]
+    assert not sched.rejections
+
+
+def test_degrade_shed_remaps_tier(gaussian_dpm):
+    """shed_policy='degrade' remaps submissions past the watermark to the
+    cheap tier instead of rejecting; provenance keeps the asked-for tier."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_bank(_tier_specs())
+    cfg = ResilienceConfig(max_queue=4, shed_policy="degrade",
+                           degrade_watermark=1, degrade_tier="fast")
+    sched = SlotScheduler(program, 1, (8,), resilience=cfg)
+    for r in range(4):
+        assert sched.submit(Request(rid=r, x_T=_x_T(r),
+                                    tier="quality")) is None
+    done = {c.rid: c for c in sched.drain()}
+    assert done[0].tier == "quality" and done[0].first_tier is None
+    for r in (1, 2, 3):  # past the watermark: served, but on the cheap tier
+        assert done[r].tier == "fast"
+        assert done[r].first_tier == "quality"
+    assert done[1].evals < done[0].evals
+
+
+# ---------------------------------------------------------------------------
+# output validation: NaN detection, degraded-tier retry, exhaustion
+# ---------------------------------------------------------------------------
+
+
+def test_nan_fault_retries_and_reproduces_clean_latents(gaussian_dpm):
+    """A poisoned latent is flagged on device, the request re-admitted with
+    its seed, and EVERY latent — poisoned-then-retried included — lands
+    bit-identical to the clean run, at every pipeline depth."""
+    program = _program(gaussian_dpm)
+    clean = _clean_latents(program)
+    plan = FaultPlan(nans=(NanFault(rid=2, step=3),))
+    ledgers = []
+    for depth in DEPTHS:
+        sched = SlotScheduler(program, 3, (8,), pipeline_depth=depth,
+                              resilience=ResilienceConfig(max_retries=2),
+                              faults=plan)
+        m = run_trace(sched, _reqs())
+        assert m.completed == 9 and m.failed == 0
+        assert m.retries == 1 and m.faults_injected == 1
+        got = {c.rid: c for c in sched.completions}
+        assert all(c.ok for c in got.values())
+        assert got[2].retries == 1 and got[2].fail_reason is None
+        for rid, lat in clean.items():
+            np.testing.assert_array_equal(got[rid].latent, lat)
+        ledgers.append(list(sched.events))
+    # the seeded chaos is deterministic: one ledger, all depths
+    assert ledgers[0] == ledgers[1] == ledgers[2]
+
+
+def test_retry_exhaustion_emits_failed_completion(gaussian_dpm):
+    """A sticky fault that survives every retry ends in a Completion with
+    ok=False + fail_reason — never a shipped NaN, never a hang."""
+    program = _program(gaussian_dpm, nfe=4, order=2)
+    plan = FaultPlan(nans=(NanFault(rid=0, step=1, sticky=True),))
+    sched = SlotScheduler(program, 2, (8,),
+                          resilience=ResilienceConfig(max_retries=1),
+                          faults=plan)
+    m = run_trace(sched, _reqs(n=4, rate=1.0, seed=3))
+    got = {c.rid: c for c in sched.completions}
+    assert m.failed == 1 and m.requests == m.completed + m.rejected
+    bad = got[0]
+    assert not bad.ok and bad.fail_reason == FAIL_NONFINITE
+    assert bad.retries == 1  # the budget was spent before giving up
+    assert not np.isfinite(bad.latent).all()
+    assert all(c.ok and np.isfinite(c.latent).all()
+               for rid, c in got.items() if rid != 0)
+
+
+def test_retry_walks_fallback_chain(gaussian_dpm):
+    """Retries walk the configured safer-tier chain (and park at its tail),
+    recording the original tier as provenance."""
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    program = eng.build_bank(_tier_specs())
+    plan = FaultPlan(nans=(NanFault(rid=0, step=1, sticky=True),))
+    cfg = ResilienceConfig(max_retries=3, fallback=("balanced", "fast"))
+    sched = SlotScheduler(program, 2, (8,), resilience=cfg, faults=plan)
+    sched.submit(Request(rid=0, x_T=_x_T(0), tier="quality"))
+    [c] = sched.drain()
+    # quality (not on chain) -> balanced -> fast -> fast (parked)
+    assert not c.ok and c.retries == 3
+    assert c.tier == "fast" and c.first_tier == "quality"
+    retry_hops = [(ev[3], ev[4]) for ev in sched.events if ev[0] == "retry"]
+    assert retry_hops == [("quality", "balanced"), ("balanced", "fast"),
+                          ("fast", "fast")]
+
+
+# ---------------------------------------------------------------------------
+# desync recovery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_desync_recovery_completes_all_requests(gaussian_dpm, depth):
+    """A corrupted device row counter is detected at the next checked
+    flight; recovery drains the pipeline, resyncs the host mirrors from
+    device meta, requeues the affected requests and keeps serving — every
+    request completes, bit-identical to the clean run, and nothing raises
+    out of tick()."""
+    program = _program(gaussian_dpm)
+    clean = _clean_latents(program)
+    plan = FaultPlan(metas=(MetaFault(tick=5),))
+    sched = SlotScheduler(program, 3, (8,), pipeline_depth=depth,
+                          resilience=ResilienceConfig(), faults=plan)
+    m = run_trace(sched, _reqs())
+    assert m.completed == 9 and m.recoveries >= 1
+    got = {c.rid: c for c in sched.completions}
+    assert all(c.ok for c in got.values())
+    assert any(c.requeues > 0 for c in got.values())
+    for rid, lat in clean.items():
+        np.testing.assert_array_equal(got[rid].latent, lat)
+
+
+def test_desync_recovery_ledger_deterministic(gaussian_dpm):
+    """Two runs of the same meta-corruption plan produce the same event
+    ledger — chaos that can't be reproduced proves nothing."""
+    program = _program(gaussian_dpm)
+    plan = FaultPlan(metas=(MetaFault(tick=5),))
+
+    def run():
+        sched = SlotScheduler(program, 3, (8,), pipeline_depth=2,
+                              faults=plan)
+        run_trace(sched, _reqs())
+        return list(sched.events)
+
+    assert run() == run()
+
+
+def test_recovery_limit_exhausted_raises(gaussian_dpm):
+    """A persistently lying step program must not recover forever: past
+    max_recoveries the scheduler raises instead of looping."""
+    program = _program(gaussian_dpm, nfe=3, order=1)
+
+    def lying_step(state, meta, g=None, extras=None):
+        state, meta, done = program.step_flight(state, meta, g, extras)
+        return state, meta, jnp.zeros_like(done)  # device: nobody ever done
+
+    sched = SlotScheduler(program, 2, (8,), step_override=lying_step,
+                          resilience=ResilienceConfig(max_recoveries=2))
+    sched.submit(Request(rid=0, x_T=_x_T(0)))
+    with pytest.raises(RuntimeError, match="recovery limit"):
+        sched.drain()
+
+
+# ---------------------------------------------------------------------------
+# harness plumbing: config validation, fallback walk, spec parsing, skew
+# ---------------------------------------------------------------------------
+
+
+def test_validate_resilience_rejects_contradictions(gaussian_dpm):
+    single = _program(gaussian_dpm, nfe=3, order=1)
+    eng = SamplerEngine(gaussian_dpm.schedule, eps=_eps_jx(gaussian_dpm))
+    bank = eng.build_bank(_tier_specs())
+    with pytest.raises(ValueError, match="shed_policy"):
+        validate_resilience(ResilienceConfig(shed_policy="drop"), single)
+    with pytest.raises(ValueError, match="recovery"):
+        validate_resilience(ResilienceConfig(recovery="ignore"), single)
+    with pytest.raises(ValueError, match="max_queue"):
+        validate_resilience(ResilienceConfig(max_queue=0), single)
+    with pytest.raises(ValueError, match="degrade_tier"):
+        validate_resilience(ResilienceConfig(shed_policy="degrade"), bank)
+    with pytest.raises(ValueError, match="degrade_watermark"):
+        validate_resilience(
+            ResilienceConfig(max_queue=2, shed_policy="degrade",
+                             degrade_tier="fast", degrade_watermark=5), bank)
+    with pytest.raises(ValueError):
+        # fallback tiers must resolve against the program's bank
+        validate_resilience(ResilienceConfig(fallback=("fast",)), single)
+    # degrade watermark defaults to the queue bound
+    cfg = validate_resilience(
+        ResilienceConfig(max_queue=3, shed_policy="degrade",
+                         degrade_tier="fast"), bank)
+    assert cfg.degrade_watermark == 3
+
+
+def test_fallback_tier_walk():
+    cfg = ResilienceConfig(fallback=("balanced", "fast"))
+    assert fallback_tier(cfg, "quality") == "balanced"  # enter at the head
+    assert fallback_tier(cfg, "balanced") == "fast"     # walk
+    assert fallback_tier(cfg, "fast") == "fast"         # park at the tail
+    assert fallback_tier(ResilienceConfig(), "quality") == "quality"
+    assert fallback_tier(ResilienceConfig(), None) is None
+
+
+def test_parse_fault_spec_roundtrip():
+    plan = parse_fault_spec("nan:rid=2,step=1;meta:tick=6;skew:tick=3,delta=9")
+    assert plan.nans == (NanFault(rid=2, step=1),)
+    assert plan.metas == (MetaFault(tick=6),)
+    assert plan.skews == (SkewFault(tick=3, delta=9.0),)
+    assert parse_fault_spec(plan.describe()) == plan
+    assert not parse_fault_spec("")
+    assert not parse_fault_spec("none")
+    seeded = parse_fault_spec("seed:7,requests=8,nfe=4,n_meta=1")
+    assert seeded == FaultPlan.seeded(7, n_requests=8, nfe=4, n_meta=1)
+    assert len(seeded.nans) == 1 and len(seeded.metas) == 1
+    with pytest.raises(ValueError, match="bad fault clause"):
+        parse_fault_spec("nan:step=1")  # rid is required
+    with pytest.raises(ValueError, match="bad fault clause"):
+        parse_fault_spec("flood:tick=3")
+
+
+def test_skew_fault_forces_expiry(gaussian_dpm):
+    """A clock-skew fault makes queued requests blow their TTL without a
+    real slow consumer — the expiry path under test control."""
+    program = _program(gaussian_dpm, nfe=4, order=2)
+    plan = FaultPlan(skews=(SkewFault(tick=4, delta=100.0),))
+    sched = SlotScheduler(program, 1, (8,),
+                          resilience=ResilienceConfig(default_ttl=50.0),
+                          faults=plan)
+    m = run_trace(sched, _reqs(n=6, rate=1.0, seed=2))
+    assert m.faults_injected == 1
+    assert m.expired > 0
+    assert m.requests == m.completed + m.rejected
+    assert any(ev[0] == "fault_skew" for ev in sched.events)
+
+
+def test_fault_free_resilient_sched_matches_plain(gaussian_dpm):
+    """The whole layer at defaults is inert: same trace, same latents, same
+    completion bookkeeping as a scheduler built with no resilience config —
+    the bit-identity contract that makes the layer safe to always-on."""
+    program = _program(gaussian_dpm)
+    plain = SlotScheduler(program, 3, (8,))
+    armed = SlotScheduler(program, 3, (8,),
+                          resilience=ResilienceConfig(max_queue=64,
+                                                      max_retries=2))
+    m0, m1 = run_trace(plain, _reqs()), run_trace(armed, _reqs())
+    det = lambda m: (m.requests, m.completed, m.ticks, m.evals,
+                     m.makespan_ticks, m.latency_ticks_p50, m.occupancy,
+                     m.rejected, m.expired, m.degraded, m.retries,
+                     m.failed, m.recoveries, m.faults_injected)
+    assert det(m0) == det(m1)
+    assert not armed.events and not armed.rejections
+    for a, b in zip(plain.completions, armed.completions):
+        assert (a.rid, a.finish_tick, a.ok, a.retries) == \
+            (b.rid, b.finish_tick, b.ok, b.retries)
+        np.testing.assert_array_equal(a.latent, b.latent)
